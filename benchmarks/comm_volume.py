@@ -1,0 +1,63 @@
+"""Paper Fig 3 / Fig 7: total + per-layer-kind communication volume for
+BERT_BASE/LARGE and GPT-2_BASE/LARGE under each PPTI mode.
+
+Full-size models are traced with jax.eval_shape — the ledger only needs
+static shapes, so no 100M-parameter arrays are ever materialized."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import comm
+from repro.core.private_model import build_private_model, private_forward
+from repro.models.registry import get_api
+
+from .common import emit
+
+SEQ = 128
+MODES = ("centaur", "smpc", "mpcformer", "secformer")
+MODELS = ("bert-base", "bert-large", "gpt2-base", "gpt2-large")
+
+
+def trace_comm(cfg, mode: str, seq: int = SEQ):
+    api = get_api(cfg)
+
+    def f():
+        params = api.init_params(cfg, jax.random.key(0))
+        pm = build_private_model(cfg, params, jax.random.key(1), mode)
+        tokens = jnp.zeros((1, seq), jnp.int32)
+        private_forward(pm, tokens)
+
+    with comm.ledger() as led:
+        jax.eval_shape(f)
+    return led
+
+
+def run(models=MODELS, modes=MODES, seq=SEQ):
+    results = {}
+    for name in models:
+        cfg = get_config(name)
+        per_mode = {}
+        for mode in modes:
+            led = trace_comm(cfg, mode, seq)
+            per_mode[mode] = {
+                "total_GB": led.total_bytes() / 1e9,
+                "rounds": led.total_rounds(),
+                "by_tag": {t: v["bits"] / 8e9
+                           for t, v in led.by_tag().items()},
+            }
+            emit(f"fig7/{name}/{mode}", 0.0,
+                 f"GB={per_mode[mode]['total_GB']:.3f};"
+                 f"rounds={per_mode[mode]['rounds']}")
+        base = per_mode[modes[0]]["total_GB"]
+        for mode in modes[1:]:
+            ratio = per_mode[mode]["total_GB"] / max(base, 1e-12)
+            emit(f"fig7/{name}/reduction_vs_{mode}", 0.0,
+                 f"centaur_x{ratio:.1f}_less")
+        results[name] = per_mode
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# network settings from the paper §7.1
+NETWORKS = {
+    "LAN(3Gbps,0.8ms)": (3e9, 0.8e-3),
+    "WAN(200Mbps,40ms)": (200e6, 40e-3),
+    "WAN(100Mbps,80ms)": (100e6, 80e-3),
+}

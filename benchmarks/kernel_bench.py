@@ -1,0 +1,80 @@
+"""Kernel microbenchmarks.
+
+CPU wall times are for the *interpret-mode* kernels (Python execution of
+the kernel body) so they are correctness artifacts, not perf numbers;
+the `derived` column carries the TPU-roofline expectation per call
+(bytes/HBM_bw or flops/peak) which is the number that matters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, time_call
+
+HBM_BW = 819e9
+PEAK = 197e12
+KEY = jax.random.key(5)
+
+
+def run():
+    # ring matmul: arithmetic intensity of the 10-dot narrow variant
+    m = k = n = 256
+    a = jax.lax.bitcast_convert_type(
+        jax.random.bits(KEY, (m, k), dtype=jnp.uint32), jnp.int32)
+    b = jax.lax.bitcast_convert_type(
+        jax.random.bits(KEY, (k, n), dtype=jnp.uint32), jnp.int32)
+    us = time_call(lambda: ops.ring_matmul32(a, b, interpret=True),
+                   iters=2)
+    int8_flops = 10 * 2 * m * n * k      # 10 int8 dots
+    emit("kernel/ring_matmul32", us,
+         f"int8_dot_flops={int8_flops:.2e};"
+         f"tpu_est_us={int8_flops / PEAK * 1e6:.2f}")
+    us = time_call(lambda: ops.ring64_matmul(
+        a.astype(jnp.int64), b.astype(jnp.int64), interpret=True), iters=2)
+    emit("kernel/ring64_matmul", us,
+         f"int8_dot_flops={3.6 * 2 * m * n * k:.2e};"
+         f"overhead_vs_bf16=36x_dots")
+
+    # softmax / norm: bandwidth bound
+    x = jax.random.normal(KEY, (512, 2048))
+    us = time_call(lambda: ops.softmax(x, interpret=True), iters=2)
+    bytes_ = 2 * x.size * 4
+    emit("kernel/softmax", us,
+         f"bytes={bytes_:.2e};tpu_est_us={bytes_ / HBM_BW * 1e6:.2f}")
+    g = jnp.ones((2048,))
+    us = time_call(lambda: ops.rmsnorm(x, g, interpret=True), iters=2)
+    emit("kernel/rmsnorm", us,
+         f"bytes={bytes_:.2e};tpu_est_us={bytes_ / HBM_BW * 1e6:.2f}")
+
+    # flash attention: S^2 flops, O(S) memory
+    Bh, S, D = 4, 512, 64
+    q = jax.random.normal(KEY, (1, Bh, S, D), jnp.float32)
+    us = time_call(lambda: ops.flash_attention(q, q, q, interpret=True),
+                   iters=1)
+    fl = 2 * 2 * Bh * S * S * D
+    naive_bytes = Bh * S * S * 4 * 2 + 3 * Bh * S * D * 4
+    flash_bytes = 4 * Bh * S * D * 4
+    emit("kernel/flash_attention", us,
+         f"flops={fl:.2e};hbm_bytes_naive={naive_bytes:.2e};"
+         f"hbm_bytes_flash={flash_bytes:.2e};"
+         f"traffic_reduction={naive_bytes / flash_bytes:.0f}x")
+
+    # ssd scan
+    Bt, L, H, P, N = 1, 512, 8, 32, 32
+    ks = jax.random.split(KEY, 5)
+    xs = jax.random.normal(ks[0], (Bt, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, L, 1, N))
+    C = jax.random.normal(ks[4], (Bt, L, 1, N))
+    us = time_call(lambda: ops.ssd_scan(xs, dt, A, B, C, chunk=64,
+                                        interpret=True), iters=1)
+    chunk = 64
+    fl = 2 * Bt * L * chunk * H * (N + P)  # intra-chunk quadratic part
+    emit("kernel/ssd_scan", us, f"flops~={fl:.2e};chunk={chunk}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,168 @@
+"""Paper Table 2 / Fig 4 proxies: can the cloud P1 recover inference
+data from what it observes?
+
+Attacks runnable without GPU training (stand-ins for SIP/EIA/BRE):
+
+  1. Nearest-neighbour inversion: P1 matches positions of an observed
+     intermediate against the (attacker-known) embedding table + learned
+     positions by cosine similarity — the optimization-free core of an
+     embedding inversion attack.  Reported as token recovery rate
+     (ROUGE-1 analog of paper Table 2).
+  2. Moment-matching re-alignment: a *stronger* adversary first tries to
+     undo the feature permutation by matching per-feature moments of the
+     observed data against the public embedding statistics, then runs
+     the NN attack.
+  3. Distance correlation (paper Eq. 12 quantity).  NOTE: dcor is
+     invariant to feature permutations (distances are preserved), so it
+     does NOT separate W from W/O — exactly the paper's point that a
+     permutation leaks no *more* than the un-permuted projection; the
+     empirical separation comes from alignment-based attacks (1, 2),
+     which the permutation defeats.
+
+Conditions per paper Table 2: W/O = plaintext intermediates (what no
+protection / Yuan et al. exposes), W = Centaur's permuted state,
+Rand = random matrix baseline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import BERT_TINY, GPT2_TINY
+from repro.core.private_model import build_private_model, private_forward
+from repro.models import layers as L
+from repro.models.registry import get_api
+
+from .common import emit
+
+KEY = jax.random.key(11)
+
+
+def distance_correlation(x, y) -> float:
+    """Szekely et al. (2007) distance correlation of row samples."""
+    x = np.asarray(x, np.float64).reshape(x.shape[0], -1)
+    y = np.asarray(y, np.float64).reshape(y.shape[0], -1)
+
+    def centered(a):
+        d = np.sqrt(((a[:, None, :] - a[None, :, :]) ** 2).sum(-1))
+        return d - d.mean(0) - d.mean(1)[:, None] + d.mean()
+
+    ax, ay = centered(x), centered(y)
+    dcov2 = (ax * ay).mean()
+    dvx, dvy = (ax * ax).mean(), (ay * ay).mean()
+    if dvx <= 0 or dvy <= 0:
+        return 0.0
+    return float(np.sqrt(max(dcov2, 0.0) / np.sqrt(dvx * dvy)))
+
+
+def nn_inversion_rate(observed, ref_rows, tokens) -> float:
+    """Cosine NN recovery.  observed: (B, S, d); ref_rows: (B, S, V, d)
+    candidate embeddings per position (table + positional)."""
+    obs = np.asarray(observed, np.float64)
+    B, S, d = obs.shape
+    ref = np.asarray(ref_rows, np.float64)
+    obs_n = obs / (np.linalg.norm(obs, axis=-1, keepdims=True) + 1e-12)
+    ref_n = ref / (np.linalg.norm(ref, axis=-1, keepdims=True) + 1e-12)
+    sims = np.einsum("bsd,bsvd->bsv", obs_n, ref_n)
+    pred = sims.argmax(-1)
+    return float((pred == np.asarray(tokens)).mean())
+
+
+def realign_by_moments(observed, reference) -> np.ndarray:
+    """Adversarial de-permutation: sort observed features and reference
+    features by (mean, std) and map ranks — the best generic alignment
+    an attacker gets without labels."""
+    obs = np.asarray(observed, np.float64).reshape(-1, observed.shape[-1])
+    ref = np.asarray(reference, np.float64).reshape(-1, reference.shape[-1])
+    key_obs = np.lexsort((obs.std(0), obs.mean(0)))
+    key_ref = np.lexsort((ref.std(0), ref.mean(0)))
+    inv = np.empty_like(key_ref)
+    inv[key_ref] = np.arange(len(key_ref))
+    perm_guess = key_obs[inv]  # observed feature for each ref feature
+    out = np.asarray(observed, np.float64)[..., perm_guess]
+    return out
+
+
+def _reference_rows(cfg, params, batch, seq):
+    """Candidate plaintext embeddings per position: W_E[v] (+ pos[s])."""
+    table = np.asarray(params["embed"]["tok"], np.float32)  # (V, d)
+    V, d = table.shape
+    ref = np.broadcast_to(table[None, None], (batch, seq, V, d)).copy()
+    if cfg.pos_embed == "learned":
+        pos = np.asarray(params["embed"]["pos"], np.float32)[:seq]
+        ref = ref + pos[None, :, None, :]
+    return ref
+
+
+def run(cfgs=(BERT_TINY, GPT2_TINY), seq=24, batch=4):
+    results = {}
+    for cfg in cfgs:
+        api = get_api(cfg)
+        params = api.init_params(cfg, KEY)
+        tokens = jax.random.randint(KEY, (batch, seq), 0, cfg.vocab_size)
+        emb = L.embed(cfg, params["embed"], tokens,
+                      positions=jnp.arange(seq)[None].repeat(batch, 0)
+                      if cfg.pos_embed == "learned" else None)
+
+        pm_c = build_private_model(cfg, params, KEY, mode="centaur")
+        private_forward(pm_c, tokens)
+        ref = _reference_rows(cfg, params, batch, seq)
+        flat_in = np.asarray(emb, np.float32).reshape(batch * seq, -1)
+
+        conds = {
+            "W/O(plaintext)": np.asarray(emb, np.float32),
+            "W(centaur)": np.asarray(pm_c.exposed["XM"]),
+            "Rand": np.asarray(jax.random.normal(
+                KEY, emb.shape, jnp.float32)),
+        }
+        # auxiliary data for the oracle-table re-alignment attacker:
+        # different tokens through the same (plaintext) embedding —
+        # only available to an adversary holding the unpermuted Theta,
+        # which Centaur's threat model explicitly denies P1.
+        aux_tokens = jax.random.randint(jax.random.key(99),
+                                        (batch, seq), 0, cfg.vocab_size)
+        aux = L.embed(cfg, params["embed"], aux_tokens,
+                      positions=jnp.arange(seq)[None].repeat(batch, 0)
+                      if cfg.pos_embed == "learned" else None)
+
+        rows = {}
+        for name, obs in conds.items():
+            nn = nn_inversion_rate(obs, ref, tokens)
+            # estimated-moments attacker (aux data through plaintext
+            # embedding) and the infinite-data limit (victim's own
+            # moments) — both require the unpermuted table
+            re_est = nn_inversion_rate(
+                realign_by_moments(obs, np.asarray(aux, np.float32)),
+                ref, tokens)
+            re_lim = nn_inversion_rate(
+                realign_by_moments(obs, np.asarray(emb, np.float32)),
+                ref, tokens)
+            dc = distance_correlation(flat_in,
+                                      obs.reshape(batch * seq, -1))
+            rows[name] = {"nn": nn, "realign_nn": re_est,
+                          "realign_limit": re_lim, "dcor": dc}
+            emit(f"table2/{cfg.name}/{name}", 0.0,
+                 f"nn_recovery={nn:.3f};realign_est={re_est:.3f};"
+                 f"realign_limit={re_lim:.3f};dcor={dc:.3f}")
+        # the paper's separation, as assertions (attacker without the
+        # plaintext parameters, i.e. Centaur's actual threat model):
+        assert rows["W/O(plaintext)"]["nn"] > 0.9, rows
+        assert rows["W(centaur)"]["nn"] < 0.15, rows
+        # beyond-paper observation: an attacker WITH the unpermuted
+        # embedding table can partially undo pi by moment matching on
+        # un-normalized reveals — reported, not asserted (outside the
+        # threat model; see EXPERIMENTS.md §Privacy).
+        emit(f"table2/{cfg.name}/oracle_realign_note", 0.0,
+             f"est={rows['W(centaur)']['realign_nn']:.3f};"
+             f"limit={rows['W(centaur)']['realign_limit']:.3f};"
+             "requires_plaintext_params=true")
+        results[cfg.name] = rows
+
+        from repro.core.permute import log2_brute_force_space
+        emit(f"table2/{cfg.name}/bruteforce", 0.0,
+             f"log2_perm_space={log2_brute_force_space(cfg.d_model):.0f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

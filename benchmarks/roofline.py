@@ -1,0 +1,85 @@
+"""§Roofline: aggregate the dry-run JSONs into the per-(arch x shape x
+mesh) roofline table and nominate the three hillclimb cells."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_cells(directory=DRYRUN_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells, mesh="16x16"):
+    rows = []
+    for c in cells:
+        if c.get("mesh") != mesh or "terms" not in c:
+            continue
+        if "error" in c or "skipped" in c:
+            continue
+        t = c["terms"]
+        bound = max(t.values())
+        frac = t["compute_s"] / bound if bound else 0.0
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"],
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": c["bottleneck"],
+            "roofline_frac": frac,
+            "useful_flops_frac": c.get("useful_flops_frac"),
+            "model_flops": c.get("model_flops"),
+            "hlo_flops": c.get("hlo_flops"),
+        })
+    return rows
+
+
+def nominate_hillclimb(rows):
+    """worst roofline fraction, most collective-bound, and the serving
+    cell most representative of the paper (private inference = prefill/
+    decode of a dense LM).  Trivial cells (< 10 ms of compute: a tiny
+    model over-sharded onto 256 chips) are excluded — hillclimbing them
+    optimizes launch overhead, not the model."""
+    rows = [r for r in rows if r["compute_s"] > 0.01] or rows
+    ranked = sorted(rows, key=lambda r: r["roofline_frac"])
+    worst = ranked[0] if ranked else None
+    coll = sorted(rows, key=lambda r: -(r["collective_s"]
+                                        / max(r["compute_s"], 1e-12)))
+    most_coll = next((r for r in coll if r is not worst), None)
+    serving = [r for r in rows
+               if r["shape"] in ("prefill_32k", "decode_32k")
+               and r not in (worst, most_coll)]
+    rep = sorted(serving, key=lambda r: -r["model_flops"] or 0)[0] \
+        if serving else None
+    return [r for r in (worst, most_coll, rep) if r]
+
+
+def run():
+    cells = load_cells()
+    if not cells:
+        emit("roofline/missing", 0.0, "run launch.dryrun first")
+        return []
+    rows = table(cells)
+    for r in rows:
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"compute={r['compute_s']:.2f}s;memory={r['memory_s']:.2f}s;"
+             f"collective={r['collective_s']:.2f}s;"
+             f"bottleneck={r['bottleneck']};frac={r['roofline_frac']:.3f}")
+    picks = nominate_hillclimb(rows)
+    for i, r in enumerate(picks):
+        emit(f"roofline/hillclimb_{i}", 0.0,
+             f"{r['arch']}/{r['shape']}:{r['bottleneck']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

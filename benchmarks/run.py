@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run with
+``PYTHONPATH=src python -m benchmarks.run``."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (comm_protocols, comm_volume, kernel_bench, latency_sim,
+                   performance_parity, privacy_attack, roofline)
+
+    suites = [
+        ("table1_comm_protocols", comm_protocols.run),
+        ("fig7_comm_volume", comm_volume.run),
+        ("fig8_latency_sim", latency_sim.run),
+        ("table3_performance_parity", performance_parity.run),
+        ("table2_privacy_attack", privacy_attack.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"# ==== {name} ====", flush=True)
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites passed")
+
+
+if __name__ == "__main__":
+    main()

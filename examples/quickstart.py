@@ -1,0 +1,49 @@
+"""Quickstart: private inference with Centaur in ~40 lines.
+
+Runs the paper's three-party protocol end-to-end on a tiny GPT-2:
+the model developer permutes weights, the client secret-shares tokens,
+the two compute parties run ScalMul linears + permuted-state exact
+nonlinearities — and the result matches plaintext inference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import GPT2_TINY as CFG
+from repro.core import comm
+from repro.core.private_model import build_private_model, private_forward
+from repro.models import layers as L
+from repro.models.registry import get_api
+
+
+def main():
+    key = jax.random.key(0)
+    api = get_api(CFG)
+    params = api.init_params(CFG, key)                 # developer's model
+    tokens = jax.random.randint(key, (1, 24), 0, CFG.vocab_size)  # client
+
+    # --- plaintext reference -------------------------------------------
+    hidden, _, _ = api.forward(CFG, params, {"tokens": tokens})
+    plain = L.lm_head(CFG, params, params["embed"], hidden)[:, -1]
+
+    # --- Centaur -------------------------------------------------------
+    pm = build_private_model(CFG, params, key, mode="centaur")
+    with comm.ledger() as led:
+        private = private_forward(pm, tokens)[:, -1]
+
+    err = float(np.max(np.abs(np.asarray(private) - np.asarray(plain))))
+    print(f"model: {CFG.name} ({CFG.num_layers}L d={CFG.d_model})")
+    print(f"max |private - plaintext| logit error: {err:.5f} "
+          f"(fixed point, 2^-16 resolution)")
+    print(f"argmax agrees: {bool((private.argmax(-1) == plain.argmax(-1)).all())}")
+    print(f"online communication: {led.total_bytes() / 1e6:.2f} MB "
+          f"in {led.total_rounds()} rounds")
+    print("per-layer-kind breakdown (MB):")
+    for tag, v in sorted(led.by_tag().items()):
+        print(f"  {tag:12s} {v['bits'] / 8e6:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

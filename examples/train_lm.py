@@ -1,0 +1,48 @@
+"""Training driver example: train a reduced llama-family model on the
+synthetic pipeline with checkpointing, preemption handling, and
+straggler telemetry — the full fault-tolerant loop at laptop scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+import argparse
+import tempfile
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline
+from repro.runtime.fault_tolerance import (PreemptionGuard,
+                                           StragglerMonitor)
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True).replace(num_layers=4)
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_ckpt_")
+    pipe = DataPipeline(cfg, global_batch=16, seq_len=64)
+    mgr = CheckpointManager(ckpt_dir)
+    straggler = StragglerMonitor()
+
+    print(f"training {cfg.name} (reduced, {cfg.num_layers}L "
+          f"d={cfg.d_model}) for {args.steps} steps; ckpt -> {ckpt_dir}")
+    res = run_training(cfg, OptConfig(lr=3e-3, warmup_steps=20), pipe,
+                       num_steps=args.steps, checkpoint_mgr=mgr,
+                       ckpt_every=40, straggler=straggler,
+                       preemption=PreemptionGuard(), log_every=10)
+    for step, loss in res.losses:
+        print(f"  step {step:4d}  loss {loss:.4f}")
+    first, last = res.losses[0][1], res.losses[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    print(f"checkpoints on disk: steps {mgr.list_steps()}")
+    assert last < first, "training should reduce loss on synthetic data"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: Centaur hybrid privacy-preserving Transformer inference
+(ACL 2025) as a production-grade multi-pod JAX framework.
+
+Subpackages: core (the paper's protocols + private engine), models,
+configs, data, training, serving, checkpoint, runtime, kernels, launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""Architecture registry: --arch <id> resolves here."""
+from importlib import import_module
+
+_ARCH_MODULES = {
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llama3-405b": "llama3_405b",
+    "minitron-4b": "minitron_4b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "smollm-360m": "smollm_360m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-tiny": "whisper_tiny",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-7b": "zamba2_7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str, reduced: bool = False):
+    if arch_id in _ARCH_MODULES:
+        mod = import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+        return mod.REDUCED if reduced else mod.CONFIG
+    from . import paper_models as pm
+    table = {c.name: c for c in (pm.BERT_BASE, pm.BERT_LARGE, pm.GPT2_BASE,
+                                 pm.GPT2_LARGE, pm.BERT_TINY, pm.GPT2_TINY)}
+    return table[arch_id]

@@ -1,0 +1,16 @@
+"""deepseek-coder-33b [dense] — llama-arch (arXiv:2401.14196; hf).
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    num_layers=62, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=19200, vocab_size=32256, rope_theta=100000.0,
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=112, num_heads=7, num_kv_heads=1, d_ff=224,
+    vocab_size=256, dtype_str="float32", remat="none",
+)

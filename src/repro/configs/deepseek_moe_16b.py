@@ -1,0 +1,20 @@
+"""deepseek-moe-16b [moe] — fine-grained MoE (arXiv:2401.06066; hf).
+
+28L d_model=2048 16H (MHA kv=16) d_ff(expert)=1408 vocab=102400,
+64 routed top-6 + 2 shared."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102400,
+    n_routed_experts=64, n_shared_experts=2, top_k=6, moe_d_ff=1408,
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    n_routed_experts=8, n_shared_experts=2, top_k=2, moe_d_ff=32,
+    d_ff=32, vocab_size=256, dtype_str="float32", remat="none",
+    capacity_factor=4.0,  # dropless at E=8,K=2 (tests compare decode==forward)
+)

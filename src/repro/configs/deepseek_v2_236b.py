@@ -1,0 +1,25 @@
+"""deepseek-v2-236b [moe] — MLA + fine-grained MoE (arXiv:2405.04434; hf).
+
+60L d_model=5120 128H d_ff(expert)=1536 vocab=102400, MoE 160 routed
+top-6 + 2 shared, MLA kv_lora=512 (q_lora=1536, qk_nope=128, qk_rope=64,
+v_head=128 per the paper's released config)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b", family="moe",
+    num_layers=60, d_model=5120, num_heads=128, num_kv_heads=128,
+    d_ff=1536, vocab_size=102400,
+    use_mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128,
+    n_routed_experts=160, n_shared_experts=2, top_k=6, moe_d_ff=1536,
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+    qk_rope_head_dim=8, v_head_dim=16,
+    n_routed_experts=8, n_shared_experts=2, top_k=2, moe_d_ff=32,
+    d_ff=32, vocab_size=256, dtype_str="float32", remat="none",
+    capacity_factor=4.0,  # dropless at E=8,K=2 (tests compare decode==forward)
+)

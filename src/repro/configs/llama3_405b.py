@@ -1,0 +1,16 @@
+"""llama3-405b [dense] (arXiv:2407.21783).
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256, rope_theta=500000.0,
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=128, num_heads=8, num_kv_heads=2, d_ff=256,
+    vocab_size=256, dtype_str="float32", remat="none",
+)

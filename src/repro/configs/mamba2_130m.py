@@ -1,0 +1,18 @@
+"""mamba2-130m [ssm] — SSD, attention-free (arXiv:2405.21060).
+
+24L d_model=768 ssm_state=128 (expand=2, headdim=64 -> 24 ssd heads)
+vocab=50280."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    num_layers=24, d_model=768, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1,
+    conv_kernel=4, ssm_chunk=256,
+    norm_type="rmsnorm",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, ssm_state=16, ssm_headdim=32,
+    ssm_chunk=16, vocab_size=256, dtype_str="float32", remat="none",
+)

@@ -1,0 +1,17 @@
+"""minitron-4b [dense] — pruned nemotron (arXiv:2407.14679; hf).
+
+32L d_model=3072 24H (GQA kv=8, head_dim=128) d_ff=9216 vocab=256000.
+Nemotron uses squared-ReLU MLP (no gate)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-4b", family="dense",
+    num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+    head_dim=128, d_ff=9216, vocab_size=256000,
+    norm_type="layernorm", act="relu2", ffn_type="mlp",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=96, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=192, vocab_size=256, dtype_str="float32", remat="none",
+)

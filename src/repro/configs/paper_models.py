@@ -1,0 +1,33 @@
+"""The paper's own evaluation models (Appendix D): BERT / GPT-2."""
+from repro.models.config import ModelConfig
+
+BERT_BASE = ModelConfig(
+    name="bert-base", family="encoder",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=30522, causal=False, prenorm=False,
+    norm_type="layernorm", act="gelu", ffn_type="mlp",
+    pos_embed="learned",
+)
+BERT_LARGE = BERT_BASE.replace(name="bert-large", num_layers=24,
+                               d_model=1024, num_heads=16,
+                               num_kv_heads=16, d_ff=4096)
+GPT2_BASE = ModelConfig(
+    name="gpt2-base", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=50257, tie_embeddings=True,
+    norm_type="layernorm", act="gelu", ffn_type="mlp",
+    pos_embed="learned",
+)
+GPT2_LARGE = GPT2_BASE.replace(name="gpt2-large", num_layers=36,
+                               d_model=1280, num_heads=20,
+                               num_kv_heads=20, d_ff=5120)
+
+# tiny variants for tests/examples (fast on CPU, exercised end-to-end)
+BERT_TINY = BERT_BASE.replace(name="bert-tiny", num_layers=2, d_model=64,
+                              num_heads=4, num_kv_heads=4, d_ff=128,
+                              vocab_size=384, dtype_str="float32",
+                              remat="none")
+GPT2_TINY = GPT2_BASE.replace(name="gpt2-tiny", num_layers=2, d_model=64,
+                              num_heads=4, num_kv_heads=4, d_ff=128,
+                              vocab_size=384, dtype_str="float32",
+                              remat="none")

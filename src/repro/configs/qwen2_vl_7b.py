@@ -1,0 +1,21 @@
+"""qwen2-vl-7b [vlm] — M-RoPE backbone (arXiv:2409.12191; hf).
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.  The vision
+frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings + (3, B, S) M-RoPE position ids."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="dense",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064, rope_theta=1000000.0,
+    mrope_sections=(16, 24, 24),  # half-dim 64 = 16+24+24
+    input_kind="embeddings",
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, mrope_sections=(4, 2, 2),  # half-dim 8
+    dtype_str="float32", remat="none",
+)

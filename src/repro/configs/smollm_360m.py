@@ -1,0 +1,16 @@
+"""smollm-360m [dense] — llama-arch small (hf:HuggingFaceTB/SmolLM).
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense",
+    num_layers=32, d_model=960, num_heads=15, num_kv_heads=5,
+    d_ff=2560, vocab_size=49152,
+    norm_type="rmsnorm", act="silu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, dtype_str="float32", remat="none",
+)

@@ -1,0 +1,21 @@
+"""whisper-tiny [audio] — enc-dec backbone (arXiv:2212.04356).
+
+4L(enc)+4L(dec) d_model=384 6H d_ff=1536 vocab=51865.  Conv/mel
+frontend is a STUB: input_specs() provides precomputed frame
+embeddings."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    num_layers=4, encoder_layers=4, d_model=384, num_heads=6,
+    num_kv_heads=6, d_ff=1536, vocab_size=51865,
+    norm_type="layernorm", act="gelu", ffn_type="mlp",
+    pos_embed="learned", input_kind="embeddings",
+    max_seq_len=33024,  # enough for prefill_32k / decode_32k positions
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=2, encoder_layers=2, d_model=64, num_heads=4,
+    num_kv_heads=4, d_ff=128, vocab_size=256, max_seq_len=512,
+    dtype_str="float32", remat="none",
+)

@@ -1,0 +1,22 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention blocks
+(arXiv:2411.15242).
+
+81L d_model=3584 32H (kv=32) d_ff=14336 ssm_state=64; the shared
+attention+MLP block (one set of weights) is applied every 6 mamba
+blocks."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid",
+    num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_ngroups=1,
+    conv_kernel=4, ssm_chunk=256, attn_every=6,
+    norm_type="rmsnorm", act="gelu", ffn_type="swiglu",
+)
+
+REDUCED = CONFIG.replace(
+    num_layers=5, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    ssm_state=16, ssm_headdim=32, ssm_chunk=16, attn_every=2,
+    vocab_size=256, dtype_str="float32", remat="none",
+)

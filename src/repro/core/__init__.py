@@ -1,0 +1,6 @@
+# The paper's primary contribution: the Centaur hybrid PPTI protocol
+# stack.  `ring` must be imported first (it enables 64-bit mode before
+# any ring tensor exists).
+from . import ring  # noqa: F401  (isort: keep first)
+from . import beaver, comm, nonlinear, permute, protocols, sharing  # noqa: F401
+from .sharing import ShareTensor, reconstruct, reconstruct_float, share, share_float  # noqa: F401

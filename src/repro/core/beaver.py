@@ -1,0 +1,111 @@
+"""Beaver-triple multiplication between secret shares (Pi_MatMul).
+
+Triples are produced by a PRG-seeded dealer (the CrypTen "trusted third
+party" model, paper §2.2).  Dealer traffic is billed as offline; the
+online cost of one share x share matmul is 1 round and
+2*(numel(E) + numel(F))*64 bits — for square n x n operands that is the
+paper's 256 n^2 bits (Table 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import comm, ring
+from .sharing import ShareTensor, reconstruct, share
+
+
+class TripleDealer:
+    """Deterministic PRG dealer handing out multiplication triples."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def _split(self, n=3):
+        keys = jax.random.split(self._key, n + 1)
+        self._key = keys[0]
+        return keys[1:]
+
+    def matmul_triple(self, a_shape, b_shape):
+        ka, kb, ks = self._split()
+        a = ring.rand_ring(ka, a_shape)
+        b = ring.rand_ring(kb, b_shape)
+        c = ring.ring_matmul(a, b)
+        ks0, ks1, ks2 = jax.random.split(ks, 3)
+        bits = (comm.numel(a_shape) + comm.numel(b_shape)
+                + comm.numel(c.shape)) * comm.RING_BITS * 2
+        comm.record("dealer_triple", rounds=1, bits=bits, online=False)
+        return share(ks0, a), share(ks1, b), share(ks2, c)
+
+    def mul_triple(self, shape):
+        ka, kb, ks = self._split()
+        a = ring.rand_ring(ka, shape)
+        b = ring.rand_ring(kb, shape)
+        c = a * b
+        ks0, ks1, ks2 = jax.random.split(ks, 3)
+        comm.record("dealer_triple", rounds=1,
+                    bits=comm.numel(shape) * comm.RING_BITS * 6,
+                    online=False)
+        return share(ks0, a), share(ks1, b), share(ks2, c)
+
+
+def _open_masked(x: ShareTensor, a: ShareTensor, protocol: str):
+    """Open x - a (both parties exchange their shares)."""
+    e = reconstruct(x - a)
+    # each party sends numel elements; 2x crosses the wire
+    comm.record(protocol, rounds=0,
+                bits=2 * comm.numel(e.shape) * comm.RING_BITS)
+    return e
+
+
+def matmul(x: ShareTensor, y: ShareTensor, dealer: TripleDealer,
+           frac_bits: int = ring.FRAC_BITS, rescale: bool = True,
+           protocol: str = "matmul") -> ShareTensor:
+    """[X @ Y] from [X], [Y].  Batched shapes supported (jnp.matmul rules).
+
+    Z = E@F + E@B + A@F + C with E = X-A, F = Y-B opened in one round.
+    """
+    a, b, c = dealer.matmul_triple(x.shape, y.shape)
+    e = _open_masked(x, a, protocol)
+    f = _open_masked(y, b, protocol)
+    comm.record(protocol, rounds=1, bits=0)  # E,F open concurrently: 1 round
+    ef = ring.ring_matmul(e, f)
+    z0 = ring.ring_matmul(e, b.s0) + ring.ring_matmul(a.s0, f) + c.s0
+    z1 = (ef + ring.ring_matmul(e, b.s1) + ring.ring_matmul(a.s1, f)
+          + c.s1)
+    z = ShareTensor(z0, z1)
+    return z.truncate(frac_bits) if rescale else z
+
+
+def mul(x: ShareTensor, y: ShareTensor, dealer: TripleDealer,
+        frac_bits: int = ring.FRAC_BITS, rescale: bool = True,
+        protocol: str = "mul") -> ShareTensor:
+    """Element-wise [X * Y] (broadcasting not supported: shapes must match)."""
+    assert x.shape == y.shape, (x.shape, y.shape)
+    a, b, c = dealer.mul_triple(x.shape)
+    e = _open_masked(x, a, protocol)
+    f = _open_masked(y, b, protocol)
+    comm.record(protocol, rounds=1, bits=0)
+    z0 = e * b.s0 + a.s0 * f + c.s0
+    z1 = e * f + e * b.s1 + a.s1 * f + c.s1
+    z = ShareTensor(z0, z1)
+    return z.truncate(frac_bits) if rescale else z
+
+
+def square(x: ShareTensor, dealer: TripleDealer,
+           frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """[X^2] with a square triple (A, A^2): only E = X-A is opened, so the
+    cost is half a mul — 1 round, 128 * numel bits (CrypTen semantics;
+    this is what makes exp cost the paper's 1024 bits/scalar)."""
+    ka, ks1, ks2 = dealer._split()
+    a = ring.rand_ring(ka, x.shape)
+    c = a * a
+    comm.record("dealer_triple", rounds=1,
+                bits=comm.numel(x.shape) * comm.RING_BITS * 4, online=False)
+    a_sh = share(ks1, a)
+    c_sh = share(ks2, c)
+    e = _open_masked(x, a_sh, "square")
+    comm.record("square", rounds=1, bits=0)
+    z0 = 2 * e * a_sh.s0 + c_sh.s0
+    z1 = e * e + 2 * e * a_sh.s1 + c_sh.s1
+    return ShareTensor(z0, z1).truncate(frac_bits)

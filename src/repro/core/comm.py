@@ -1,0 +1,134 @@
+"""Trace-time communication accounting for the Centaur protocols.
+
+Every protocol op records (rounds, bits) at Python call time using the
+*static shapes* of its operands, reproducing the closed-form costs of
+paper Table 1.  Because shapes are static under jit, tracing a step once
+yields the exact per-step ledger; nothing dynamic crosses into the jitted
+computation.
+
+Events are tagged with the enclosing layer kind ("linear", "softmax",
+"gelu", "layernorm", "embedding", "adaptation", ...) via the `tag`
+context manager so benchmarks can reproduce the paper's per-layer
+breakdowns (Fig. 3 / Fig. 7 / Fig. 8).
+"""
+from __future__ import annotations
+
+import contextlib
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+RING_BITS = 64
+
+
+@dataclass
+class CommEvent:
+    protocol: str       # e.g. "matmul", "scalmul", "ppsm"
+    rounds: int
+    bits: int
+    tag: str            # layer kind
+    online: bool = True  # False for dealer/offline traffic
+
+
+@dataclass
+class CommLedger:
+    events: list = field(default_factory=list)
+
+    def record(self, protocol: str, rounds: int, bits: int,
+               online: bool = True):
+        self.events.append(
+            CommEvent(protocol, rounds, int(bits), current_tag(), online))
+
+    # ---- aggregation -----------------------------------------------------
+    def total_bits(self, online_only: bool = True) -> int:
+        return sum(e.bits for e in self.events
+                   if e.online or not online_only)
+
+    def total_rounds(self, online_only: bool = True) -> int:
+        return sum(e.rounds for e in self.events
+                   if e.online or not online_only)
+
+    def total_bytes(self, online_only: bool = True) -> float:
+        return self.total_bits(online_only) / 8
+
+    def by_tag(self):
+        out = defaultdict(lambda: {"rounds": 0, "bits": 0})
+        for e in self.events:
+            if not e.online:
+                continue
+            out[e.tag]["rounds"] += e.rounds
+            out[e.tag]["bits"] += e.bits
+        return dict(out)
+
+    def by_protocol(self):
+        out = defaultdict(lambda: {"rounds": 0, "bits": 0, "calls": 0})
+        for e in self.events:
+            if not e.online:
+                continue
+            out[e.protocol]["rounds"] += e.rounds
+            out[e.protocol]["bits"] += e.bits
+            out[e.protocol]["calls"] += 1
+        return dict(out)
+
+    def simulate_time(self, bandwidth_bps: float, rtt_s: float) -> float:
+        """Network time under the paper's analytic model:
+        bits/bandwidth + rounds * RTT (LAN 3Gbps/0.8ms, WAN 200/40,
+        WAN 100/80)."""
+        return (self.total_bits() / bandwidth_bps
+                + self.total_rounds() * rtt_s)
+
+
+# ---- ambient ledger / tag stacks ----------------------------------------
+_LEDGERS: list[CommLedger] = []
+_TAGS: list[str] = []
+
+
+@contextlib.contextmanager
+def ledger():
+    led = CommLedger()
+    _LEDGERS.append(led)
+    try:
+        yield led
+    finally:
+        _LEDGERS.pop()
+
+
+@contextlib.contextmanager
+def tag(name: str):
+    _TAGS.append(name)
+    try:
+        yield
+    finally:
+        _TAGS.pop()
+
+
+def current_tag() -> str:
+    return _TAGS[-1] if _TAGS else "untagged"
+
+
+_MUTED = [False]
+
+
+@contextlib.contextmanager
+def muted():
+    """Suppress recording (e.g. simulation computes all MoE experts for
+    simplicity but bills only the dispatched tokens)."""
+    _MUTED.append(True)
+    try:
+        yield
+    finally:
+        _MUTED.pop()
+
+
+def record(protocol: str, rounds: int, bits: int, online: bool = True):
+    """Record into every active ledger (no-op when none is active)."""
+    if _MUTED[-1]:
+        return
+    for led in _LEDGERS:
+        led.record(protocol, rounds, bits, online)
+
+
+def numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n

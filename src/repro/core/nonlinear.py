@@ -1,0 +1,110 @@
+"""Exact privacy-preserving nonlinearities via state conversion
+(paper §5.2.1 Algorithms 1-3 and beyond-paper extensions).
+
+Pattern (2 rounds, (in+out) * 64 bits): P0 sends its share of the
+*permuted* input -> P1 reconstructs X·pi, evaluates the nonlinearity in
+plaintext float32 (permutation-equivariant, so f(X·pi) = f(X)·pi) ->
+re-shares the permuted output.
+
+Beyond-paper extensions for the assigned architecture pool:
+  * pp_topk_router  — MoE router under an expert-axis permutation.
+  * pp_block        — generic permuted-plaintext block eval (Pi_PPSSD for
+    Mamba2/Zamba2: channel permutation commutes with depthwise conv,
+    SiLU and the per-channel SSD scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import comm, ring
+from .sharing import ShareTensor, reconstruct, share
+
+
+def pp_apply(fn, x: ShareTensor, key, protocol: str,
+             frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """Reveal-compute-reshare on a permuted-state shared tensor."""
+    x_plain = ring.decode(reconstruct(x), frac_bits, jnp.float32)
+    y = fn(x_plain)
+    comm.record(protocol, rounds=2,
+                bits=(comm.numel(x.shape) + comm.numel(y.shape))
+                * comm.RING_BITS)
+    return share(key, ring.encode(y, frac_bits))
+
+
+# ---- paper protocols -------------------------------------------------------
+
+def pp_softmax(x: ShareTensor, key, axis: int = -1,
+               frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    return pp_apply(lambda v: jax.nn.softmax(v, axis=axis), x, key,
+                    "ppsm", frac_bits)
+
+
+def pp_gelu(x: ShareTensor, key,
+            frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    return pp_apply(lambda v: jax.nn.gelu(v, approximate=False), x, key,
+                    "ppgelu", frac_bits)
+
+
+def pp_silu(x: ShareTensor, key,
+            frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    return pp_apply(jax.nn.silu, x, key, "ppsilu", frac_bits)
+
+
+def pp_tanh(x: ShareTensor, key,
+            frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    return pp_apply(jnp.tanh, x, key, "pptanh", frac_bits)
+
+
+def pp_layernorm(x: ShareTensor, gamma_p, beta_p, key,
+                 eps: float = 1e-5,
+                 frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """Pi_PPLN with permuted affine params held in plaintext by P1.
+
+    LayerNorm statistics are permutation-invariant along the feature
+    axis, so LN(X pi; gamma pi, beta pi) = LN(X; gamma, beta) pi.
+    """
+    def fn(v):
+        mu = jnp.mean(v, axis=-1, keepdims=True)
+        var = jnp.var(v, axis=-1, keepdims=True)
+        return gamma_p * (v - mu) * jax.lax.rsqrt(var + eps) + beta_p
+
+    return pp_apply(fn, x, key, "ppln", frac_bits)
+
+
+def pp_rmsnorm(x: ShareTensor, gamma_p, key, eps: float = 1e-6,
+               frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    def fn(v):
+        ms = jnp.mean(jnp.square(v), axis=-1, keepdims=True)
+        return gamma_p * v * jax.lax.rsqrt(ms + eps)
+
+    return pp_apply(fn, x, key, "ppln", frac_bits)
+
+
+# ---- beyond-paper extensions ----------------------------------------------
+
+def pp_topk_router(logits: ShareTensor, top_k: int, key=None,
+                   frac_bits: int = ring.FRAC_BITS,
+                   normalize: bool = True):
+    """MoE router: reveal expert-permuted logits, compute gates/top-k in
+    plaintext at P1.  Gates/assignments stay plaintext (they drive
+    plaintext gather/scatter of shares; expert identity is protected by
+    the expert-axis permutation pi_e).  1 round, numel * 64 bits.
+    """
+    comm.record("pptopk", rounds=1,
+                bits=comm.numel(logits.shape) * comm.RING_BITS)
+    lp = ring.decode(reconstruct(logits), frac_bits, jnp.float32)
+    probs = jax.nn.softmax(lp, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    if normalize:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx
+
+
+def pp_block(fn, x: ShareTensor, key, protocol: str = "ppblock",
+             frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """Generic permuted-plaintext block (Pi_PPSSD for SSM blocks):
+    reveal channel-permuted input, run `fn` (conv + SiLU + SSD scan +
+    gating, all channel-permutation-equivariant) in plaintext, re-share.
+    """
+    return pp_apply(fn, x, key, protocol, frac_bits)

@@ -1,0 +1,90 @@
+"""Random permutations for parameter protection (paper §2.3, §5.1).
+
+Permutations are stored as index vectors and applied with gathers —
+numerically identical to the paper's dense permutation matrices (tests
+verify equivalence) but O(n) instead of O(n^2) memory / O(n^3) compute.
+Dense 0/1 matrices are materialized only where the *protocol* requires a
+secret-shared matrix (Pi_PPP exact mode, protocols.pp_permute_exact).
+
+Convention: a permutation `p` applied to axis `ax` of X yields
+Y[..., i, ...] = X[..., p[i], ...], i.e. Y = X @ Pi where
+Pi[j, i] = 1 iff j == p[i] (column permutation for the last axis).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gen_perm(key, n: int):
+    return jax.random.permutation(key, n)
+
+
+def identity_perm(n: int):
+    return jnp.arange(n)
+
+
+def inv_perm(p):
+    inv = jnp.zeros_like(p).at[p].set(jnp.arange(p.shape[0]))
+    return inv
+
+
+def apply_perm(x, p, axis: int = -1):
+    return jnp.take(x, p, axis=axis)
+
+
+def apply_inv_perm(x, p, axis: int = -1):
+    return jnp.take(x, inv_perm(p), axis=axis)
+
+
+def perm_matrix(p, dtype=jnp.int64):
+    """Dense Pi with X @ Pi == apply_perm(X, p, axis=-1)."""
+    n = p.shape[0]
+    m = jnp.zeros((n, n), dtype)
+    return m.at[p, jnp.arange(n)].set(1)
+
+
+def permute_linear(w, b, p_in, p_out):
+    """Permute a linear layer y = x @ W^T + b, W: (out, in).
+
+    With x' = apply_perm(x, p_in), the permuted weights
+    W'[o', i'] = W[p_out[o'], p_in[i']] satisfy
+    apply_perm(y, p_out) = x' @ W'^T + b'.
+    """
+    w = jnp.take(jnp.take(w, p_out, axis=0), p_in, axis=1)
+    b = None if b is None else jnp.take(b, p_out, axis=0)
+    return w, b
+
+
+@dataclass
+class PermSet:
+    """The developer's permutation set Π = {π, π1, π2, ...} keyed by axis
+    size.  π (d), π2 (k) protect parameters; π1 (n) protects the
+    sequence axis of attention intermediates and is generated per-request.
+    """
+    perms: dict = field(default_factory=dict)
+    key: jax.Array | None = None
+
+    @classmethod
+    def create(cls, key, sizes):
+        perms = {}
+        for n in sorted(set(int(s) for s in sizes)):
+            key, sub = jax.random.split(key)
+            perms[n] = gen_perm(sub, n)
+        return cls(perms=perms, key=key)
+
+    def perm(self, n: int):
+        return self.perms[int(n)]
+
+    def fresh(self, n: int):
+        """Per-request permutation (π1 for the sequence axis)."""
+        self.key, sub = jax.random.split(self.key)
+        return gen_perm(sub, int(n))
+
+
+def log2_brute_force_space(n: int) -> float:
+    """log2(n!) — the paper's brute-force security measure (§2.3)."""
+    return float(np.sum(np.log2(np.arange(1, n + 1))))

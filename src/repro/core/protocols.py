@@ -1,0 +1,70 @@
+"""The Centaur protocol set (paper §5.2, Table 1).
+
+=================  ============================  ======  ================
+protocol           signature                     rounds  bits
+=================  ============================  ======  ================
+Pi_Add             [x],[y] -> [x+y]              0       0
+Pi_ScalMul         A, [X]  -> [A X^T]            0       0
+Pi_MatMul          [X],[Y] -> [X Y^T]            1       256 n^2
+Pi_PPP             [X]     -> [X pi]             1       256 n^2
+Pi_PPSM/GeLU/LN    [X pi]  -> [f(X) pi]          2       128 n^2
+=================  ============================  ======  ================
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import beaver, comm, permute, ring
+from .sharing import ShareTensor
+
+
+def scal_mul(w_ring, x: ShareTensor, frac_bits: int = ring.FRAC_BITS,
+             rescale: bool = True) -> ShareTensor:
+    """Pi_ScalMul: x @ w^T with permuted-plaintext w (out, in).
+
+    Communication-free: each party multiplies its own share locally.
+    """
+    comm.record("scalmul", rounds=0, bits=0)
+    wt = jnp.swapaxes(jnp.asarray(w_ring, ring.RING_DTYPE), -1, -2)
+    z = ShareTensor(ring.ring_matmul(x.s0, wt), ring.ring_matmul(x.s1, wt))
+    return z.truncate(frac_bits) if rescale else z
+
+
+def linear(w_ring, b_ring, x: ShareTensor,
+           frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """Permuted-plaintext linear layer: x @ w^T + b (b already at scale f)."""
+    y = scal_mul(w_ring, x, frac_bits)
+    if b_ring is not None:
+        y = y + jnp.asarray(b_ring, ring.RING_DTYPE)
+    return y
+
+
+def matmul(x: ShareTensor, y: ShareTensor, dealer,
+           frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    """Pi_MatMul: share x share matmul via Beaver triples."""
+    return beaver.matmul(x, y, dealer, frac_bits)
+
+
+def pp_permute(x: ShareTensor, p, axis: int = -1) -> ShareTensor:
+    """Pi_PPP: [X] -> [X pi] for a permutation unknown to both parties.
+
+    Numerics: gather on both shares (exactly equivalent to the paper's
+    Beaver matmul against the shared dense permutation matrix — see
+    pp_permute_exact and tests/test_protocols.py).  Cost billed at the
+    protocol's Pi_MatMul price: 1 round, 2*(numel(X) + n^2)*64 bits.
+    """
+    n = int(x.shape[axis])
+    bits = 2 * (comm.numel(x.shape) + n * n) * comm.RING_BITS
+    comm.record("ppp", rounds=1, bits=bits)
+    return ShareTensor(permute.apply_perm(x.s0, p, axis),
+                       permute.apply_perm(x.s1, p, axis))
+
+
+def pp_permute_exact(x: ShareTensor, p_shared: ShareTensor,
+                     dealer) -> ShareTensor:
+    """Reference Pi_PPP (paper Algorithm 6): Beaver matmul against the
+    secret-shared 0/1 permutation matrix.  Entries are *raw* ring
+    integers (not fixed-point scaled) so no truncation occurs and the
+    result is bit-exact equal to the gather fast path."""
+    return beaver.matmul(x, p_shared, dealer, rescale=False,
+                         protocol="ppp")

@@ -1,0 +1,67 @@
+"""Fixed-point arithmetic over the integer ring Z_{2^64}.
+
+CrypTen-compatible semantics (paper §2.2): floating-point values are scaled
+by 2^FRAC_BITS and embedded in a 64-bit two's-complement ring.  Signed int64
+wraparound *is* arithmetic mod 2^64, so no explicit modular reduction is
+ever needed.  Local truncation (arithmetic right shift of each share)
+carries CrypTen's +-1 LSB error model; see tests/test_ring.py property
+tests for the validated bound.
+
+On TPU the ring matmul is served by kernels/ring_matmul (int8-limb MXU
+decomposition); on host we use native int64 matmuls (which wrap).
+"""
+from __future__ import annotations
+
+import jax
+
+# The ring requires 64-bit integers.  This must run before any int64 array
+# is created; repro.core re-exports this module first for that reason.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+RING_BITS = 64
+RING_DTYPE = jnp.int64
+FRAC_BITS = 16  # CrypTen default 16-bit fixed-point precision.
+
+
+def encode(x, frac_bits: int = FRAC_BITS):
+    """Float -> fixed-point ring element (round-to-nearest)."""
+    scaled = jnp.asarray(x, jnp.float64) * (1 << frac_bits)
+    return jnp.round(scaled).astype(RING_DTYPE)
+
+
+def decode(x, frac_bits: int = FRAC_BITS, dtype=jnp.float32):
+    """Fixed-point ring element -> float."""
+    return (jnp.asarray(x, RING_DTYPE).astype(jnp.float64)
+            / (1 << frac_bits)).astype(dtype)
+
+
+def truncate(x, frac_bits: int = FRAC_BITS):
+    """Arithmetic right shift: rescale after a fixed-point multiply.
+
+    Applied locally per share (CrypTen local truncation): exact up to one
+    LSB, with a wrap failure probability ~|x|/2^63 (negligible for model
+    activations).
+    """
+    return jnp.right_shift(x, frac_bits)
+
+
+def rand_ring(key, shape):
+    """Uniform ring element (uniform over all 2^64 values)."""
+    bits = jax.random.bits(key, shape, dtype=jnp.uint64)
+    return jax.lax.bitcast_convert_type(bits, RING_DTYPE)
+
+
+def ring_matmul(a, b):
+    """a @ b in the ring (int64 wraparound == mod 2^64)."""
+    return jnp.matmul(a, b)
+
+
+def ring_mul(a, b):
+    return a * b
+
+
+def fixed_point_matmul(a, b, frac_bits: int = FRAC_BITS):
+    """Matmul of two fixed-point operands, rescaled back to `frac_bits`."""
+    return truncate(ring_matmul(a, b), frac_bits)

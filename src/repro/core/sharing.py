@@ -1,0 +1,124 @@
+"""2-of-2 additive secret sharing over Z_{2^64} (paper §2.2).
+
+A `ShareTensor` carries both parties' shares through one SPMD program —
+the simulation form of the two-party protocol.  In the multi-pod
+deployment mapping (launch/private_dryrun.py) the party axis is sharded
+over the `pod` mesh axis and share exchange lowers to collective-permute.
+
+All communication is billed through core.comm at trace time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import comm, ring
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ShareTensor:
+    """x = (s0 + s1) mod 2^64 with signed-int64 representatives."""
+    s0: jax.Array
+    s1: jax.Array
+
+    # pytree protocol -------------------------------------------------------
+    def tree_flatten(self):
+        return (self.s0, self.s1), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # convenience ------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.s0.shape
+
+    @property
+    def ndim(self):
+        return self.s0.ndim
+
+    def reshape(self, *shape):
+        return ShareTensor(self.s0.reshape(*shape), self.s1.reshape(*shape))
+
+    def transpose(self, *axes):
+        return ShareTensor(self.s0.transpose(*axes), self.s1.transpose(*axes))
+
+    def __getitem__(self, idx):
+        return ShareTensor(self.s0[idx], self.s1[idx])
+
+    def astuple(self):
+        return self.s0, self.s1
+
+    # ring arithmetic (communication-free, Pi_Add) ----------------------------
+    def __add__(self, other):
+        if isinstance(other, ShareTensor):
+            return ShareTensor(self.s0 + other.s0, self.s1 + other.s1)
+        # public ring constant: added to share 0 only
+        other = jnp.asarray(other, ring.RING_DTYPE)
+        return ShareTensor(self.s0 + other, self.s1)
+
+    __radd__ = __add__
+
+    def __sub__(self, other):
+        if isinstance(other, ShareTensor):
+            return ShareTensor(self.s0 - other.s0, self.s1 - other.s1)
+        other = jnp.asarray(other, ring.RING_DTYPE)
+        return ShareTensor(self.s0 - other, self.s1)
+
+    def __neg__(self):
+        return ShareTensor(-self.s0, -self.s1)
+
+    def mul_public(self, c_ring, frac_bits: int = ring.FRAC_BITS):
+        """Multiply by a public fixed-point constant (free), rescale."""
+        c_ring = jnp.asarray(c_ring, ring.RING_DTYPE)
+        return ShareTensor(ring.truncate(self.s0 * c_ring, frac_bits),
+                           ring.truncate(self.s1 * c_ring, frac_bits))
+
+    def truncate(self, frac_bits: int = ring.FRAC_BITS):
+        return ShareTensor(ring.truncate(self.s0, frac_bits),
+                           ring.truncate(self.s1, frac_bits))
+
+
+# ---- share lifecycle ------------------------------------------------------
+
+def share(key, x_ring) -> ShareTensor:
+    """Split a ring tensor into fresh additive shares."""
+    s0 = ring.rand_ring(key, jnp.shape(x_ring))
+    return ShareTensor(s0, jnp.asarray(x_ring, ring.RING_DTYPE) - s0)
+
+
+def share_float(key, x, frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+    return share(key, ring.encode(x, frac_bits))
+
+
+def reconstruct(st: ShareTensor):
+    return st.s0 + st.s1
+
+
+def reconstruct_float(st: ShareTensor, frac_bits: int = ring.FRAC_BITS,
+                      dtype=jnp.float32):
+    return ring.decode(reconstruct(st), frac_bits, dtype)
+
+
+# ---- protocol-level reveal/reshare (each costs communication) --------------
+
+def reveal(st: ShareTensor, protocol: str = "reveal"):
+    """Open a shared tensor to one party: the other party sends its share.
+
+    1 round, numel * 64 bits (one share crosses the link)."""
+    comm.record(protocol, rounds=1,
+                bits=comm.numel(st.shape) * comm.RING_BITS)
+    return reconstruct(st)
+
+
+def reshare(key, x_ring, protocol: str = "reshare") -> ShareTensor:
+    """Party holding plaintext x re-shares it: sends one share across.
+
+    1 round, numel * 64 bits."""
+    comm.record(protocol, rounds=1,
+                bits=comm.numel(jnp.shape(x_ring)) * comm.RING_BITS)
+    return share(key, x_ring)

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+#   ring_matmul      Z_2^32 / Z_2^64 GEMM on the MXU via signed int8
+#                    digits (the TPU form of CrypTen's ring GEMM)
+#   flash_attention  online-softmax attention (P1's permuted-plaintext
+#                    hot loop; the §Perf memory-term lever)
+#   softmax/rmsnorm  fused Pi_PPSM / Pi_PPLN plaintext evaluation
+#   ssd_scan         chunked Mamba2 SSD for Pi_PPSSD
+# ops.py = jit'd wrappers (interpret on CPU, compiled on TPU);
+# ref.py = pure-jnp oracles used by tests/test_kernels.py sweeps.
+from . import ops, ref  # noqa: F401

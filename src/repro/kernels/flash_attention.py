@@ -1,0 +1,101 @@
+"""Flash attention (forward) — the fix for the dominant memory-roofline
+term the dry-run exposes at seq >= 4k: the naive path materializes the
+(S, S) score matrix to HBM; here scores never leave VMEM.
+
+Grid (B*H, S/bq, T/bk): the KV axis is the sequential minor dimension
+carrying running max / sum / accumulator scratch (standard online
+softmax).  Causal masking via absolute q/k positions; KV blocks entirely
+above the diagonal are skipped with @pl.when."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, bq: int, bk: int, k_steps: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == k_steps - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_p(q, k, v, *, causal: bool = True, bq: int = 128,
+                      bk: int = 128, interpret: bool = True):
+    """q: (B, H, S, D); k, v: (B, H, T, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq = max(min(bq, S), 1)
+    while S % bq:
+        bq -= 1
+    bk = max(min(bk, T), 1)
+    while T % bk:
+        bk -= 1
+    k_steps = T // bk
+    scale = float(D) ** -0.5
+    kernel = functools.partial(_flash_kernel, causal=causal, bq=bq,
+                               bk=bk, k_steps=k_steps, scale=scale)
+    q3 = q.reshape(B * H, S, D)
+    k3 = k.reshape(B * H, T, D)
+    v3 = v.reshape(B * H, T, D)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(B, H, S, D)

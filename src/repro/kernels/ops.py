@@ -1,0 +1,75 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+`interpret` defaults to True on CPU (this container) and False on real
+TPU; the composition logic (e.g. ring64_matmul out of narrow+wide
+passes) is backend-independent."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_p
+from .ring_matmul import ring_matmul_p
+from .rmsnorm import norm_p
+from .softmax import softmax_p
+from .ssd_scan import ssd_scan_p
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ring_matmul32(a, b, **kw):
+    """Z_{2^32} GEMM on the MXU (10 int8 digit dots)."""
+    kw.setdefault("interpret", _default_interpret())
+    return ring_matmul_p(a, b, wide=False, **kw)
+
+
+def ring_matmul_wide(a, b, **kw):
+    """Exact signed-int32 GEMM accumulated mod 2^64 (16 digit dots)."""
+    kw.setdefault("interpret", _default_interpret())
+    return ring_matmul_p(a, b, wide=True, **kw)
+
+
+def ring64_matmul(a64, b64, **kw):
+    """Z_{2^64} GEMM from 32-bit halves (DESIGN.md §3):
+
+        x = lo(x) + 2^32 hi(x)   with lo = signed low word
+        x.y mod 2^64 = wide(lo,lo') + 2^32 (lo.hi' + hi.lo')
+
+    one wide pass (16 int8 dots) + two narrow passes (10 each)."""
+    a_lo = jax.lax.convert_element_type(a64, jnp.int32)
+    b_lo = jax.lax.convert_element_type(b64, jnp.int32)
+    a_hi = jax.lax.convert_element_type(
+        jnp.right_shift(a64 - a_lo.astype(jnp.int64), 32), jnp.int32)
+    b_hi = jax.lax.convert_element_type(
+        jnp.right_shift(b64 - b_lo.astype(jnp.int64), 32), jnp.int32)
+    wide = ring_matmul_wide(a_lo, b_lo, **kw)
+    cross = (ring_matmul32(a_lo, b_hi, **kw).astype(jnp.int64)
+             + ring_matmul32(a_hi, b_lo, **kw).astype(jnp.int64))
+    return wide + jnp.left_shift(cross, 32)
+
+
+def softmax(x, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return softmax_p(x, **kw)
+
+
+def rmsnorm(x, gamma, eps=1e-6, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return norm_p(x, gamma, eps=eps, layernorm=False, **kw)
+
+
+def layernorm(x, gamma, beta, eps=1e-5, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return norm_p(x, gamma, beta, eps=eps, layernorm=True, **kw)
+
+
+def flash_attention(q, k, v, causal=True, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return flash_attention_p(q, k, v, causal=causal, **kw)
+
+
+def ssd_scan(x, dt, A, B, C, chunk=64, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return ssd_scan_p(x, dt, A, B, C, chunk=chunk, **kw)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for the
+shape/dtype sweep tests).  Deliberately naive implementations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ring_matmul32_ref(a, b):
+    """(M,K) x (K,N) int32 mod 2^32: int64 accumulate then truncate."""
+    wide = a.astype(jnp.int64) @ b.astype(jnp.int64)  # wraps mod 2^64
+    return jax.lax.convert_element_type(
+        jnp.bitwise_and(wide, jnp.int64(0xFFFFFFFF)).astype(jnp.uint32),
+        jnp.int32)
+
+
+def ring_matmul_wide_ref(a, b):
+    """Exact signed int32 GEMM accumulated mod 2^64 (int64 wraparound)."""
+    return a.astype(jnp.int64) @ b.astype(jnp.int64)
+
+
+def ring64_matmul_ref(a64, b64):
+    """Z_{2^64} GEMM: native int64 matmul (wraparound is the ring op)."""
+    return a64 @ b64
+
+
+def softmax_ref(x, axis=-1):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+def rmsnorm_ref(x, gamma, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (gamma.astype(jnp.float32) * xf
+            * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (gamma.astype(jnp.float32) * y
+            + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    S, T = q.shape[2], k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(
+                            jnp.asarray(q.shape[-1], jnp.float32))
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, -1)
+    return jnp.einsum("bhst,bhtd->bhsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence (obviously-correct oracle).
+
+    x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, G, N)."""
+    Bt, L, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp       # (Bt,H,P), (Bt,H), (Bt,H,N), (Bt,H,N)
+        decay = jnp.exp(dtt * A)    # (Bt,H)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dtt,
+                         xt.astype(jnp.float32), bt)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((Bt, H, Pd, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,122 @@
+"""Ring matmul mod 2^32 / 2^64 on the TPU MXU via signed base-256 digits.
+
+The TPU adaptation of CrypTen's integer-ring GEMM (DESIGN.md §3): the
+MXU has no int32/int64 path, but int8 x int8 -> int32 is native.  Each
+int32 operand is decomposed into four signed digits d_i in [-128, 127]
+(balanced base 256 with carry), so
+
+    x . y  =  sum_{i,j}  (d_i(x) . d_j(y)) * 2^{8(i+j)}        (exact)
+
+* mod 2^32 ("narrow"): terms with i+j > 3 vanish -> 10 int8 MXU dots,
+  int32 accumulation (two's-complement wraparound IS mod 2^32).
+* exact-mod-2^64 ("wide"): all 16 digit pairs accumulate into an int64
+  scratch (int64 add/shift lowers to the VPU; the dots stay int8 MXU).
+  Used by ops.ring64_matmul to compose the full Z_{2^64} GEMM out of
+  one wide + two narrow passes.
+
+Grid (M/bm, N/bn, K/bk); K is the sequential minor axis accumulating
+into a VMEM scratch tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DIGITS = 4
+
+
+def _signed_digits(x):
+    """int32 -> (4 int8 digit planes, effective carry gamma in {-1,0,1}).
+
+    Balanced base-256 digits reconstruct the *unsigned* low word:
+    x_u == sum_i d_i 2^{8i} + carry * 2^32.  Relative to the signed
+    value x_s = x_u - 2^32*[x<0], the digit sum is
+    x_s - 2^32*gamma with gamma = carry - [x<0]; the narrow (mod 2^32)
+    product drops gamma, the wide (mod 2^64) product adds the
+    2^32-weighted gamma cross terms."""
+    out = []
+    carry = jnp.zeros_like(x)
+    for i in range(DIGITS):
+        limb = jnp.bitwise_and(jnp.right_shift(x, 8 * i), 0xFF) + carry
+        d = jnp.bitwise_and(limb + 128, 0xFF) - 128
+        carry = jnp.right_shift(limb - d, 8)
+        out.append(d.astype(jnp.int8))
+    neg = jnp.bitwise_and(jnp.right_shift(x, 31), 1)
+    return out, (carry - neg).astype(jnp.int8)
+
+
+def _ring_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, wide: bool,
+                        k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    da, ca = _signed_digits(a_ref[...].astype(jnp.int32))
+    db, cb = _signed_digits(b_ref[...].astype(jnp.int32))
+    acc = acc_ref[...]
+    for i in range(DIGITS):
+        for j in range(DIGITS):
+            p = i + j
+            if not wide and p > 3:
+                continue  # 2^{8p} == 0 mod 2^32
+            dot = jax.lax.dot_general(
+                da[i], db[j], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            if wide:
+                acc += dot.astype(jnp.int64) << (8 * p)
+            else:
+                acc += dot << (8 * p)
+    if wide:
+        # digit sums represent x - carry*2^32: add the 2^32-weighted
+        # cross terms (carry . digits), mod 2^32, shifted into the
+        # high word (8 extra int8 dots)
+        corr = jnp.zeros(acc.shape, jnp.int32)
+        for j in range(DIGITS):
+            corr += jax.lax.dot_general(
+                ca, db[j], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32) << (8 * j)
+            corr += jax.lax.dot_general(
+                da[j], cb, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32) << (8 * j)
+        acc += corr.astype(jnp.int64) << 32
+    acc_ref[...] = acc
+
+    @pl.when(k == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("wide", "bm", "bn", "bk",
+                                             "interpret"))
+def ring_matmul_p(a, b, *, wide: bool = False, bm: int = 128,
+                  bn: int = 128, bk: int = 128, interpret: bool = True):
+    """a: (M, K) int32, b: (K, N) int32 -> (M, N) int32 (mod 2^32) or
+    int64 (exact signed product accumulated mod 2^64) when wide."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        (a.shape, b.shape, (bm, bn, bk))
+    k_steps = K // bk
+    out_dtype = jnp.int64 if wide else jnp.int32
+    kernel = functools.partial(_ring_matmul_kernel, wide=wide,
+                               k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), out_dtype)],
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32))

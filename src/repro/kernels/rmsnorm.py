@@ -1,0 +1,58 @@
+"""Fused RMSNorm / LayerNorm — P1's Pi_PPLN plaintext evaluation.
+
+Row-blocked: statistics and affine fused in VMEM (one HBM read + one
+write per element instead of ~4)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _norm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float,
+                 subtract_mean: bool):
+    x = x_ref[...].astype(jnp.float32)
+    if subtract_mean:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        x = x - mu
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)
+    if b_ref is not None:
+        y = y + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "layernorm", "bm",
+                                             "interpret"))
+def norm_p(x, gamma, beta=None, *, eps: float = 1e-6,
+           layernorm: bool = False, bm: int = 8, interpret: bool = True):
+    """RMSNorm (default) or LayerNorm over the last axis."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm = max(min(bm, m), 1)
+    while m % bm:
+        bm -= 1
+    has_beta = beta is not None
+    kernel = functools.partial(
+        _norm_kernel if has_beta else
+        (lambda xr, gr, orf, **kw: _norm_kernel(xr, gr, None, orf, **kw)),
+        eps=eps, subtract_mean=layernorm)
+    in_specs = [pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                pl.BlockSpec((n,), lambda i: (0,))]
+    args = [x2, gamma]
+    if has_beta:
+        in_specs.append(pl.BlockSpec((n,), lambda i: (0,)))
+        args.append(beta)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(orig_shape)

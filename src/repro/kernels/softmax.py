@@ -1,0 +1,41 @@
+"""Fused row softmax — P1's hot plaintext op in Pi_PPSM (DESIGN.md §4).
+
+One pass per row block: rows live in VMEM, max/exp/sum/normalize fused
+(vs 4 HBM round-trips unfused).  Rows up to ~1M fp32 elements fit VMEM
+at bm=1; ops.py picks bm so bm * N * 4B stays under the VMEM budget."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = (e / s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret"))
+def softmax_p(x, *, bm: int = 8, interpret: bool = True):
+    """Softmax over the last axis.  x: (..., M, N) flattened to (M', N)."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    x2 = x.reshape(-1, n)
+    m = x2.shape[0]
+    bm = max(min(bm, m), 1)
+    while m % bm:
+        bm -= 1
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(orig_shape)

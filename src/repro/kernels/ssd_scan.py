@@ -1,0 +1,80 @@
+"""Chunked SSD scan (Mamba2) — P1's plaintext hot loop for Pi_PPSSD.
+
+Grid (B, L/Q): the chunk axis is sequential, carrying the (H, P, N)
+inter-chunk state in VMEM scratch.  Within a chunk the quadratic
+attention-like form runs on the MXU; the state update is one outer
+product + decay per chunk (vs per token in the naive recurrence)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int, rep: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q, H)
+    A = a_ref[...].astype(jnp.float32)        # (H,)
+    Bv = b_ref[0].astype(jnp.float32)         # (Q, G, N)
+    Cv = c_ref[0].astype(jnp.float32)
+    Bh = jnp.repeat(Bv, rep, axis=1)          # (Q, H, N)
+    Ch = jnp.repeat(Cv, rep, axis=1)
+
+    a = dt * A                                # (Q, H), <= 0
+    cA = jnp.cumsum(a, axis=0)
+    # intra-chunk quadratic part
+    seg = cA[:, None, :] - cA[None, :, :]     # (Q, S, H)
+    iot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jot = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where((jot <= iot)[:, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("qhn,shn->qsh", Ch, Bh) * decay \
+        * dt[None, :, :]
+    y = jnp.einsum("qsh,shp->qhp", scores, x)
+    # inter-chunk contribution from carried state
+    state = state_ref[...]                    # (H, P, N)
+    y = y + jnp.einsum("qhn,hpn->qhp", Ch, state) \
+        * jnp.exp(cA)[:, :, None]
+    # state update
+    last = cA[-1:, :]                         # (1, H)
+    w = jnp.exp(last - cA) * dt               # (Q, H)
+    local = jnp.einsum("qhn,qhp,qh->hpn", Bh, x, w)
+    state_ref[...] = state * jnp.exp(last[0])[:, None, None] + local
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_p(x, dt, A, B, C, *, chunk: int = 64,
+               interpret: bool = True):
+    """x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, G, N)."""
+    Bt, L, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    chunk = max(min(chunk, L), 1)
+    while L % chunk:
+        chunk -= 1
+    rep = H // G
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, rep=rep)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bt, L // chunk),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, Pd), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, chunk, G, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, G, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, H, Pd), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bt, L, H, Pd), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+# ruff: noqa: E402
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh)
+cell, record memory/cost/collective analysis for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import sharding as shr
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import data_size, make_production_mesh
+from repro.launch.specs import CACHE_PAD, batch_specs, cache_specs, \
+    input_specs, param_specs
+from repro.models.config import SHAPES
+from repro.models.registry import get_api
+from repro.models import shard_ctx
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_loop import build_train_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+def build_step(cfg, cell, mesh, num_micro):
+    """Returns (fn, args_specs, in_shardings, donate)."""
+    api = get_api(cfg)
+    gb = cell.global_batch
+    if cell.kind == "train":
+        step = build_train_step(cfg, OptConfig(), num_microbatches=num_micro)
+        p = param_specs(cfg)
+        o = jax.eval_shape(partial(init_opt_state, opt=OptConfig()), p)
+        b = batch_specs(cfg, cell)
+        ps = shr.param_shardings(cfg, p, mesh)
+        os_ = shr.opt_shardings(cfg, o, ps)
+        bs = shr.batch_shardings(cfg, b, mesh, gb)
+        return step, (p, o, b), (ps, os_, bs), (0, 1)
+    if cell.kind == "prefill":
+        max_len = cell.seq_len + CACHE_PAD
+
+        def step(params, batch):
+            logits, cache, _ = api.prefill(cfg, params, batch, max_len)
+            return logits, cache
+
+        p = param_specs(cfg)
+        b = batch_specs(cfg, cell)
+        ps = shr.param_shardings(cfg, p, mesh)
+        bs = shr.batch_shardings(cfg, b, mesh, gb)
+        return step, (p, b), (ps, bs), ()
+    # decode
+    max_len = cell.seq_len + CACHE_PAD
+
+    def step(params, cache, tokens, pos):
+        return api.decode_step(cfg, params, cache, tokens, pos)
+
+    p = param_specs(cfg)
+    c = cache_specs(cfg, cell)
+    b = batch_specs(cfg, cell)
+    ps = shr.param_shardings(cfg, p, mesh)
+    cs = shr.cache_shardings(cfg, c, mesh, gb, max_len)
+    bs = shr.batch_shardings(cfg, b, mesh, gb)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    pos_sh = NamedSharding(mesh, P())
+    return step, (p, c, b["tokens"], jax.ShapeDtypeStruct((), jnp.int32)), \
+        (ps, cs, bs["tokens"], pos_sh), (1,)
+
+
+def mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            raise ValueError
+        return {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception:
+        return None
+
+
+def arg_bytes_per_device(args_specs, shardings, mesh):
+    """Fallback/analytic per-device input bytes from the shardings."""
+    total = 0
+    for spec_tree, sh_tree in zip(args_specs, shardings):
+        leaves = jax.tree.leaves(spec_tree)
+        shs = jax.tree.leaves(sh_tree, is_leaf=lambda x: hasattr(x, "spec"))
+        for leaf, sh in zip(leaves, shs):
+            n = 1
+            for s in leaf.shape:
+                n *= s
+            n *= jnp.dtype(leaf.dtype).itemsize
+            shards = 1
+            for ax in jax.tree.leaves(tuple(sh.spec)):
+                if ax is not None:
+                    shards *= mesh.shape[ax]
+            total += n // max(shards, 1)
+    return total
+
+
+def _make_mesh(multi_pod: bool, mesh_spec: str | None):
+    if mesh_spec:
+        dims = tuple(int(x) for x in mesh_spec.split("x"))
+        axes = ("pod", "data", "model") if len(dims) == 3 \
+            else ("data", "model")
+        return jax.make_mesh(dims, axes)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, reduced: bool = False,
+             mesh_spec: str | None = None, overrides: dict | None = None):
+    cfg = get_config(arch, reduced=reduced)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    cell = SHAPES[shape]
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape, "skipped":
+                "long_500k requires sub-quadratic attention "
+                "(DESIGN.md §Arch-applicability)"}
+    mesh = _make_mesh(multi_pod, mesh_spec)
+    num_micro = max(cell.global_batch // data_size(mesh), 1) \
+        if cell.kind == "train" else 1
+    num_micro = min(num_micro, 16)
+    t0 = time.time()
+    step, args, in_sh, donate = build_step(cfg, cell, mesh, num_micro)
+    with mesh, shard_ctx.use_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    chips = 1
+    for s in mesh.shape.values():
+        chips *= s
+    stats = analyze_hlo(hlo, default_trip=cfg.num_layers,
+                        n_devices=chips)
+    # analyze_hlo gives PER-DEVICE dot/conv flops, memory-traffic proxy
+    # and collective wire bytes, with loop trip counts applied.
+    # Globalize (x chips) for the prescribed roofline formulas; the
+    # terms below divide by chips again, i.e. terms are per-chip seconds.
+    flops = stats["flops"] * chips
+    bytes_accessed = stats["mem_bytes"] * chips
+    coll = {k: float(v) * chips for k, v in stats["collectives"].items()}
+    coll["trips"] = stats["trips"]
+    mem = mem_analysis(compiled)
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    tokens = cell.global_batch * (cell.seq_len if cell.kind == "train"
+                                  else (cell.seq_len if cell.kind ==
+                                        "prefill" else 1))
+    model_flops = cfg.flops_per_token(training=(cell.kind == "train")) \
+        * tokens
+    if cell.kind == "decode":
+        # decode attention reads the whole KV state: add 2*cache FLOPs
+        model_flops += 0  # reported separately via cache bytes
+
+    result = {
+        "arch": arch, "shape": shape, "overrides": overrides or {},
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "num_microbatches": num_micro,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": flops, "hlo_bytes": bytes_accessed,
+        "xla_cost_raw": {"flops": raw_flops, "bytes": raw_bytes},
+        "collective_bytes": coll, "memory_analysis": mem,
+        "arg_bytes_per_device": arg_bytes_per_device(args, in_sh, mesh),
+        "model_flops": model_flops,
+        "terms": {
+            "compute_s": flops / (chips * PEAK_FLOPS),
+            "memory_s": bytes_accessed / (chips * HBM_BW),
+            "collective_s": coll["total"] / (chips * ICI_BW),
+        },
+    }
+    t = result["terms"]
+    result["bottleneck"] = max(t, key=t.get)
+    result["useful_flops_frac"] = (model_flops / flops) if flops else None
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh, e.g. 4x4 or 2x2x4 (tests)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf variants)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output file name")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in ([False, True] if (args.both_meshes or True)
+                           else [args.multi_pod]):
+                    cells.append((arch, shape, mp))
+    else:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_name = args.mesh or ('2x16x16' if mp else '16x16')
+        tag = f"{arch}_{shape}_{mesh_name}" + \
+            (f"_{args.tag}" if args.tag else "")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape, mp, reduced=args.reduced,
+                           mesh_spec=args.mesh, overrides=overrides)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if "error" in res:
+            print(f"  ERROR {res['error'][:300]}")
+        elif "skipped" in res:
+            print(f"  skipped: {res['skipped']}")
+        else:
+            print(f"  ok flops={res['hlo_flops']:.3e} "
+                  f"coll={res['collective_bytes']['total']:.3e}B "
+                  f"bottleneck={res['bottleneck']} "
+                  f"compile={res['compile_s']}s")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

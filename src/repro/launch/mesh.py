@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e pod), or 2 pods = 512 chips.
+
+    The `pod` axis carries (a) extra data parallelism for training and
+    (b) the two-party mapping of the Centaur protocol for private
+    serving (share exchange = collective-permute over `pod`)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices: int = 8, model: int = 2):
+    data = devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes carrying data parallelism (batch sharding)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,141 @@
+"""Rule-based GSPMD sharding assignment.
+
+Parameters: the largest divisible axis of every >=2D leaf is tensor-
+parallel over `model`; when `fsdp` is set (default for >=30B configs)
+the next divisible axis is additionally sharded over `data` (FSDP /
+ZeRO-3 for params; optimizer moments always follow the param spec, i.e.
+ZeRO-1 comes for free).  Stacked-layer leading axes and tiny leaves stay
+replicated.  Caches: batch over the DP axes, then the largest non-
+sequence axis over `model`.
+
+These are the *baseline* rules; §Perf iterations override per-cell via
+the `overrides` hook.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+from .mesh import data_size, dp_axes, model_size
+
+FSDP_THRESHOLD = 2_000_000  # leaves bigger than this also shard over data
+
+
+def _assign(shape, skip_axes, mesh, fsdp_leaf):
+    m = model_size(mesh)
+    d = data_size(mesh)
+    spec = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    tp_axis = None
+    for i in order:
+        if i in skip_axes:
+            continue
+        if shape[i] % m == 0:
+            spec[i] = "model"
+            tp_axis = i
+            break
+    if fsdp_leaf:
+        for i in order:
+            if i in skip_axes or i == tp_axis:
+                continue
+            if shape[i] % d == 0:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_pspec(cfg: ModelConfig, path, leaf, mesh, fsdp: bool | None = None):
+    shape = leaf.shape
+    if len(shape) < 2:
+        return P()
+    skip = set()
+    # stacked per-layer leading axis stays unsharded
+    if shape[0] in (cfg.num_layers, getattr(cfg, "encoder_layers", -1),
+                    cfg.num_layers // max(cfg.attn_every, 1)):
+        skip.add(0)
+    if fsdp is None:
+        fsdp = cfg.param_count() > 20_000_000_000
+    big = 1
+    for s in shape:
+        big *= s
+    return _assign(shape, skip, mesh, fsdp and big > FSDP_THRESHOLD)
+
+
+def param_shardings(cfg: ModelConfig, params_shapes, mesh,
+                    fsdp: bool | None = None, overrides=None):
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if overrides:
+            for pat, spec in overrides.items():
+                if pat in name:
+                    return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, param_pspec(cfg, path, leaf, mesh, fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_pspec(cfg: ModelConfig, leaf_shape, mesh, global_batch):
+    dp = dp_axes(mesh)
+    d = data_size(mesh)
+    if len(leaf_shape) == 0:
+        return P()
+    # M-RoPE position ids: (3, B, S)
+    if len(leaf_shape) >= 2 and leaf_shape[0] == 3 \
+            and leaf_shape[1] == global_batch:
+        return P(None, dp if global_batch % d == 0 else None)
+    if leaf_shape[0] == global_batch and global_batch % d == 0:
+        return P(dp)
+    return P()
+
+
+def batch_shardings(cfg: ModelConfig, batch_shapes, mesh, global_batch):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_pspec(cfg, leaf.shape, mesh,
+                                                     global_batch)),
+        batch_shapes)
+
+
+def cache_pspec(cfg: ModelConfig, leaf_shape, mesh, batch, max_len):
+    m = model_size(mesh)
+    d = data_size(mesh)
+    dp = dp_axes(mesh)
+    spec = [None] * len(leaf_shape)
+    # batch axis: first axis whose size == batch (after the layer axis)
+    b_axis = None
+    for i, s in enumerate(leaf_shape[1:], start=1):
+        if s == batch:
+            b_axis = i
+            break
+    if b_axis is not None and batch % d == 0:
+        spec[b_axis] = dp
+    order = sorted(range(len(leaf_shape)), key=lambda i: -leaf_shape[i])
+    for i in order:
+        if i == 0 or i == b_axis or leaf_shape[i] == max_len:
+            continue  # layer axis / batch / sequence stay unsharded
+        if leaf_shape[i] % m == 0:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_shardings(cfg: ModelConfig, cache_shapes, mesh, batch, max_len):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, cache_pspec(cfg, leaf.shape, mesh, batch, max_len)),
+        cache_shapes)
+
+
+def opt_shardings(cfg: ModelConfig, opt_shapes, param_shardings_tree):
+    """ZeRO-1: moments follow the param shardings (m/v mirror params)."""
+    mesh = jax.tree.leaves(param_shardings_tree)[0].mesh
+
+    def like(sub):
+        return jax.tree.map(lambda p, s: s, sub, param_shardings_tree)
+
+    out = {"m": like(opt_shapes["m"]), "v": like(opt_shapes["v"]),
+           "step": NamedSharding(mesh, P())}
+    if "err" in opt_shapes:
+        out["err"] = like(opt_shapes["err"])
+    return out

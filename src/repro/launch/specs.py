@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every dry-run cell — weak-type
+correct, shardable, zero allocation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SHAPES, ModelConfig, ShapeCell
+from repro.models.registry import get_api
+
+CACHE_PAD = 128  # decode cells write one token past the prefilled cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def param_specs(cfg: ModelConfig):
+    api = get_api(cfg)
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.key(0)))
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, kind: str | None = None):
+    """Model inputs for one cell.  kind: train | prefill | decode."""
+    kind = kind or cell.kind
+    B, S = cell.global_batch, cell.seq_len
+    out = {}
+    if kind == "decode":
+        out["tokens"] = sds((B, 1), jnp.int32)
+        return out
+    if cfg.family == "encdec":
+        dec = max(S // cfg.decoder_ratio, 8)
+        out["embeds"] = sds((B, S, cfg.d_model), cfg.dtype)
+        out["tokens"] = sds((B, dec), jnp.int32)
+        if kind == "train":
+            out["labels"] = sds((B, dec), jnp.int32)
+        return out
+    if cfg.input_kind == "embeddings":
+        out["embeds"] = sds((B, S, cfg.d_model), cfg.dtype)
+        if cfg.mrope_sections:
+            out["positions"] = sds((3, B, S), jnp.int32)
+        if kind == "train":
+            out["labels"] = sds((B, S), jnp.int32)
+        return out
+    out["tokens"] = sds((B, S), jnp.int32)
+    if kind == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Decode cells: the filled KV cache after a `seq_len` prefill."""
+    api = get_api(cfg)
+    max_len = cell.seq_len + CACHE_PAD
+    pre_batch = batch_specs(cfg, cell, kind="prefill")
+
+    def run(params, batch):
+        _, cache, _ = api.prefill(cfg, params, batch, max_len=max_len)
+        return cache
+
+    return jax.eval_shape(run, param_specs(cfg), pre_batch)
+
+
+def input_specs(cfg: ModelConfig, cell_name: str):
+    """Everything dryrun needs for one (arch x shape) cell."""
+    cell = SHAPES[cell_name]
+    out = {"cell": cell, "params": param_specs(cfg),
+           "batch": batch_specs(cfg, cell)}
+    if cell.kind == "decode":
+        out["cache"] = cache_specs(cfg, cell)
+        out["pos"] = sds((), jnp.int32)
+    return out

@@ -1,0 +1,202 @@
+"""Unified model configuration covering the assigned architecture pool.
+
+One frozen dataclass parameterizes every family: dense decoder LMs
+(llama3 / minitron / coder / smollm), fine-grained MoE (deepseek-moe,
+deepseek-v2 with MLA), VLM backbone (qwen2-vl, M-RoPE), enc-dec audio
+backbone (whisper), SSM (mamba2), hybrid (zamba2), plus the paper's own
+BERT / GPT-2 models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | encoder
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0           # 0 -> d_model // num_heads
+
+    # block flavour
+    norm_type: str = "rmsnorm"   # rmsnorm | layernorm
+    act: str = "silu"            # silu | gelu
+    ffn_type: str = "swiglu"     # swiglu | mlp
+    pos_embed: str = "rope"      # rope | learned | none
+    causal: bool = True
+    prenorm: bool = True         # False: post-LN (BERT)
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: tuple = ()   # qwen2-vl M-RoPE (t, h, w) half-dim split
+
+    # MoE
+    n_routed_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_loss: float = 0.001
+
+    # MLA (deepseek-v2)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM (mamba2 / zamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    conv_kernel: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 0          # zamba2: shared attn block cadence
+
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    decoder_ratio: int = 8       # dec_len = seq_len // ratio for shapes
+
+    # inputs
+    input_kind: str = "tokens"   # tokens | embeddings (vlm/audio stubs)
+
+    # numerics / training
+    dtype_str: str = "bfloat16"
+    max_seq_len: int = 1 << 20
+    norm_eps: float = 1e-5
+    remat: str = "full"          # full | dots | none
+    # §Perf hillclimb levers (baseline values first)
+    attention_impl: str = "naive"   # naive | flash (online-softmax blocks)
+    flash_block: int = 512
+    moe_shard: str = "auto"         # auto | ep (explicit expert sharding)
+    moe_rank_impl: str = "cumsum"   # cumsum | sort (O(T*K) dispatch)
+    scores_dtype: str = "float32"   # float32 | bfloat16 score matmuls
+
+    @property
+    def dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype_str]
+
+    @property
+    def dh(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def q_groups(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic state: SSM / hybrid archs run long_500k."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter count (for roofline MODEL_FLOPS = 6 N D) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embedding
+        if not self.tie_embeddings and self.family != "encoder":
+            n += self.vocab_size * d
+        if self.pos_embed == "learned":
+            n += 4096 * d
+
+        def attn_params() -> int:
+            if self.use_mla:
+                q = (d * self.q_lora_rank + self.q_lora_rank * self.num_heads
+                     * (self.qk_nope_head_dim + self.qk_rope_head_dim))
+                kv = (d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                      + self.kv_lora_rank * self.num_heads
+                      * (self.qk_nope_head_dim + self.v_head_dim))
+                o = self.num_heads * self.v_head_dim * d
+                return q + kv + o
+            dh = self.dh
+            return (d * self.num_heads * dh + 2 * d * self.num_kv_heads * dh
+                    + self.num_heads * dh * d)
+
+        def ffn_params(dff: int) -> int:
+            mult = 3 if self.ffn_type == "swiglu" else 2
+            return mult * d * dff
+
+        def moe_params(active: bool) -> int:
+            routed = self.top_k if active else self.n_routed_experts
+            n = routed * ffn_params(self.moe_d_ff)
+            n += self.n_shared_experts * ffn_params(self.moe_d_ff)
+            n += d * self.n_routed_experts  # router
+            return n
+
+        def mamba_params() -> int:
+            di, G, N, H = (self.d_inner, self.ssm_ngroups, self.ssm_state,
+                           self.ssm_nheads)
+            in_p = d * (2 * di + 2 * G * N + H)
+            conv = (di + 2 * G * N) * self.conv_kernel
+            out_p = di * d
+            return in_p + conv + out_p + 3 * H + di
+
+        if self.family in ("dense", "encoder"):
+            per = attn_params() + ffn_params(self.d_ff)
+            n += L * (per + 2 * d)
+        elif self.family == "moe":
+            per = attn_params() + moe_params(active_only)
+            n += L * (per + 2 * d)
+        elif self.family == "ssm":
+            n += L * (mamba_params() + d)
+        elif self.family == "hybrid":
+            n += L * (mamba_params() + d)
+            n_attn = (L + self.attn_every - 1) // self.attn_every
+            # one shared block's weights, applied n_attn times
+            n += attn_params() + ffn_params(self.d_ff) + 2 * d
+        elif self.family == "encdec":
+            enc = self.encoder_layers * (attn_params()
+                                         + ffn_params(self.d_ff) + 2 * d)
+            dec = L * (2 * attn_params() + ffn_params(self.d_ff) + 3 * d)
+            n += enc + dec
+        n += d  # final norm
+        return int(n)
+
+    def flops_per_token(self, training: bool = False) -> float:
+        """MODEL_FLOPS/token: 2*N_active (fwd) or 6*N_active (train)."""
+        n = self.param_count(active_only=True)
+        # embeddings are lookups, not matmuls
+        n -= self.vocab_size * self.d_model
+        return (6.0 if training else 2.0) * n
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (arch x input-shape) dry-run cell."""
+    name: str          # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,497 @@
+"""Shared plaintext building blocks: norms, RoPE/M-RoPE, GQA and MLA
+attention (with KV caches), SwiGLU/MLP FFN, capacity-based MoE.
+
+All functions are pure; params are plain dicts of arrays.  Matmuls run in
+the config dtype with f32 accumulation; norms and softmax in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import shard_ctx
+from .config import ModelConfig
+
+P32 = jnp.float32
+
+
+def _dot(x, w):
+    """x @ w^T with f32 accumulation."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (w.ndim - 1,)), ((), ())),
+        preferred_element_type=P32).astype(x.dtype)
+
+
+def dense(p, x):
+    y = _dot(x, p["w"])
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---- norms ------------------------------------------------------------------
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(P32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (p["g"].astype(P32) * xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+def layernorm(p, x, eps):
+    xf = x.astype(P32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (p["g"].astype(P32) * y + p["b"].astype(P32)).astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, p, x):
+    fn = rmsnorm if cfg.norm_type == "rmsnorm" else layernorm
+    return fn(p, x, cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    p = {"g": jnp.ones((d,), P32)}
+    if cfg.norm_type == "layernorm":
+        p["b"] = jnp.zeros((d,), P32)
+    return p
+
+
+# ---- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig, positions, dh: int):
+    """positions: (..., S) int -> cos/sin (..., S, dh//2) f32."""
+    half = dh // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=P32) / half))
+    ang = positions[..., None].astype(P32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, half) or (B, S, H, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == x.ndim - 1:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    xf1, xf2 = x1.astype(P32), x2.astype(P32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def mrope_freqs(cfg: ModelConfig, position_ids, dh: int):
+    """Qwen2-VL M-RoPE: position_ids (3, B, S) — temporal/height/width
+    streams; cfg.mrope_sections splits the half-dim between streams."""
+    half = dh // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=P32) / half))
+    ang = position_ids[..., None].astype(P32) * inv      # (3, B, S, half)
+    idx = jnp.repeat(jnp.arange(3), jnp.asarray(cfg.mrope_sections),
+                     total_repeat_length=half)           # stream per dim
+    sel = jax.nn.one_hot(idx, 3, dtype=P32)              # (half, 3)
+    ang_sel = jnp.einsum("tbsh,ht->bsh", ang, sel)
+    return jnp.cos(ang_sel), jnp.sin(ang_sel)
+
+
+# ---- attention --------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key):
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.dh
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    mk = lambda k, o, i: (jax.random.normal(k, (o, i), P32) * sc  # noqa: E731
+                          ).astype(cfg.dtype)
+    return {
+        "wq": mk(ks[0], h * dh, d),
+        "wk": mk(ks[1], hk * dh, d),
+        "wv": mk(ks[2], hk * dh, d),
+        "wo": mk(ks[3], d, h * dh),
+    }
+
+
+def _sdpa(q, k, v, mask, dh):
+    """q: (B,Hk,G,S,dh), k/v: (B,Hk,T,dh), mask: (B,1,1,S,T) or None."""
+    scores = jnp.einsum("bhgsd,bhtd->bhgst", q, k,
+                        preferred_element_type=P32) / jnp.sqrt(
+                            jnp.asarray(dh, P32))
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(P32).min)
+    probs = jax.nn.softmax(scores.astype(P32), axis=-1)
+    return jnp.einsum("bhgst,bhtd->bhgsd", probs.astype(v.dtype), v)
+
+
+def _sdpa_flash(q, k, v, dh, *, q_offset, kv_len, causal, block: int,
+                score_dtype=P32):
+    """Online-softmax attention: lax.scan over KV blocks so the (S, T)
+    score matrix never materializes in HBM (§Perf lever; the Pallas
+    kernels/flash_attention.py is the per-core TPU realization — this is
+    its GSPMD-compatible whole-array form).
+
+    q: (B,Hk,G,S,dh); k/v: (B,Hk,T,dh).  `kv_len` masks cache tail;
+    `q_offset` is the absolute position of q[0] for causal masking."""
+    B, Hk, G, S, _ = q.shape
+    T = k.shape[2]
+    blk = block
+    while T % blk:
+        blk //= 2
+    nb = T // blk
+    qf = q.astype(score_dtype) / jnp.sqrt(jnp.asarray(dh, score_dtype))
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, i):
+        m_prev, l_prev, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * blk, blk, 2
+                                          ).astype(score_dtype)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * blk, blk, 2).astype(P32)
+        s = jnp.einsum("bhgsd,bhtd->bhgst", qf, kb,
+                       preferred_element_type=score_dtype)
+        k_pos = i * blk + jnp.arange(blk)
+        valid = k_pos[None, :] < kv_len
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgst,bhtd->bhgsd", p, vb)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, Hk, G, S, 1), -1e30, P32),
+            jnp.zeros((B, Hk, G, S, 1), P32),
+            jnp.zeros((B, Hk, G, S, v.shape[-1]), P32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(nb))
+    return (acc / jnp.maximum(l, 1e-30)).astype(v.dtype)
+
+
+def attention(cfg: ModelConfig, p, x, *, positions, cache=None,
+              cache_pos=None, rope_cs=None):
+    """GQA attention.  Training/prefill: cache=None or write-through.
+    Decode: x is (B, 1, d), cache holds (B, Hk, T, dh) K/V.
+
+    Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    q = dense({"w": p["wq"]}, x).reshape(B, S, hk, g, dh)
+    k = dense({"w": p["wk"]}, x).reshape(B, S, hk, dh)
+    v = dense({"w": p["wv"]}, x).reshape(B, S, hk, dh)
+
+    if cfg.pos_embed == "rope":
+        if rope_cs is None:
+            rope_cs = rope_freqs(cfg, positions, dh)
+        cos, sin = rope_cs
+        q = apply_rope(q.reshape(B, S, hk * g, dh), cos, sin
+                       ).reshape(B, S, hk, g, dh)
+        k = apply_rope(k, cos, sin)
+
+    # §Perf it1: shard attention over kv-heads, then query groups, then
+    # the query-sequence axis — NEVER the dh contraction (sharding dh
+    # turns every score matmul into an (S,T)-sized all-reduce, the
+    # dominant baseline collective for kv_heads < TP-degree archs)
+    q = shard_ctx.shard(q.transpose(0, 2, 3, 1, 4), model_axes=(1, 2, 3),
+                        batch_axis=0)                     # (B,hk,g,S,dh)
+    k = shard_ctx.shard(k.transpose(0, 2, 1, 3), model_axes=(1,),
+                        batch_axis=0)                     # (B,hk,S,dh)
+    v = shard_ctx.shard(v.transpose(0, 2, 1, 3), model_axes=(1,),
+                        batch_axis=0)
+
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, 0, cache_pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, 0, cache_pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        # flash pays per-block overheads; a single decode query row is
+        # strictly cheaper through the fused naive path
+        if cfg.attention_impl == "flash" and S > 1:
+            out = _sdpa_flash(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                              dh, q_offset=cache_pos,
+                              kv_len=cache_pos + S, causal=True,
+                              block=cfg.flash_block,
+                              score_dtype=jnp.dtype(cfg.scores_dtype))
+        else:
+            T = ck.shape[2]
+            kv_pos = jnp.arange(T)
+            # valid = written positions; causal within the new block
+            q_pos = cache_pos + jnp.arange(S)
+            mask = (kv_pos[None, :] <= q_pos[:, None])[None, None, None]
+            out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask,
+                        dh)
+    else:
+        new_cache = None
+        if cfg.attention_impl == "flash" and S > 1:
+            out = _sdpa_flash(q, k, v, dh, q_offset=0, kv_len=S,
+                              causal=cfg.causal, block=cfg.flash_block,
+                              score_dtype=jnp.dtype(cfg.scores_dtype))
+        elif cfg.causal:
+            q_pos = jnp.arange(S)
+            mask = (q_pos[None, :] <= q_pos[:, None])[None, None, None]
+            out = _sdpa(q, k, v, mask, dh)
+        else:
+            out = _sdpa(q, k, v, None, dh)
+
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
+    return dense({"w": p["wo"]}, out), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch, max_len, dtype):
+    shp = (batch, cfg.num_kv_heads, max_len, cfg.dh)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+# ---- MLA (deepseek-v2) ------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key):
+    d, h = cfg.d_model, cfg.num_heads
+    qn, qr, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    sc = d ** -0.5
+    mk = lambda k, o, i: (jax.random.normal(k, (o, i), P32) * sc  # noqa: E731
+                          ).astype(cfg.dtype)
+    return {
+        "wq_a": mk(ks[0], qlr, d),
+        "q_norm": init_norm(cfg, qlr),
+        "wq_b": mk(ks[1], h * (qn + qr), qlr),
+        "wkv_a": mk(ks[2], kvlr + qr, d),
+        "kv_norm": init_norm(cfg, kvlr),
+        "wkv_b": mk(ks[3], h * (qn + vd), kvlr),
+        "wo": mk(ks[4], d, h * vd),
+    }
+
+
+def mla_attention(cfg: ModelConfig, p, x, *, positions, cache=None,
+                  cache_pos=None):
+    """Multi-head Latent Attention with compressed-KV cache.
+
+    Cache layout: {"ckv": (B, T, kv_lora), "kpe": (B, T, qr)} — the MLA
+    memory saving (latent cached, K/V up-projected on use).
+    Returns (out, new_cache)."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qn, qr, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    q = dense({"w": p["wq_b"]},
+              norm(cfg, p["q_norm"], dense({"w": p["wq_a"]}, x)))
+    q = q.reshape(B, S, h, qn + qr)
+    q_nope, q_pe = q[..., :qn], q[..., qn:]
+
+    kv_a = dense({"w": p["wkv_a"]}, x)                   # (B,S,kvlr+qr)
+    ckv = norm(cfg, p["kv_norm"], kv_a[..., :cfg.kv_lora_rank])
+    k_pe = kv_a[..., cfg.kv_lora_rank:]                  # (B,S,qr) shared
+
+    cos, sin = rope_freqs(cfg, positions, qr)
+    q_pe = apply_rope(q_pe, cos, sin)
+    k_pe = apply_rope(k_pe[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    if cache is not None:
+        ckv_full = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_pos, 0))
+        kpe_full = jax.lax.dynamic_update_slice(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, cache_pos, 0))
+        new_cache = {"ckv": ckv_full, "kpe": kpe_full}
+        ckv_u, kpe_u = ckv_full.astype(x.dtype), kpe_full.astype(x.dtype)
+        T = ckv_u.shape[1]
+        q_pos = cache_pos + jnp.arange(S)
+    else:
+        ckv_u, kpe_u, new_cache = ckv, k_pe, None
+        T = S
+        q_pos = jnp.arange(S)
+
+    # up-project latents to per-head K_nope and V
+    kv = dense({"w": p["wkv_b"]}, ckv_u).reshape(B, T, h, qn + vd)
+    k_nope, v = kv[..., :qn], kv[..., qn:]
+
+    if cfg.attention_impl == "flash" and S > 1:
+        # fold the decoupled RoPE part into one flash call:
+        # concat [q_nope | q_pe] vs [k_nope | k_pe(broadcast)]
+        qc = jnp.concatenate([q_nope, q_pe], -1)          # (B,S,h,qn+qr)
+        kc = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_u[:, :, None, :],
+                                      (B, T, h, qr))], -1)
+        qf = shard_ctx.shard(qc.transpose(0, 2, 1, 3)[:, :, None],
+                             model_axes=(1,), batch_axis=0)
+        kf = shard_ctx.shard(kc.transpose(0, 2, 1, 3),
+                             model_axes=(1,), batch_axis=0)
+        vf = shard_ctx.shard(v.transpose(0, 2, 1, 3),
+                             model_axes=(1,), batch_axis=0)
+        kv_len = (cache_pos + S) if cache is not None else S
+        q_off = cache_pos if cache is not None else 0
+        out = _sdpa_flash(qf, kf, vf, qn + qr, q_offset=q_off,
+                          kv_len=kv_len, causal=True,
+                          block=cfg.flash_block)[:, :, 0]
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, h * vd)
+    else:
+        scores = (jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                             preferred_element_type=P32)
+                  + jnp.einsum("bshd,btd->bhst", q_pe, kpe_u,
+                               preferred_element_type=P32))
+        scores = scores / jnp.sqrt(jnp.asarray(qn + qr, P32))
+        mask = (jnp.arange(T)[None, :] <= q_pos[:, None])[None, None]
+        scores = jnp.where(mask, scores, jnp.finfo(P32).min)
+        probs = jax.nn.softmax(scores.astype(P32), -1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S,
+                                                              h * vd)
+    return dense({"w": p["wo"]}, out), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch, max_len, dtype):
+    return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype)}
+
+
+# ---- FFN --------------------------------------------------------------------
+
+def init_ffn(cfg: ModelConfig, key, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc = d ** -0.5
+    mk = lambda k, o, i: (jax.random.normal(k, (o, i), P32) * sc  # noqa: E731
+                          ).astype(cfg.dtype)
+    if cfg.ffn_type == "swiglu":
+        return {"w_gate": mk(ks[0], f, d), "w_up": mk(ks[1], f, d),
+                "w_down": mk(ks[2], d, f)}
+    return {"w_up": mk(ks[0], f, d), "b_up": jnp.zeros((f,), P32),
+            "w_down": mk(ks[1], d, f), "b_down": jnp.zeros((d,), P32)}
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "relu2":  # minitron / nemotron squared ReLU
+        return jnp.square(jax.nn.relu(x))
+    return jax.nn.gelu(x, approximate=False)
+
+
+def ffn(cfg: ModelConfig, p, x):
+    if cfg.ffn_type == "swiglu":
+        return dense({"w": p["w_down"]},
+                     _act(cfg, dense({"w": p["w_gate"]}, x))
+                     * dense({"w": p["w_up"]}, x))
+    h = _act(cfg, dense({"w": p["w_up"], "b": p["b_up"]}, x))
+    return dense({"w": p["w_down"], "b": p["b_down"]}, h)
+
+
+# ---- MoE (capacity-based, rank-scatter dispatch) ----------------------------
+
+def init_moe(cfg: ModelConfig, key):
+    d, E, f = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    sc = d ** -0.5
+    mk = lambda k, shape: (jax.random.normal(k, shape, P32) * sc  # noqa: E731
+                           ).astype(cfg.dtype)
+    p = {
+        "router": jax.random.normal(ks[0], (E, d), P32) * sc,
+        "w_gate": mk(ks[1], (E, d, f)),
+        "w_up": mk(ks[2], (E, d, f)),
+        "w_down": mk(ks[3], (E, f, d)),
+    }
+    if cfg.n_shared_experts:
+        shared = cfg.replace(ffn_type="swiglu")
+        p["shared"] = init_ffn(shared, ks[4],
+                               cfg.n_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def moe_ffn(cfg: ModelConfig, p, x, router_bias=None):
+    """Top-k routed experts + shared experts (deepseek style).
+
+    Dispatch: per-token top-k -> rank within expert via cumsum ->
+    scatter into an (E, C, d) capacity buffer -> batched expert FFN ->
+    gather back with gate-weighted combine.  Returns (y, aux_loss).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = cfg.n_routed_experts, cfg.top_k
+
+    logits = _dot(xf, p["router"].astype(xf.dtype)).astype(P32)
+    if router_bias is not None:
+        logits = logits + router_bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                  # (T, K)
+    gates = gates / jnp.sum(gates, -1, keepdims=True)
+
+    # load-balancing aux loss (Switch style)
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=P32), 0)
+    mean_probs = jnp.mean(probs, 0)
+    aux = jnp.sum(density * mean_probs) * E * cfg.router_aux_loss
+
+    C = max(int(T * K / E * cfg.capacity_factor), 1)
+    C = -(-C // 8) * 8                                    # align
+
+    flat_e = idx.reshape(-1)                              # (T*K,)
+    if cfg.moe_rank_impl == "sort":
+        # §Perf it1(moe): O(T*K) sort-based ranks — the (T*K, E)
+        # one-hot cumsum is ~E/2 x more HBM traffic (dominant term in
+        # the deepseek-v2 train baseline)
+        order = jnp.argsort(flat_e)                       # stable
+        sorted_e = flat_e[order]
+        seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank_sorted = (jnp.arange(flat_e.shape[0]) - seg_start
+                       ).astype(flat_e.dtype)
+        rank = jnp.zeros_like(flat_e).at[order].set(rank_sorted)
+    else:
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+        ranks = jnp.cumsum(onehot, axis=0) - onehot
+        rank = jnp.sum(ranks * onehot, axis=-1)           # (T*K,)
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)      # E*C = drop slot
+
+    tok = jnp.repeat(xf, K, axis=0)                       # (T*K, d)
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[slot].add(tok)
+    buf = shard_ctx.shard(buf[:-1].reshape(E, C, d), model_axes=(0,))
+
+    h_g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"],
+                     preferred_element_type=P32).astype(xf.dtype)
+    h_u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"],
+                     preferred_element_type=P32).astype(xf.dtype)
+    h = shard_ctx.shard(_act(cfg, h_g) * h_u, model_axes=(0,))
+    out = shard_ctx.shard(
+        jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                   preferred_element_type=P32).astype(xf.dtype),
+        model_axes=(0,))
+
+    gathered = out.reshape(E * C, d)[jnp.minimum(slot, E * C - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = jnp.sum(gathered.reshape(T, K, d)
+                       * gates[..., None].astype(xf.dtype), axis=1)
+
+    if cfg.n_shared_experts:
+        combined = combined + ffn(cfg.replace(ffn_type="swiglu"),
+                                  p["shared"], xf)
+    return combined.reshape(orig_shape), aux
+
+
+# ---- embeddings / heads ------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key, max_pos=4096):
+    ks = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), P32)
+                 * 0.02).astype(cfg.dtype)}
+    if cfg.pos_embed == "learned":
+        p["pos"] = (jax.random.normal(ks[1], (max_pos, cfg.d_model), P32)
+                    * 0.02).astype(cfg.dtype)
+    return p
+
+
+def embed(cfg: ModelConfig, p, tokens, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos_embed == "learned":
+        x = x + jnp.take(p["pos"], positions, axis=0)
+    return x
+
+
+def init_lm_head(cfg: ModelConfig, key):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), P32)
+                  * cfg.d_model ** -0.5).astype(cfg.dtype)}
+
+
+def lm_head(cfg: ModelConfig, p_head, p_embed, x):
+    w = p_embed["tok"] if cfg.tie_embeddings else p_head["w"]
+    return _dot(x, w).astype(P32)

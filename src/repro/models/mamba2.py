@@ -1,0 +1,236 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD: quadratic attention-like compute within chunks, linear
+recurrence across chunks.  Decode carries an (B, H, P, N) state plus a
+depthwise-conv tail — O(1) per token, which is why mamba2/zamba2 are the
+archs assigned the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import P32, dense, init_norm, rmsnorm
+
+# ---- params -----------------------------------------------------------------
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def in_proj_dim(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state \
+        + cfg.ssm_nheads
+
+
+def init_mamba_block(cfg: ModelConfig, key):
+    d, H = cfg.d_model, cfg.ssm_nheads
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (in_proj_dim(cfg), d), P32)
+                    * sc).astype(cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim(cfg), cfg.conv_kernel),
+                                     P32) * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim(cfg),), P32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=P32)),
+        "D": jnp.ones((H,), P32),
+        "dt_bias": jnp.zeros((H,), P32),
+        "gate_norm": init_norm(cfg, cfg.d_inner),
+        "out_proj": (jax.random.normal(ks[2], (d, cfg.d_inner), P32)
+                     * sc).astype(cfg.dtype),
+    }
+
+
+# ---- depthwise causal conv ---------------------------------------------------
+
+def causal_conv(w, b, x):
+    """x: (B, L, C); w: (C, K) depthwise causal."""
+    K = w.shape[1]
+    lhs = x.transpose(0, 2, 1)[:, :, None, :]            # (B, C, 1, L)
+    rhs = w.astype(x.dtype)[:, None, None, :]            # (C, 1, 1, K)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, (1, 1), [(0, 0), (K - 1, 0)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=w.shape[0])
+    return out[:, :, 0, :].transpose(0, 2, 1) + b.astype(x.dtype)
+
+
+def conv_step(w, b, tail, x_t):
+    """One decode step. tail: (B, K-1, C) previous inputs; x_t: (B, 1, C)."""
+    window = jnp.concatenate([tail, x_t], axis=1)        # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window.astype(P32),
+                   w.astype(P32)) + b
+    return y[:, None, :].astype(x_t.dtype), window[:, 1:, :]
+
+
+# ---- chunked SSD --------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: (Bt, L, H, P); dt: (Bt, L, H) (post-softplus); A: (H,) negative;
+    B, C: (Bt, L, G, N).  Returns y: (Bt, L, H, P)."""
+    Lr = x.shape[1]
+    pad = (-Lr) % chunk
+    if pad:
+        # zero dt on padded tail => no state contribution, decay 1
+        padfn = lambda a: jnp.pad(a, [(0, 0), (0, pad)]  # noqa: E731
+                                  + [(0, 0)] * (a.ndim - 2))
+        x, dt, B, C = padfn(x), padfn(dt), padfn(B), padfn(C)
+    y = _ssd_chunked(x, dt, A, B, C, chunk)
+    return y[:, :Lr] if pad else y
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    Bt, L, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    nc = L // chunk
+    rep = H // G
+
+    xc = x.reshape(Bt, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bt, nc, chunk, H)
+    Bc = jnp.repeat(B.reshape(Bt, nc, chunk, G, N), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(Bt, nc, chunk, G, N), rep, axis=3)
+
+    a = dtc * A                                          # (Bt,nc,q,H) <= 0
+    cA = jnp.cumsum(a, axis=2)
+
+    # intra-chunk (quadratic in chunk length)
+    seg = cA[:, :, :, None, :] - cA[:, :, None, :, :]    # (Bt,nc,q,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", Cc.astype(P32),
+                        Bc.astype(P32)) * decay * dtc[:, :, None, :, :]
+    y = jnp.einsum("bcqsh,bcshp->bcqhp", scores, xc.astype(P32))
+
+    # chunk-local final states
+    last = cA[:, :, -1:, :]                              # (Bt,nc,1,H)
+    w = jnp.exp(last - cA) * dtc                         # (Bt,nc,q,H)
+    local = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bc.astype(P32),
+                       xc.astype(P32), w)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (Bt,nc,H)
+
+    def step(s, inp):
+        loc, dec = inp
+        s_new = s * dec[:, :, None, None] + loc
+        return s_new, s                                  # emit state *before*
+
+    init = jnp.zeros((Bt, H, Pd, N), P32)
+    _, s_prev = jax.lax.scan(
+        step, init, (local.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)             # (Bt,nc,H,P,N)
+
+    y = y + jnp.einsum("bcqhn,bchpn->bcqhp", Cc.astype(P32), s_prev) \
+        * jnp.exp(cA)[..., None]
+    return y.reshape(Bt, L, H, Pd).astype(x.dtype)
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD update.  state: (Bt,H,P,N); x_t: (Bt,H,P);
+    dt_t: (Bt,H); B_t, C_t: (Bt,G,N).  Returns (y_t, new_state)."""
+    H = x_t.shape[1]
+    rep = H // B_t.shape[1]
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(P32)        # (Bt,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(P32)
+    decay = jnp.exp(dt_t * A)                            # (Bt,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t.astype(P32), Bh)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state
+
+
+# ---- full block ----------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, G, N, H = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                   cfg.ssm_nheads)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + conv_dim(cfg)]
+    dt = zxbcdt[..., di + conv_dim(cfg):]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC):
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    return (xBC[..., :di], xBC[..., di:di + G * N],
+            xBC[..., di + G * N:])
+
+
+def mamba_block(cfg: ModelConfig, p, u, cache=None):
+    """u: (Bt, L, d).  cache: {"state": (Bt,H,P,N), "conv": (Bt,K-1,Cv)}
+    for single-token decode (L == 1).  Returns (out, new_cache)."""
+    Bt, L, _ = u.shape
+    H, Pd = cfg.ssm_nheads, cfg.ssm_headdim
+    A = -jnp.exp(p["A_log"])
+
+    zxbcdt = dense({"w": p["in_proj"]}, u)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(P32) + p["dt_bias"])
+
+    if cache is None:
+        xBC = jax.nn.silu(causal_conv(p["conv_w"], p["conv_b"], xBC))
+        x, Bv, Cv = _split_xbc(cfg, xBC)
+        x = x.reshape(Bt, L, H, Pd)
+        Bv = Bv.reshape(Bt, L, cfg.ssm_ngroups, cfg.ssm_state)
+        Cv = Cv.reshape(Bt, L, cfg.ssm_ngroups, cfg.ssm_state)
+        chunk = min(cfg.ssm_chunk, L)
+        y = ssd_chunked(x, dt, A, Bv, Cv, chunk)
+        y = y + p["D"].astype(P32)[None, None, :, None] * x.astype(P32)
+        new_cache = None
+    else:
+        conv_out, conv_tail = conv_step(p["conv_w"], p["conv_b"],
+                                        cache["conv"], xBC)
+        xBC = jax.nn.silu(conv_out)
+        x, Bv, Cv = _split_xbc(cfg, xBC)
+        x1 = x.reshape(Bt, H, Pd)
+        y1, state = ssd_step(cache["state"], x1, dt[:, 0], A,
+                             Bv.reshape(Bt, cfg.ssm_ngroups, cfg.ssm_state),
+                             Cv.reshape(Bt, cfg.ssm_ngroups, cfg.ssm_state))
+        y = (y1 + p["D"].astype(P32)[None, :, None] * x1.astype(P32)
+             )[:, None]
+        new_cache = {"state": state, "conv": conv_tail}
+
+    y = y.reshape(Bt, L, cfg.d_inner).astype(u.dtype)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return dense({"w": p["out_proj"]}, y), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype):
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                            cfg.ssm_state), P32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim(cfg)),
+                          dtype),
+    }
+
+
+def prefill_final_cache(cfg: ModelConfig, p, u):
+    """Run a full prefill and return the cache needed to continue
+    decoding: final SSD state + conv tail."""
+    Bt, L, _ = u.shape
+    H, Pd = cfg.ssm_nheads, cfg.ssm_headdim
+    A = -jnp.exp(p["A_log"])
+    zxbcdt = dense({"w": p["in_proj"]}, u)
+    _, xBC_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt_raw.astype(P32) + p["dt_bias"])
+    xBC = jax.nn.silu(causal_conv(p["conv_w"], p["conv_b"], xBC_raw))
+    x, Bv, Cv = _split_xbc(cfg, xBC)
+    x = x.reshape(Bt, L, H, Pd)
+    Bv = Bv.reshape(Bt, L, cfg.ssm_ngroups, cfg.ssm_state)
+
+    a = dt * A                                           # (Bt,L,H)
+    cA = jnp.cumsum(a, axis=1)
+    w = jnp.exp(cA[:, -1:, :] - cA) * dt
+    state = jnp.einsum("blgn,blhp,blh->bhpn",
+                       Bv.astype(P32), x.astype(P32), w) \
+        if cfg.ssm_ngroups == 1 else jnp.einsum(
+            "blhn,blhp,blh->bhpn",
+            jnp.repeat(Bv, H // cfg.ssm_ngroups, 2).astype(P32),
+            x.astype(P32), w)
+    conv_tail = xBC_raw[:, -(cfg.conv_kernel - 1):, :]
+    return {"state": state, "conv": conv_tail}

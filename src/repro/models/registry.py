@@ -1,0 +1,45 @@
+"""Family dispatch: one uniform functional API over every architecture."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from . import ssm_lm, transformer, whisper, zamba2
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable | None = None
+    forward: Callable | None = None
+
+
+_TRANSFORMER = ModelApi(
+    init_params=transformer.init_params,
+    train_loss=transformer.train_loss,
+    prefill=transformer.prefill,
+    decode_step=transformer.decode_step,
+    init_cache=transformer.init_cache,
+    forward=transformer.forward,
+)
+
+_APIS = {
+    "dense": _TRANSFORMER,
+    "moe": _TRANSFORMER,
+    "encoder": _TRANSFORMER,
+    "ssm": ModelApi(ssm_lm.init_params, ssm_lm.train_loss, ssm_lm.prefill,
+                    ssm_lm.decode_step, ssm_lm.init_cache, ssm_lm.forward),
+    "hybrid": ModelApi(zamba2.init_params, zamba2.train_loss,
+                       zamba2.prefill, zamba2.decode_step,
+                       zamba2.init_cache, zamba2.forward),
+    "encdec": ModelApi(whisper.init_params, whisper.train_loss,
+                       whisper.prefill, whisper.decode_step),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    return _APIS[cfg.family]

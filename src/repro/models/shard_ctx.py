@@ -1,0 +1,96 @@
+"""Ambient activation-sharding constraints.
+
+launch/{dryrun,train,serve} install the mesh with `use_mesh`; model code
+calls `act()` / `logits()` at the residual-stream boundaries so GSPMD
+keeps activations batch-sharded inside scanned layer bodies (without a
+constraint the microbatch scan loses the batch sharding and every layer
+computes fully replicated — a ~dp_size x blowup visible in the dry-run
+collective term).  No-ops when no mesh is installed (CPU tests)."""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STACK: list = []
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    _STACK.append(mesh)
+    try:
+        yield
+    finally:
+        _STACK.pop()
+
+
+def _mesh():
+    return _STACK[-1] if _STACK else None
+
+
+def _dp(mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _constrain(x, spec):
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+    except ValueError:
+        return x  # unshardable (e.g. batch not divisible): leave to GSPMD
+
+
+def act(x, batch_axis: int = 0):
+    """Residual-stream activations: batch over DP axes, rest replicated."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    d = 1
+    for a in _dp(mesh):
+        d *= mesh.shape[a]
+    if x.shape[batch_axis] % d != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_axis] = _dp(mesh)
+    return _constrain(x, P(*spec))
+
+
+def logits(x):
+    """(B, S, V) or (B, V): batch over DP, vocab over model."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    d = 1
+    for a in _dp(mesh):
+        d *= mesh.shape[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % d == 0:
+        spec[0] = _dp(mesh)
+    if x.shape[-1] % mesh.shape["model"] == 0:
+        spec[-1] = "model"
+    return _constrain(x, P(*spec))
+
+
+def shard(x, model_axes=(), batch_axis=None):
+    """Constrain: batch axis over DP (if divisible) + the first axis in
+    `model_axes` divisible by the model-parallel degree over 'model'."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    if batch_axis is not None:
+        d = 1
+        for a in _dp(mesh):
+            d *= mesh.shape[a]
+        if x.shape[batch_axis] % d == 0:
+            spec[batch_axis] = _dp(mesh)
+    m = mesh.shape["model"]
+    for ax in model_axes:
+        if x.shape[ax] % m == 0:
+            spec[ax] = "model"
+            break
+    return _constrain(x, P(*spec))

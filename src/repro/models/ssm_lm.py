@@ -1,0 +1,95 @@
+"""Mamba2 language model (attention-free): embed -> scanned pre-norm
+mamba blocks -> norm -> head.  O(1)-state decode enables the long_500k
+cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2, shard_ctx
+from .config import ModelConfig
+
+P32 = jnp.float32
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, kh = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "layers": jax.vmap(lambda k: {
+            "ln": L.init_norm(cfg),
+            "mamba": mamba2.init_mamba_block(cfg, k)})(lkeys),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(cfg, kh),
+    }
+
+
+def forward(cfg: ModelConfig, params, batch, *, cache=None, cache_pos=None):
+    x = L.embed(cfg, params["embed"], batch["tokens"])
+
+    def body(carry, xs):
+        xc = shard_ctx.act(carry)
+        if cache is None:
+            p_l = xs
+            out, _ = mamba2.mamba_block(cfg, p_l["mamba"],
+                                        L.norm(cfg, p_l["ln"], xc))
+            return xc + out, 0.0
+        p_l, cache_l = xs
+        out, new_cache = mamba2.mamba_block(cfg, p_l["mamba"],
+                                            L.norm(cfg, p_l["ln"], xc),
+                                            cache=cache_l)
+        return xc + out, new_cache
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = params["layers"] if cache is None else (params["layers"], cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = L.norm(cfg, params["final_norm"], x)
+    return x, (None if cache is None else new_cache), jnp.zeros((), P32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """SSM cache is O(1) in sequence length (max_len unused)."""
+    del max_len
+    one = mamba2.init_mamba_cache(cfg, batch, dtype or cfg.dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+        one)
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    hidden, _, _ = forward(cfg, params, batch)
+    logits = shard_ctx.logits(
+        L.lm_head(cfg, params["head"], params["embed"], hidden))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """SSM prefill: run the sequence, capture final state per layer."""
+    B, S = batch["tokens"].shape
+    x = L.embed(cfg, params["embed"], batch["tokens"])
+
+    def body(xc, p_l):
+        h = L.norm(cfg, p_l["ln"], xc)
+        out, _ = mamba2.mamba_block(cfg, p_l["mamba"], h)
+        new_cache = mamba2.prefill_final_cache(cfg, p_l["mamba"], h)
+        return xc + out, new_cache
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_head(cfg, params["head"], params["embed"], x[:, -1:, :])
+    return logits[:, 0, :], cache, S
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    del pos  # SSM state is position-free
+    hidden, cache, _ = forward(cfg, params, {"tokens": tokens},
+                               cache=cache, cache_pos=0)
+    logits = L.lm_head(cfg, params["head"], params["embed"],
+                       hidden[:, -1:, :])
+    return logits[:, 0, :], cache

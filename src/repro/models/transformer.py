@@ -1,0 +1,220 @@
+"""Decoder-only / encoder-only transformer LM covering the dense, MoE,
+and VLM-backbone architectures (and the paper's BERT / GPT-2).
+
+Layers are stacked (leading L axis) and executed with lax.scan so the
+compiled HLO is O(1) in depth; each scan body is rematerialized according
+to cfg.remat.  Training, prefill and single-token decode share one
+forward; caches are pytrees with a leading layer axis scanned alongside
+the weights.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import shard_ctx
+from .config import ModelConfig
+
+P32 = jnp.float32
+
+
+# ---- init -------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg), "ln2": L.init_norm(cfg)}
+    p["attn"] = L.init_mla(cfg, k1) if cfg.use_mla else L.init_attention(
+        cfg, k1)
+    if cfg.family == "moe":
+        p["ffn"] = L.init_moe(cfg, k2)
+    else:
+        p["ffn"] = L.init_ffn(cfg, k2)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    params = {
+        "embed": L.init_embed(cfg, ke, max_pos=4096),
+        "layers": jax.vmap(lambda k: init_block(cfg, k))(lkeys),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(cfg, kh),
+    }
+    if cfg.family == "encoder":  # paper §2.1: embedding = lookup + LN
+        params["embed_norm"] = L.init_norm(cfg)
+    if cfg.family == "encoder":  # BERT-style pooler + classifier
+        d = cfg.d_model
+        kp1, kp2 = jax.random.split(kp)
+        params["pooler"] = {
+            "w": (jax.random.normal(kp1, (d, d), P32) * d ** -0.5
+                  ).astype(cfg.dtype), "b": jnp.zeros((d,), P32)}
+        params["classifier"] = {
+            "w": (jax.random.normal(kp2, (2, d), P32) * d ** -0.5
+                  ).astype(cfg.dtype), "b": jnp.zeros((2,), P32)}
+    return params
+
+
+# ---- one block ----------------------------------------------------------------
+
+def block(cfg: ModelConfig, p, x, *, rope_cs, positions, cache=None,
+          cache_pos=None):
+    h = L.norm(cfg, p["ln1"], x) if cfg.prenorm else x
+    if cfg.use_mla:
+        attn_out, new_cache = L.mla_attention(
+            cfg, p["attn"], h, positions=positions, cache=cache,
+            cache_pos=cache_pos)
+    else:
+        attn_out, new_cache = L.attention(
+            cfg, p["attn"], h, positions=positions, cache=cache,
+            cache_pos=cache_pos, rope_cs=rope_cs)
+    x = x + attn_out
+    if not cfg.prenorm:                      # post-LN (BERT)
+        x = L.norm(cfg, p["ln1"], x)
+    h = L.norm(cfg, p["ln2"], x) if cfg.prenorm else x
+    if cfg.family == "moe":
+        f, aux = L.moe_ffn(cfg, p["ffn"], h)
+    else:
+        f, aux = L.ffn(cfg, p["ffn"], h), jnp.zeros((), P32)
+    x = x + f
+    if not cfg.prenorm:
+        x = L.norm(cfg, p["ln2"], x)
+    return x, new_cache, aux
+
+
+_REMAT_POLICIES = {
+    "full": None,  # save nothing
+    "dots": "dots_with_no_batch_dims_saveable",
+    "none": "everything_saveable",
+}
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---- full forward ---------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, batch, *, cache=None, cache_pos=None):
+    """batch: {"tokens": (B,S)} or {"embeds": (B,S,d)}; optional
+    {"positions": (B,S) or (3,B,S) for M-RoPE}.
+
+    Returns (hidden (B,S,d), new_cache, aux_loss)."""
+    if cfg.input_kind == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.dtype)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        pos_idx = batch.get("positions")
+        if pos_idx is None:
+            base = cache_pos if cache_pos is not None else 0
+            pos_idx = base + jnp.arange(S)[None, :].repeat(B, 0)
+        x = L.embed(cfg, params["embed"], tokens,
+                    positions=pos_idx if cfg.pos_embed == "learned" else None)
+        if "embed_norm" in params:
+            x = L.norm(cfg, params["embed_norm"], x)
+
+    positions = batch.get("positions")
+    if positions is None:
+        base = cache_pos if cache_pos is not None else 0
+        positions = base + jnp.arange(S)[None, :].repeat(B, 0)
+
+    rope_cs = None
+    if cfg.pos_embed == "rope":
+        if cfg.mrope_sections:
+            if positions.ndim == 2:  # text-only fallback: t=h=w
+                positions = jnp.broadcast_to(positions[None],
+                                             (3,) + positions.shape)
+            rope_cs = L.mrope_freqs(cfg, positions, cfg.dh)
+            positions = positions[0]
+        else:
+            rope_cs = L.rope_freqs(cfg, positions, cfg.dh)
+
+    def body(carry, xs):
+        xc, aux = carry
+        xc = shard_ctx.act(xc)
+        if cache is None:
+            p_l = xs
+            xc, _, a = block(cfg, p_l, xc, rope_cs=rope_cs,
+                             positions=positions)
+            return (shard_ctx.act(xc), aux + a), 0.0
+        p_l, cache_l = xs
+        xc, new_cache_l, a = block(cfg, p_l, xc, rope_cs=rope_cs,
+                                   positions=positions, cache=cache_l,
+                                   cache_pos=cache_pos)
+        return (xc, aux + a), new_cache_l
+
+    body = _maybe_remat(cfg, body)
+    xs = params["layers"] if cache is None else (params["layers"], cache)
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), P32)), xs)
+    if cache is None:
+        new_cache = None
+    x = L.norm(cfg, params["final_norm"], x)
+    return x, new_cache, aux
+
+
+def logits_fn(cfg: ModelConfig, params, hidden):
+    return shard_ctx.logits(
+        L.lm_head(cfg, params["head"], params["embed"], hidden))
+
+
+# ---- caches ----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    if cfg.use_mla:
+        one = L.init_mla_cache(cfg, batch, max_len, dtype)
+    else:
+        one = L.init_attention_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+        one)
+
+
+# ---- entry points used by launch/ + serving/ ---------------------------------------
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """Causal LM loss (encoder family: masked-token proxy loss)."""
+    hidden, _, aux = forward(cfg, params, batch)
+    logits = logits_fn(cfg, params, hidden)              # (B,S,V) f32
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Process a prompt; return (last-token logits, filled cache)."""
+    B, S = (batch["tokens"].shape if "tokens" in batch
+            else batch["embeds"].shape[:2])
+    cache = init_cache(cfg, B, max_len)
+    hidden, cache, _ = forward(cfg, params, batch, cache=cache, cache_pos=0)
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])
+    return logits[:, 0, :], cache, S
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B, 1); pos: scalar current length.  One decode step."""
+    batch = {"tokens": tokens}
+    hidden, cache, _ = forward(cfg, params, batch, cache=cache,
+                               cache_pos=pos)
+    logits = logits_fn(cfg, params, hidden[:, -1:, :])
+    return logits[:, 0, :], cache
+
+
+# ---- encoder (BERT) adaptation layer -----------------------------------------------
+
+def encoder_classify(cfg: ModelConfig, params, batch):
+    hidden, _, _ = forward(cfg, params, batch)
+    pooled = jnp.tanh(L.dense(params["pooler"], hidden[:, 0, :]))
+    return L.dense(params["classifier"], pooled).astype(P32)

@@ -1,0 +1,204 @@
+"""Whisper-tiny backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment the conv/mel frontend is a STUB — `input_specs()`
+provides precomputed frame embeddings (B, S_enc, d).  The decoder is a
+standard causal transformer with cross-attention; decode_step consumes a
+self-attention cache plus precomputed per-layer cross K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import shard_ctx
+from .config import ModelConfig
+
+P32 = jnp.float32
+
+
+def _init_xattn(cfg: ModelConfig, key):
+    return L.init_attention(cfg, key)
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kd, kh, kp = jax.random.split(key, 4)
+    ekeys = jax.random.split(ke, cfg.encoder_layers)
+    dkeys = jax.random.split(kd, cfg.num_layers)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": L.init_norm(cfg), "attn": L.init_attention(cfg, k1),
+                "ln2": L.init_norm(cfg), "ffn": L.init_ffn(cfg, k2)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.init_norm(cfg), "attn": L.init_attention(cfg, k1),
+                "lnx": L.init_norm(cfg), "xattn": _init_xattn(cfg, k2),
+                "ln2": L.init_norm(cfg), "ffn": L.init_ffn(cfg, k3)}
+
+    d = cfg.d_model
+    return {
+        "embed": {"tok": (jax.random.normal(kh, (cfg.vocab_size, d), P32)
+                          * 0.02).astype(cfg.dtype)},
+        "enc_pos": (jax.random.normal(kp, (cfg.max_seq_len, d), P32)
+                    * 0.02).astype(cfg.dtype),
+        "dec_pos": (jax.random.normal(kp, (cfg.max_seq_len, d), P32)
+                    * 0.02).astype(cfg.dtype),
+        "enc_layers": jax.vmap(enc_layer)(ekeys),
+        "dec_layers": jax.vmap(dec_layer)(dkeys),
+        "enc_norm": L.init_norm(cfg),
+        "dec_norm": L.init_norm(cfg),
+    }
+
+
+def _mha(cfg, p, q_in, kv_in, mask):
+    """Bidirectional / cross attention (no rope; whisper uses learned pos)."""
+    B, S, _ = q_in.shape
+    T = kv_in.shape[1]
+    h, dh = cfg.num_heads, cfg.dh
+    q = L.dense({"w": p["wq"]}, q_in).reshape(B, S, h, dh)
+    k = L.dense({"w": p["wk"]}, kv_in).reshape(B, T, h, dh)
+    v = L.dense({"w": p["wv"]}, kv_in).reshape(B, T, h, dh)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=P32) / jnp.sqrt(
+                            jnp.asarray(dh, P32))
+    if mask is not None:
+        scores = jnp.where(mask, scores, jnp.finfo(P32).min)
+    probs = jax.nn.softmax(scores, -1).astype(q_in.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, h * dh)
+    return L.dense({"w": p["wo"]}, out)
+
+
+def encode(cfg: ModelConfig, params, embeds):
+    B, S, _ = embeds.shape
+    x = embeds.astype(cfg.dtype) + params["enc_pos"][:S][None]
+
+    def body(xc, p_l):
+        xc = shard_ctx.act(xc)
+        xc = xc + _mha(cfg, p_l["attn"], L.norm(cfg, p_l["ln1"], xc),
+                       L.norm(cfg, p_l["ln1"], xc), None)
+        xc = xc + L.ffn(cfg, p_l["ffn"], L.norm(cfg, p_l["ln2"], xc))
+        return xc, 0.0
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm(cfg, params["enc_norm"], x)
+
+
+def _cross_kv(cfg: ModelConfig, p_l, enc_out):
+    B, T, _ = enc_out.shape
+    h, dh = cfg.num_heads, cfg.dh
+    k = L.dense({"w": p_l["xattn"]["wk"]}, enc_out).reshape(B, T, h, dh)
+    v = L.dense({"w": p_l["xattn"]["wv"]}, enc_out).reshape(B, T, h, dh)
+    return {"xk": k, "xv": v}
+
+
+def _xattn_cached(cfg, p, q_in, xk, xv):
+    B, S, _ = q_in.shape
+    h, dh = cfg.num_heads, cfg.dh
+    q = L.dense({"w": p["wq"]}, q_in).reshape(B, S, h, dh)
+    scores = jnp.einsum("bshd,bthd->bhst", q, xk,
+                        preferred_element_type=P32) / jnp.sqrt(
+                            jnp.asarray(dh, P32))
+    probs = jax.nn.softmax(scores, -1).astype(q_in.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, xv).reshape(B, S, h * dh)
+    return L.dense({"w": p["wo"]}, out)
+
+
+def decode(cfg: ModelConfig, params, tokens, enc_out, *, cache=None,
+           cache_pos=None):
+    """Decoder stack.  cache = {"k","v" (self, per layer), "xk","xv"}."""
+    B, S = tokens.shape
+    base = cache_pos if cache_pos is not None else 0
+    x = jnp.take(params["embed"]["tok"], tokens, axis=0) \
+        + jax.lax.dynamic_slice_in_dim(params["dec_pos"], base, S, 0)[None]
+
+    def body(carry, xs):
+        xc = shard_ctx.act(carry)
+        if cache is None:
+            p_l = xs
+            S_ = xc.shape[1]
+            mask = (jnp.arange(S_)[None, :]
+                    <= jnp.arange(S_)[:, None])[None, None]
+            xc = xc + _mha(cfg, p_l["attn"], L.norm(cfg, p_l["ln1"], xc),
+                           L.norm(cfg, p_l["ln1"], xc), mask)
+            xkv = _cross_kv(cfg, p_l, enc_out)
+            xc = xc + _xattn_cached(cfg, p_l["xattn"],
+                                    L.norm(cfg, p_l["lnx"], xc),
+                                    xkv["xk"], xkv["xv"])
+            xc = xc + L.ffn(cfg, p_l["ffn"], L.norm(cfg, p_l["ln2"], xc))
+            return xc, 0.0
+        p_l, c_l = xs
+        h = L.norm(cfg, p_l["ln1"], xc)
+        q = L.dense({"w": p_l["attn"]["wq"]}, h).reshape(
+            B, S, cfg.num_heads, cfg.dh)
+        k = L.dense({"w": p_l["attn"]["wk"]}, h).reshape(
+            B, S, cfg.num_heads, cfg.dh)
+        v = L.dense({"w": p_l["attn"]["wv"]}, h).reshape(
+            B, S, cfg.num_heads, cfg.dh)
+        ck = jax.lax.dynamic_update_slice(
+            c_l["k"], k.astype(c_l["k"].dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            c_l["v"], v.astype(c_l["v"].dtype), (0, cache_pos, 0, 0))
+        T = ck.shape[1]
+        q_pos = cache_pos + jnp.arange(S)
+        mask = (jnp.arange(T)[None, :] <= q_pos[:, None])[None, None]
+        scores = jnp.einsum("bshd,bthd->bhst", q, ck.astype(h.dtype),
+                            preferred_element_type=P32) / jnp.sqrt(
+                                jnp.asarray(cfg.dh, P32))
+        scores = jnp.where(mask, scores, jnp.finfo(P32).min)
+        probs = jax.nn.softmax(scores, -1).astype(h.dtype)
+        attn = jnp.einsum("bhst,bthd->bshd", probs, cv.astype(h.dtype)
+                          ).reshape(B, S, cfg.num_heads * cfg.dh)
+        xc = xc + L.dense({"w": p_l["attn"]["wo"]}, attn)
+        xc = xc + _xattn_cached(cfg, p_l["xattn"],
+                                L.norm(cfg, p_l["lnx"], xc),
+                                c_l["xk"].astype(h.dtype),
+                                c_l["xv"].astype(h.dtype))
+        xc = xc + L.ffn(cfg, p_l["ffn"], L.norm(cfg, p_l["ln2"], xc))
+        return xc, {"k": ck, "v": cv, "xk": c_l["xk"], "xv": c_l["xv"]}
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = params["dec_layers"] if cache is None else (params["dec_layers"],
+                                                     cache)
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = L.norm(cfg, params["dec_norm"], x)
+    return x, (None if cache is None else new_cache)
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["embeds"])
+    hidden, _ = decode(cfg, params, batch["tokens"], enc_out)
+    logits = shard_ctx.logits(
+        L._dot(hidden, params["embed"]["tok"]).astype(P32))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    enc_out = encode(cfg, params, batch["embeds"])
+    B, S = batch["tokens"].shape
+    h, dh = cfg.num_heads, cfg.dh
+    cache = {
+        "k": jnp.zeros((cfg.num_layers, B, max_len, h, dh), cfg.dtype),
+        "v": jnp.zeros((cfg.num_layers, B, max_len, h, dh), cfg.dtype),
+    }
+    xkv = jax.vmap(lambda p_l: _cross_kv(cfg, p_l, enc_out)
+                   )(params["dec_layers"])
+    cache["xk"], cache["xv"] = xkv["xk"], xkv["xv"]
+    hidden, cache = decode(cfg, params, batch["tokens"], enc_out,
+                           cache=cache, cache_pos=0)
+    logits = L._dot(hidden[:, -1:, :], params["embed"]["tok"]).astype(P32)
+    return logits[:, 0, :], cache, S
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    hidden, cache = decode(cfg, params, tokens, None, cache=cache,
+                           cache_pos=pos)
+    logits = L._dot(hidden[:, -1:, :], params["embed"]["tok"]).astype(P32)
+    return logits[:, 0, :], cache

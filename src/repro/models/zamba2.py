@@ -1,0 +1,204 @@
+"""Zamba2 hybrid: a Mamba2 backbone with a *shared* attention+MLP block
+applied every `attn_every` layers (arXiv:2411.15242).
+
+Layout: the first (num_layers // attn_every) * attn_every mamba blocks
+run in groups of `attn_every`, each group preceded by one application of
+the shared attention block (own KV cache per application, shared
+weights); remaining mamba blocks form a tail.  Simplification vs the
+released model (concat-embedding input to the shared block, per-app LoRA
+deltas) noted in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2, shard_ctx
+from .config import ModelConfig
+from .transformer import block as attn_block
+
+P32 = jnp.float32
+
+
+def group_shape(cfg: ModelConfig):
+    n_groups = cfg.num_layers // cfg.attn_every
+    tail = cfg.num_layers - n_groups * cfg.attn_every
+    return n_groups, tail
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    mamba_layers = jax.vmap(lambda k: {
+        "ln": L.init_norm(cfg),
+        "mamba": mamba2.init_mamba_block(cfg, k)})(lkeys)
+    k1, k2 = jax.random.split(ks)
+    shared = {"ln1": L.init_norm(cfg), "ln2": L.init_norm(cfg),
+              "attn": L.init_attention(cfg, k1),
+              "ffn": L.init_ffn(cfg, k2)}
+    return {
+        "embed": L.init_embed(cfg, ke),
+        "mamba_layers": mamba_layers,
+        "shared": shared,
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(cfg, kh),
+    }
+
+
+def _split_groups(cfg: ModelConfig, tree):
+    """(L, ...) stacked leaves -> ((G, E, ...), (tail, ...))."""
+    n_groups, tail = group_shape(cfg)
+    cut = n_groups * cfg.attn_every
+    head = jax.tree.map(
+        lambda a: a[:cut].reshape((n_groups, cfg.attn_every) + a.shape[1:]),
+        tree)
+    rest = jax.tree.map(lambda a: a[cut:], tree)
+    return head, rest
+
+
+def _mamba_scan(cfg, x, layers, caches, cache_pos):
+    def body(xc, xs):
+        xc = shard_ctx.act(xc)
+        if caches is None:
+            p_l = xs
+            out, _ = mamba2.mamba_block(cfg, p_l["mamba"],
+                                        L.norm(cfg, p_l["ln"], xc))
+            return xc + out, 0.0
+        p_l, c_l = xs
+        out, nc = mamba2.mamba_block(cfg, p_l["mamba"],
+                                     L.norm(cfg, p_l["ln"], xc), cache=c_l)
+        return xc + out, nc
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    xs = layers if caches is None else (layers, caches)
+    return jax.lax.scan(body, x, xs)
+
+
+def forward(cfg: ModelConfig, params, batch, *, cache=None, cache_pos=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(cfg, params["embed"], tokens)
+    base = cache_pos if cache_pos is not None else 0
+    positions = base + jnp.arange(S)[None, :].repeat(B, 0)
+    rope_cs = L.rope_freqs(cfg, positions, cfg.dh)
+    shared = params["shared"]
+
+    g_layers, t_layers = _split_groups(cfg, params["mamba_layers"])
+    if cache is not None:
+        g_mcache, t_mcache = _split_groups(cfg, cache["mamba"])
+        a_cache = cache["attn"]
+    else:
+        g_mcache = t_mcache = a_cache = None
+
+    def group_body(xc, xs):
+        if cache is None:
+            layer_p = xs
+            xg, _, _ = attn_block(cfg, shared, xc, rope_cs=rope_cs,
+                                  positions=positions)
+            xg, _ = _mamba_scan(cfg, xg, layer_p, None, cache_pos)
+            return xg, 0.0
+        layer_p, mcache_g, acache_g = xs
+        xg, new_acache, _ = attn_block(cfg, shared, xc, rope_cs=rope_cs,
+                                       positions=positions, cache=acache_g,
+                                       cache_pos=cache_pos)
+        xg, new_mcache = _mamba_scan(cfg, xg, layer_p, mcache_g, cache_pos)
+        return xg, (new_mcache, new_acache)
+
+    if cfg.remat != "none":
+        group_body = jax.checkpoint(group_body)
+    xs = g_layers if cache is None else (g_layers, g_mcache, a_cache)
+    x, group_out = jax.lax.scan(group_body, x, xs)
+    x, tail_out = _mamba_scan(cfg, x, t_layers, t_mcache, cache_pos)
+
+    if cache is None:
+        new_cache = None
+    else:
+        n_groups, _ = group_shape(cfg)
+        new_gm, new_ac = group_out
+        flat_gm = jax.tree.map(
+            lambda a: a.reshape((n_groups * cfg.attn_every,) + a.shape[2:]),
+            new_gm)
+        new_m = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                             flat_gm, tail_out)
+        new_cache = {"mamba": new_m, "attn": new_ac}
+
+    x = L.norm(cfg, params["final_norm"], x)
+    return x, new_cache, jnp.zeros((), P32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    n_groups, _ = group_shape(cfg)
+    m_one = mamba2.init_mamba_cache(cfg, batch, dtype)
+    a_one = L.init_attention_cache(cfg, batch, max_len, dtype)
+    stack = lambda t, n: jax.tree.map(            # noqa: E731
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), t)
+    return {"mamba": stack(m_one, cfg.num_layers),
+            "attn": stack(a_one, n_groups)}
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    hidden, _, _ = forward(cfg, params, batch)
+    logits = shard_ctx.logits(
+        L.lm_head(cfg, params["head"], params["embed"], hidden))
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Hybrid prefill: run with caches sized max_len (attention) and
+    capture SSM final states via the cached path on the last token.
+
+    For simplicity and exactness we run the cached forward over the whole
+    prompt (attention caches are written in place; SSM decode-path caches
+    are only valid for single tokens) — so we run the *uncached* forward
+    for hidden states and rebuild SSM states with prefill_final_cache
+    inside a dedicated scan."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    rope_cs = L.rope_freqs(cfg, positions, cfg.dh)
+    shared = params["shared"]
+    g_layers, t_layers = _split_groups(cfg, params["mamba_layers"])
+    a_cache = init_cache(cfg, B, max_len)["attn"]
+
+    def mamba_scan_cachecap(xc, layers):
+        def body(xi, p_l):
+            h = L.norm(cfg, p_l["ln"], xi)
+            out, _ = mamba2.mamba_block(cfg, p_l["mamba"], h)
+            nc = mamba2.prefill_final_cache(cfg, p_l["mamba"], h)
+            return xi + out, nc
+        return jax.lax.scan(body, xc, layers)
+
+    def group_body(xc, xs):
+        layer_p, acache_g = xs
+        xg, new_ac, _ = attn_block(cfg, shared, xc, rope_cs=rope_cs,
+                                   positions=positions, cache=acache_g,
+                                   cache_pos=0)
+        xg, new_mc = mamba_scan_cachecap(xg, layer_p)
+        return xg, (new_mc, new_ac)
+
+    x, (gm, ga) = jax.lax.scan(group_body, x, (g_layers, a_cache))
+    x, tm = mamba_scan_cachecap(x, t_layers)
+
+    n_groups, _ = group_shape(cfg)
+    flat_gm = jax.tree.map(
+        lambda a: a.reshape((n_groups * cfg.attn_every,) + a.shape[2:]), gm)
+    mcache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                          flat_gm, tm)
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.lm_head(cfg, params["head"], params["embed"], x[:, -1:, :])
+    return logits[:, 0, :], {"mamba": mcache, "attn": ga}, S
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    hidden, cache, _ = forward(cfg, params, {"tokens": tokens},
+                               cache=cache, cache_pos=pos)
+    logits = L.lm_head(cfg, params["head"], params["embed"],
+                       hidden[:, -1:, :])
+    return logits[:, 0, :], cache

@@ -1,0 +1,127 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, cooperative
+preemption.  Host-side orchestration logic — pure Python, unit-tested
+with injected clocks so behaviour is verifiable without a cluster."""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+
+class HeartbeatMonitor:
+    """Tracks per-host liveness; a host is dead after `timeout` seconds
+    of silence.  On a real deployment every host POSTs beats to the
+    coordinator; here beats are injected directly."""
+
+    def __init__(self, timeout: float = 60.0, clock=time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last = {}
+
+    def beat(self, host: int, at: float | None = None):
+        self.last[host] = self.clock() if at is None else at
+
+    def dead_hosts(self, now: float | None = None):
+        now = self.clock() if now is None else now
+        return sorted(h for h, t in self.last.items()
+                      if now - t > self.timeout)
+
+    def all_alive(self) -> bool:
+        return not self.dead_hosts()
+
+
+@dataclass
+class StragglerPolicy:
+    threshold: float = 1.5      # x median step time
+    min_observations: int = 5
+    action: str = "alert"       # alert | evict | rebalance
+
+
+class StragglerMonitor:
+    """Per-host EMA of step durations.  In synchronous SPMD a straggler
+    slows every step; the monitor feeds the launcher's policy: alert,
+    evict (drop the host and trigger an elastic restart at a smaller
+    mesh from the last checkpoint), or rebalance (shrink its data
+    shard)."""
+
+    def __init__(self, policy: StragglerPolicy = StragglerPolicy(),
+                 ema: float = 0.3):
+        self.policy = policy
+        self.ema_alpha = ema
+        self.times: dict[int, float] = {}
+        self.counts: dict[int, int] = defaultdict(int)
+        self.events: list = []
+
+    def observe(self, host: int, step: int, duration: float):
+        prev = self.times.get(host, duration)
+        self.times[host] = (1 - self.ema_alpha) * prev \
+            + self.ema_alpha * duration
+        self.counts[host] += 1
+
+    def _median(self):
+        vals = sorted(self.times.values())
+        return vals[len(vals) // 2]
+
+    def stragglers(self):
+        if len(self.times) < 2:
+            return []
+        med = self._median()
+        out = []
+        for h, t in self.times.items():
+            if (self.counts[h] >= self.policy.min_observations
+                    and t > self.policy.threshold * med):
+                out.append((h, t / med))
+        return sorted(out)
+
+    def check(self):
+        """Returns the actions the launcher should take this step."""
+        actions = []
+        for host, slowdown in self.stragglers():
+            actions.append({"host": host, "slowdown": slowdown,
+                            "action": self.policy.action})
+            self.events.append((host, slowdown, self.policy.action))
+        return actions
+
+
+class PreemptionGuard:
+    """Cooperative preemption: SIGTERM or a sentinel file requests a
+    clean checkpoint-and-exit; the training loop polls should_stop()."""
+
+    def __init__(self, flag_file: str | None = None,
+                 install_signal: bool = False):
+        self.flag_file = flag_file
+        self._flag = False
+        if install_signal:  # opt-in; tests use the file/explicit path
+            signal.signal(signal.SIGTERM, self._on_signal)
+
+    def _on_signal(self, *_):
+        self._flag = True
+
+    def request(self):
+        self._flag = True
+
+    def should_stop(self) -> bool:
+        if self._flag:
+            return True
+        return bool(self.flag_file and os.path.exists(self.flag_file))
+
+
+@dataclass
+class ElasticPlan:
+    """Given surviving hosts, pick the largest power-of-two data-parallel
+    degree that the global batch divides by — the launcher restarts the
+    job with this mesh and restores from the latest checkpoint (host
+    arrays are mesh-agnostic; see checkpoint.manager)."""
+    global_batch: int
+    model_parallel: int
+
+    def plan(self, alive_hosts: int, chips_per_host: int = 4):
+        chips = alive_hosts * chips_per_host
+        data = max(chips // self.model_parallel, 1)
+        while data > 1 and (self.global_batch % data
+                            or (data & (data - 1))):
+            data -= 1
+        return {"data": data, "model": self.model_parallel,
+                "chips_used": data * self.model_parallel}

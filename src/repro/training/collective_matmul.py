@@ -1,0 +1,59 @@
+"""Collective matmul: overlap tensor-parallel gathers with compute.
+
+Standard TP linears all-gather the row-sharded operand and then run one
+big GEMM — serializing ICI behind the MXU.  `ring_allgather_matmul`
+instead walks the ring with lax.ppermute: at every step each device
+multiplies the chunk it currently holds while the next chunk is in
+flight, hiding (N-1)/N of the gather latency (the classic
+"collective matmul" / Wang et al. schedule).
+
+Used inside shard_map over the `model` axis; §Perf lists it as the
+collective-term lever for TP-bound cells.  Correctness vs the
+all-gather-then-matmul reference is tested on 8 virtual devices in
+tests/test_collective_matmul.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def ring_allgather_matmul(a_local, b_local, axis_name: str):
+    """Per-shard body: a_local (m_loc, k) row-shard of A; b_local (k, n_loc)
+    column-shard of B.  Returns (m, n_loc) = A @ b_local with the
+    all-gather of A overlapped against per-chunk GEMMs."""
+    n_dev = jax.lax.psum(1, axis_name)
+    my = jax.lax.axis_index(axis_name)
+    m_loc = a_local.shape[0]
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def step(carry, i):
+        chunk, acc = carry
+        src = (my - i) % n_dev           # owner of the chunk we hold
+        part = jnp.dot(chunk, b_local,
+                       preferred_element_type=jnp.float32)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc, part.astype(acc.dtype), src * m_loc, 0)
+        chunk = jax.lax.ppermute(chunk, axis_name, perm)
+        return (chunk, acc), None
+
+    acc0 = jax.lax.pvary(
+        jnp.zeros((n_dev * m_loc, b_local.shape[1]), jnp.float32),
+        (axis_name,))
+    (chunk, acc), _ = jax.lax.scan(step, (a_local, acc0),
+                                   jnp.arange(n_dev))
+    return acc
+
+
+def tp_matmul_overlapped(a, b, mesh, axis: str = "model"):
+    """Global entry: A (m, k) row-sharded over `axis`, B (k, n)
+    column-sharded over `axis` -> A @ B column-sharded over `axis`."""
+    fn = jax.shard_map(
+        partial(ring_allgather_matmul, axis_name=axis),
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, axis)),
+        out_specs=P(None, axis))
+    return fn(a, b)

@@ -1,0 +1,126 @@
+"""Train-step builder (microbatched gradient accumulation) and the
+fault-tolerant host loop.
+
+The jitted step is pure: (params, opt_state, batch) -> (params,
+opt_state, metrics).  Everything stateful — checkpointing, preemption,
+straggler telemetry, data cursor — lives in the host loop and is
+restart-exact."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import get_api
+from repro.models import shard_ctx
+
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+P32 = jnp.float32
+
+
+def build_train_step(cfg: ModelConfig, opt: OptConfig,
+                     num_microbatches: int = 1):
+    api = get_api(cfg)
+
+    def loss_fn(params, batch):
+        return api.train_loss(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(a):
+                if a.ndim == 3 and a.shape[0] == 3:  # M-RoPE (3, B, S)
+                    mb = a.shape[1] // num_microbatches
+                    return a.reshape(3, num_microbatches, mb,
+                                     a.shape[2]).transpose(1, 0, 2, 3)
+                return a.reshape((num_microbatches,
+                                  a.shape[0] // num_microbatches)
+                                 + a.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                loss_acc, g_acc = carry
+                mbatch = jax.tree.map(
+                    lambda a: shard_ctx.act(a) if a.ndim >= 2 else a,
+                    mbatch)
+                loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(P32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree.map(lambda a: jnp.zeros(a.shape, P32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros((), P32),
+                                                     g0), mb)
+            loss = loss / num_microbatches
+            grads = jax.tree.map(lambda a: a / num_microbatches, grads)
+        params, opt_state, om = adamw_update(opt, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    step: int
+    losses: list
+    restarts: int = 0
+
+
+def run_training(cfg: ModelConfig, opt: OptConfig, pipeline, *,
+                 num_steps: int, checkpoint_mgr=None, ckpt_every: int = 50,
+                 preemption=None, straggler=None, num_microbatches: int = 1,
+                 params=None, log_every: int = 10, jit: bool = True
+                 ) -> TrainResult:
+    """Fault-tolerant training loop: resume-exact from the latest
+    checkpoint (params + optimizer + data cursor), cooperative
+    preemption, per-step straggler telemetry."""
+    api = get_api(cfg)
+    if params is None:
+        params = api.init_params(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params, opt)
+    start_step = 0
+
+    if checkpoint_mgr is not None:
+        restored = checkpoint_mgr.restore_latest(
+            like={"params": params, "opt_state": opt_state})
+        if restored is not None:
+            params, opt_state, start_step = (restored["params"],
+                                             restored["opt_state"],
+                                             restored["step"])
+            pipeline.resume(start_step)
+
+    step_fn = build_train_step(cfg, opt, num_microbatches)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    losses = []
+    for step in range(start_step, num_steps):
+        t0 = time.monotonic()
+        batch = next(pipeline)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if straggler is not None:
+            straggler.observe(host=0, step=step,
+                              duration=time.monotonic() - t0)
+        if step % log_every == 0 or step == num_steps - 1:
+            losses.append((step, float(metrics["loss"])))
+        if checkpoint_mgr is not None and (step + 1) % ckpt_every == 0:
+            checkpoint_mgr.save(step + 1, {"params": params,
+                                           "opt_state": opt_state})
+        if preemption is not None and preemption.should_stop():
+            if checkpoint_mgr is not None:
+                checkpoint_mgr.save(step + 1, {"params": params,
+                                               "opt_state": opt_state})
+                checkpoint_mgr.wait()
+            return TrainResult(step + 1, losses)
+
+    if checkpoint_mgr is not None:
+        checkpoint_mgr.save(num_steps, {"params": params,
+                                        "opt_state": opt_state})
+        checkpoint_mgr.wait()
+    return TrainResult(num_steps, losses)

@@ -1,0 +1,278 @@
+"""Unit + property tests for the Centaur protocol core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import beaver, comm, nonlinear, permute, protocols, ring
+from repro.core.sharing import (ShareTensor, reconstruct, reconstruct_float,
+                                share, share_float)
+
+KEY = jax.random.key(0)
+
+
+def keys(n):
+    return jax.random.split(KEY, n)
+
+
+# ---------- ring -------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(min_value=-1e3, max_value=1e3, allow_nan=False))
+def test_ring_encode_decode_roundtrip(x):
+    v = ring.decode(ring.encode(jnp.float32(x)))
+    assert abs(float(v) - x) <= 2 ** -ring.FRAC_BITS + abs(x) * 1e-6
+
+
+def test_ring_matmul_wraps_mod_2_64():
+    a = jnp.array([[2 ** 62, 3]], dtype=jnp.int64)
+    b = jnp.array([[4], [1]], dtype=jnp.int64)
+    out = ring.ring_matmul(a, b)
+    # 2^64 + 3 mod 2^64 == 3 in two's complement
+    assert int(out[0, 0]) == 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=32))
+def test_fixed_point_matmul_error_bound(n, m):
+    k1, k2 = keys(2)
+    a = jax.random.normal(k1, (n, m))
+    b = jax.random.normal(k2, (m, n))
+    got = ring.decode(ring.fixed_point_matmul(ring.encode(a), ring.encode(b)))
+    want = a @ b
+    # one truncation: error <= m * encoding error + 1 LSB
+    tol = (m + 2) * 2 ** -ring.FRAC_BITS
+    np.testing.assert_allclose(got, want, atol=tol)
+
+
+# ---------- sharing ----------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=100))
+def test_share_reconstruct_identity(n):
+    x = jax.random.normal(jax.random.key(n), (n,))
+    st_ = share_float(jax.random.key(n + 1), x)
+    np.testing.assert_allclose(reconstruct_float(st_), x,
+                               atol=2 ** -ring.FRAC_BITS)
+
+
+def test_share_is_uniformly_masked():
+    x = jnp.zeros((4096,))
+    s = share_float(KEY, x)
+    # individual shares look uniform over the ring: huge std
+    assert float(jnp.std(s.s0.astype(jnp.float64))) > 2 ** 60
+
+
+def test_share_add_sub_public():
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (8, 8))
+    s = share_float(k2, x)
+    y = reconstruct_float(s + ring.encode(1.5) - ShareTensor(
+        jnp.zeros((8, 8), jnp.int64), jnp.zeros((8, 8), jnp.int64)))
+    np.testing.assert_allclose(y, x + 1.5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=-30, max_value=30, allow_nan=False),
+       st.floats(min_value=-30, max_value=30, allow_nan=False))
+def test_local_truncation_error_one_lsb(a, c):
+    """CrypTen local truncation: error <= 1 LSB after a public multiply."""
+    s = share_float(jax.random.key(3), jnp.float32(a))
+    prod = s.mul_public(ring.encode(jnp.float32(c)))
+    got = float(reconstruct_float(prod))
+    # encoding error of each operand is amplified by the other's magnitude
+    tol = 2 ** -ring.FRAC_BITS * (3 + abs(a) + abs(c)) + abs(a * c) * 1e-4
+    assert abs(got - a * c) <= tol
+
+
+# ---------- beaver -----------------------------------------------------------
+
+def test_beaver_matmul_matches_plaintext():
+    k1, k2, k3, k4 = keys(4)
+    x = jax.random.normal(k1, (6, 16)) * 2
+    y = jax.random.normal(k2, (16, 5))
+    dealer = beaver.TripleDealer(k3)
+    with comm.ledger() as led:
+        z = beaver.matmul(share_float(k4, x), share_float(k1, y), dealer)
+    got = reconstruct_float(z)
+    np.testing.assert_allclose(got, x @ y, atol=18 * 2 ** -ring.FRAC_BITS)
+    # online cost: 1 round, 2*(6*16+16*5)*64 bits
+    assert led.total_rounds() == 1
+    assert led.total_bits() == 2 * (6 * 16 + 16 * 5) * 64
+
+
+def test_beaver_matmul_square_matches_paper_table1():
+    n = 12
+    k1, k2, k3 = keys(3)
+    x = share_float(k1, jax.random.normal(k1, (n, n)))
+    y = share_float(k2, jax.random.normal(k2, (n, n)))
+    with comm.ledger() as led:
+        beaver.matmul(x, y, beaver.TripleDealer(k3))
+    assert led.total_bits() == 256 * n * n  # Table 1: Pi_MatMul
+    assert led.total_rounds() == 1
+
+
+def test_beaver_elementwise_mul():
+    k1, k2, k3 = keys(3)
+    x = jax.random.normal(k1, (4, 7))
+    y = jax.random.normal(k2, (4, 7))
+    z = beaver.mul(share_float(k1, x), share_float(k2, y),
+                   beaver.TripleDealer(k3))
+    np.testing.assert_allclose(reconstruct_float(z), x * y, atol=3e-4)
+
+
+def test_beaver_batched_matmul():
+    k1, k2, k3 = keys(3)
+    x = jax.random.normal(k1, (3, 4, 8))
+    y = jax.random.normal(k2, (3, 8, 5))
+    z = beaver.matmul(share_float(k1, x), share_float(k2, y),
+                      beaver.TripleDealer(k3))
+    np.testing.assert_allclose(reconstruct_float(z),
+                               jnp.matmul(x, y), atol=1e-3)
+
+
+# ---------- permutations ------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=2, max_value=64))
+def test_perm_gather_equals_dense_matmul(n):
+    p = permute.gen_perm(jax.random.key(n), n)
+    x = jax.random.normal(jax.random.key(n + 1), (3, n))
+    dense = x @ permute.perm_matrix(p).astype(x.dtype)
+    np.testing.assert_allclose(permute.apply_perm(x, p, -1), dense)
+
+
+def test_perm_inverse():
+    p = permute.gen_perm(KEY, 17)
+    x = jax.random.normal(KEY, (5, 17))
+    np.testing.assert_allclose(
+        permute.apply_inv_perm(permute.apply_perm(x, p), p), x)
+
+
+def test_permute_linear_correctness():
+    k1, k2, k3, k4 = keys(4)
+    w = jax.random.normal(k1, (10, 8))
+    b = jax.random.normal(k2, (10,))
+    p_in = permute.gen_perm(k3, 8)
+    p_out = permute.gen_perm(k4, 10)
+    x = jax.random.normal(k1, (4, 8))
+    wp, bp = permute.permute_linear(w, b, p_in, p_out)
+    y = x @ w.T + b
+    yp = permute.apply_perm(x, p_in, -1) @ wp.T + bp
+    np.testing.assert_allclose(yp, permute.apply_perm(y, p_out, -1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_brute_force_space_matches_paper():
+    # paper §2.3: n=1280 -> 1/1280! ~ 2^-11372
+    assert abs(permute.log2_brute_force_space(1280) - 11372) < 40
+
+
+# ---------- protocols ---------------------------------------------------------
+
+def test_scal_mul_is_free_and_correct():
+    k1, k2 = keys(2)
+    w = jax.random.normal(k1, (12, 8))
+    x = jax.random.normal(k2, (5, 8))
+    with comm.ledger() as led:
+        y = protocols.linear(ring.encode(w), ring.encode(jnp.zeros(12)),
+                             share_float(k1, x))
+    np.testing.assert_allclose(reconstruct_float(y), x @ w.T, atol=1e-3)
+    assert led.total_bits() == 0 and led.total_rounds() == 0
+
+
+def test_ppp_gather_equals_exact_beaver_protocol():
+    """Pi_PPP fast path (gather) must be bit-exact vs Algorithm 6."""
+    n = 16
+    k1, k2, k3, k4 = keys(4)
+    x = share_float(k1, jax.random.normal(k2, (6, n)))
+    p = permute.gen_perm(k3, n)
+    fast = protocols.pp_permute(x, p, axis=-1)
+    p_shared = share(k4, permute.perm_matrix(p))
+    exact = protocols.pp_permute_exact(x, p_shared, beaver.TripleDealer(k4))
+    np.testing.assert_array_equal(np.asarray(reconstruct(fast)),
+                                  np.asarray(reconstruct(exact)))
+
+
+def test_ppp_cost_matches_paper_table1():
+    n = 20
+    x = share_float(KEY, jax.random.normal(KEY, (n, n)))
+    p = permute.gen_perm(KEY, n)
+    with comm.ledger() as led:
+        protocols.pp_permute(x, p)
+    assert led.total_bits() == 256 * n * n
+    assert led.total_rounds() == 1
+
+
+# ---------- nonlinear ----------------------------------------------------------
+
+def test_ppsm_exact_softmax_and_cost():
+    n = 10
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (n, n)) * 3
+    p = permute.gen_perm(k2, n)
+    xp = permute.apply_perm(x, p, -1)
+    with comm.ledger() as led:
+        y = nonlinear.pp_softmax(share_float(k1, xp), k2)
+    got = reconstruct_float(y)
+    want = permute.apply_perm(jax.nn.softmax(x, -1), p, -1)
+    np.testing.assert_allclose(got, want, atol=5e-4)
+    assert led.total_bits() == 128 * n * n  # Table 1: Pi_PPSM
+    assert led.total_rounds() == 2
+
+
+def test_ppgelu_exact():
+    k1, k2 = keys(2)
+    x = jax.random.normal(k1, (4, 32)) * 4
+    y = nonlinear.pp_gelu(share_float(k1, x), k2)
+    np.testing.assert_allclose(reconstruct_float(y),
+                               jax.nn.gelu(x, approximate=False), atol=5e-4)
+
+
+def test_ppln_permutation_equivariant():
+    d = 24
+    k1, k2, k3 = keys(3)
+    x = jax.random.normal(k1, (6, d)) * 2 + 1
+    gamma = jax.random.normal(k2, (d,)) + 1
+    beta = jax.random.normal(k3, (d,))
+    p = permute.gen_perm(k1, d)
+    xp = permute.apply_perm(x, p, -1)
+    y = nonlinear.pp_layernorm(share_float(k2, xp),
+                               permute.apply_perm(gamma, p),
+                               permute.apply_perm(beta, p), k3)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    want = gamma * (x - mu) / np.sqrt(var + 1e-5) + beta
+    np.testing.assert_allclose(reconstruct_float(y),
+                               permute.apply_perm(want, p, -1), atol=2e-3)
+
+
+def test_pp_topk_router_under_expert_permutation():
+    E, k = 16, 4
+    k1, k2 = keys(2)
+    logits = jax.random.normal(k1, (12, E))
+    pe = permute.gen_perm(k2, E)
+    gates, idx = nonlinear.pp_topk_router(
+        share_float(k1, permute.apply_perm(logits, pe, -1)), k)
+    probs = jax.nn.softmax(logits, -1)
+    want_gates, want_idx = jax.lax.top_k(jax.nn.softmax(
+        permute.apply_perm(logits, pe, -1), -1), k)
+    want_gates = want_gates / want_gates.sum(-1, keepdims=True)
+    np.testing.assert_allclose(gates, want_gates, atol=5e-4)
+    # indices point at *permuted* experts — P1 never learns true ids
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+
+
+def test_comm_tags_breakdown():
+    k1, k2 = keys(2)
+    x = share_float(k1, jax.random.normal(k1, (8, 8)))
+    with comm.ledger() as led:
+        with comm.tag("softmax"):
+            nonlinear.pp_softmax(x, k2)
+        with comm.tag("linear"):
+            protocols.scal_mul(ring.encode(jnp.eye(8)), x)
+    tags = led.by_tag()
+    assert tags["softmax"]["bits"] == 128 * 64
+    assert tags["linear"]["bits"] == 0

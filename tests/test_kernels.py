@@ -1,0 +1,174 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret
+mode — the kernel body executes in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.ring  # noqa: F401  (enables x64 before int64 use)
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+def _randi(key, shape, dtype=jnp.int32):
+    bits = jax.random.bits(key, shape, dtype=jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.int32).astype(dtype)
+
+
+# ---- ring matmul -------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (8, 16, 8, 8, 8, 8),
+    (16, 32, 24, 8, 16, 8),
+    (128, 128, 128, 64, 64, 64),
+    (32, 256, 16, 32, 128, 16),
+])
+def test_ring_matmul32_exact(m, k, n, bm, bk, bn):
+    k1, k2 = jax.random.split(KEY)
+    a = _randi(k1, (m, k))
+    b = _randi(k2, (k, n))
+    got = ops.ring_matmul32(a, b, bm=bm, bk=bk, bn=bn, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.ring_matmul32_ref(a, b)))
+
+
+def test_ring_matmul_wide_exact():
+    k1, k2 = jax.random.split(KEY)
+    a = _randi(k1, (32, 64))
+    b = _randi(k2, (64, 16))
+    got = ops.ring_matmul_wide(a, b, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.ring_matmul_wide_ref(a, b)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_ring64_matmul_matches_int64(mm, kk, nn, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    m, k, n = 8 * mm, 8 * kk, 8 * nn
+    a = jax.lax.bitcast_convert_type(
+        jax.random.bits(k1, (m, k), dtype=jnp.uint64), jnp.int64)
+    b = jax.lax.bitcast_convert_type(
+        jax.random.bits(k2, (k, n), dtype=jnp.uint64), jnp.int64)
+    got = ops.ring64_matmul(a, b, bm=8, bk=8, bn=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.ring64_matmul_ref(a, b)))
+
+
+def test_ring64_matmul_fixed_point_semantics():
+    """The kernel path must agree with the engine's jnp int64 path."""
+    from repro.core import ring
+    k1, k2 = jax.random.split(KEY)
+    a = ring.encode(jax.random.normal(k1, (16, 24)))
+    b = ring.encode(jax.random.normal(k2, (24, 8)))
+    got = ring.decode(ring.truncate(ops.ring64_matmul(a, b, interpret=True)))
+    want = ring.decode(ring.fixed_point_matmul(a, b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+# ---- softmax / norms ----------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 64), jnp.float32), ((3, 5, 128), jnp.float32),
+    ((2, 8, 256), jnp.bfloat16), ((16, 1024), jnp.float32),
+    ((7, 96), jnp.float32),
+])
+def test_softmax_sweep(shape, dtype):
+    x = (jax.random.normal(KEY, shape, jnp.float32) * 5).astype(dtype)
+    got = ops.softmax(x, interpret=True)
+    want = ref.softmax_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((6, 64), jnp.float32), ((2, 9, 128), jnp.float32),
+    ((4, 256), jnp.bfloat16),
+])
+def test_rmsnorm_and_layernorm_sweep(shape, dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = (jax.random.normal(k1, shape, jnp.float32) * 2 + 0.5).astype(dtype)
+    g = jax.random.normal(k2, shape[-1:], jnp.float32) + 1.0
+    b = jax.random.normal(k3, shape[-1:], jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(ops.rmsnorm(x, g, interpret=True), np.float32),
+        np.asarray(ref.rmsnorm_ref(x, g), np.float32), atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(ops.layernorm(x, g, b, interpret=True), np.float32),
+        np.asarray(ref.layernorm_ref(x, g, b), np.float32), atol=tol)
+
+
+# ---- flash attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,T,D,causal,bq,bk", [
+    (1, 2, 64, 64, 32, True, 32, 32),
+    (2, 1, 128, 128, 64, True, 64, 32),
+    (1, 2, 32, 96, 32, False, 16, 32),   # cross attention (prefill kv)
+    (1, 1, 256, 256, 16, True, 128, 128),
+])
+def test_flash_attention_sweep(B, H, S, T, D, causal, bq, bk):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(k2, (B, H, T, D), jnp.float32)
+    v = jax.random.normal(k3, (B, H, T, D), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (1, 2, 64, 32), jnp.float32).astype(jnp.bfloat16)
+    k = jax.random.normal(k2, (1, 2, 64, 32), jnp.float32).astype(jnp.bfloat16)
+    v = jax.random.normal(k3, (1, 2, 64, 32), jnp.float32).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+# ---- SSD scan -------------------------------------------------------------------
+
+@pytest.mark.parametrize("Bt,L,H,P,G,N,chunk", [
+    (1, 32, 2, 16, 1, 8, 8),
+    (2, 64, 4, 8, 1, 16, 16),
+    (1, 48, 4, 16, 2, 8, 12),
+    (2, 128, 2, 32, 1, 32, 64),
+])
+def test_ssd_scan_sweep(Bt, L, H, P, G, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    f32 = jnp.float32  # x64 mode makes random.normal default to f64
+    x = jax.random.normal(ks[0], (Bt, L, H, P), f32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, L, H), f32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), f32) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, L, G, N), f32)
+    C = jax.random.normal(ks[4], (Bt, L, G, N), f32)
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_kernel_matches_model_ssd():
+    """Kernel must agree with the model-layer chunked implementation."""
+    from repro.models.mamba2 import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    f32 = jnp.float32
+    Bt, L, H, P, N = 2, 64, 4, 16, 16
+    x = jax.random.normal(ks[0], (Bt, L, H, P), f32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, L, H), f32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), f32) * 0.5)
+    B = jax.random.normal(ks[3], (Bt, L, 1, N), f32)
+    C = jax.random.normal(ks[4], (Bt, L, 1, N), f32)
+    got = ops.ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+    want = ssd_chunked(x, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)

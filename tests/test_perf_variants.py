@@ -1,0 +1,50 @@
+"""§Perf levers must not change model semantics."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch
+from repro.models.registry import get_api
+
+KEY = jax.random.key(2)
+B, S = 2, 48
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "deepseek-v2-236b",
+                                  "zamba2-7b"])
+def test_flash_attention_matches_naive(arch):
+    cfg = get_config(arch, reduced=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, KEY)
+    batch = make_batch(cfg, B, S, step=0)
+    base = api.train_loss(cfg, params, batch)
+    flash = api.train_loss(cfg.replace(attention_impl="flash",
+                                       flash_block=16), params, batch)
+    np.testing.assert_allclose(float(base), float(flash), rtol=2e-4)
+
+
+def test_flash_decode_matches_naive():
+    cfg = get_config("smollm-360m", reduced=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, KEY)
+    toks = make_batch(cfg, B, S, step=0, kind="serve")["tokens"]
+    outs = {}
+    for impl in ("naive", "flash"):
+        c = cfg.replace(attention_impl=impl, flash_block=16)
+        _, cache, pos = api.prefill(c, params, {"tokens": toks[:, :-1]},
+                                    max_len=S + 8)
+        logits, _ = api.decode_step(c, params, cache, toks[:, -1:], pos)
+        outs[impl] = np.asarray(logits)
+    np.testing.assert_allclose(outs["naive"], outs["flash"],
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_moe_sort_ranks_match_cumsum():
+    cfg = get_config("deepseek-moe-16b", reduced=True)
+    api = get_api(cfg)
+    params = api.init_params(cfg, KEY)
+    batch = make_batch(cfg, B, S, step=0)
+    a = api.train_loss(cfg, params, batch)
+    b = api.train_loss(cfg.replace(moe_rank_impl="sort"), params, batch)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on the system's core invariants:
+permutation equivariance (the algebraic fact Centaur rests on), share
+homomorphism, and the fixed-point error model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import beaver, comm, permute, ring
+from repro.core.sharing import ShareTensor, reconstruct_float, share_float
+
+dims = st.integers(min_value=2, max_value=48)
+seeds = st.integers(min_value=0, max_value=2 ** 30)
+
+
+def _arr(seed, shape, scale=3.0):
+    return jax.random.normal(jax.random.key(seed), shape,
+                             jnp.float32) * scale
+
+
+# ---- permutation equivariance (paper Eq. 7 generalized) ---------------------
+
+@settings(max_examples=20, deadline=None)
+@given(dims, seeds)
+def test_softmax_permutation_equivariant(n, seed):
+    x = _arr(seed, (3, n))
+    p = permute.gen_perm(jax.random.key(seed + 1), n)
+    lhs = jax.nn.softmax(permute.apply_perm(x, p, -1), -1)
+    rhs = permute.apply_perm(jax.nn.softmax(x, -1), p, -1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, seeds)
+def test_norm_stats_permutation_invariant(n, seed):
+    """LayerNorm/RMSNorm statistics are invariant along the permuted
+    axis — the reason Pi_PPLN works."""
+    x = _arr(seed, (4, n))
+    p = permute.gen_perm(jax.random.key(seed + 1), n)
+    xp = permute.apply_perm(x, p, -1)
+    np.testing.assert_allclose(np.asarray(x.mean(-1)),
+                               np.asarray(xp.mean(-1)), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(jnp.var(x, -1)),
+                               np.asarray(jnp.var(xp, -1)), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims, seeds)
+def test_gated_product_shares_single_permutation(n, seed):
+    """SwiGLU invariance: (silu(a) * b) pi == silu(a pi) * (b pi)."""
+    a, b = _arr(seed, (2, n)), _arr(seed + 1, (2, n))
+    p = permute.gen_perm(jax.random.key(seed + 2), n)
+    lhs = permute.apply_perm(jax.nn.silu(a) * b, p, -1)
+    rhs = jax.nn.silu(permute.apply_perm(a, p, -1)) \
+        * permute.apply_perm(b, p, -1)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims, dims, seeds)
+def test_permuted_linear_roundtrip(n, m, seed):
+    """The paper's core identity: X pi (W pi)^T == X W^T for any pi."""
+    x = _arr(seed, (3, n))
+    w = _arr(seed + 1, (m, n))
+    p = permute.gen_perm(jax.random.key(seed + 2), n)
+    wp, _ = permute.permute_linear(w, None, p, jnp.arange(m))
+    lhs = permute.apply_perm(x, p, -1) @ wp.T
+    rhs = x @ w.T
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---- share homomorphism ------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(dims, seeds)
+def test_share_addition_homomorphic(n, seed):
+    x, y = _arr(seed, (n,)), _arr(seed + 1, (n,))
+    sx = share_float(jax.random.key(seed + 2), x)
+    sy = share_float(jax.random.key(seed + 3), y)
+    np.testing.assert_allclose(np.asarray(reconstruct_float(sx + sy)),
+                               np.asarray(x + y), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(reconstruct_float(sx - sy)),
+                               np.asarray(x - y), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(2, 16), st.integers(2, 16), seeds)
+def test_beaver_matmul_associates_with_plaintext(m, k, n, seed):
+    x, y = _arr(seed, (m, k), 1.0), _arr(seed + 1, (k, n), 1.0)
+    d = beaver.TripleDealer(jax.random.key(seed + 2))
+    z = beaver.matmul(share_float(jax.random.key(seed + 3), x),
+                      share_float(jax.random.key(seed + 4), y), d)
+    np.testing.assert_allclose(np.asarray(reconstruct_float(z)),
+                               np.asarray(x @ y),
+                               atol=(k + 2) * 2 ** -14)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims, seeds)
+def test_reshare_preserves_value_randomizes_shares(n, seed):
+    from repro.core.sharing import reshare
+    x = _arr(seed, (n,))
+    s1 = share_float(jax.random.key(seed + 1), x)
+    with comm.ledger():
+        s2 = reshare(jax.random.key(seed + 2),
+                     ring.encode(np.asarray(reconstruct_float(s1))))
+    np.testing.assert_allclose(np.asarray(reconstruct_float(s2)),
+                               np.asarray(x), atol=1e-3)
+    assert not np.array_equal(np.asarray(s1.s0), np.asarray(s2.s0))
+
+
+# ---- comm ledger algebra -------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 32), st.integers(2, 32), seeds)
+def test_matmul_comm_formula_any_shape(m, n, seed):
+    """Pi_MatMul bits == 2*(numel(X)+numel(Y))*64 for any shapes."""
+    k = 8
+    x = share_float(jax.random.key(seed), _arr(seed, (m, k), 1.0))
+    y = share_float(jax.random.key(seed + 1), _arr(seed + 1, (k, n), 1.0))
+    with comm.ledger() as led:
+        beaver.matmul(x, y, beaver.TripleDealer(jax.random.key(seed + 2)))
+    assert led.total_bits() == 2 * (m * k + k * n) * 64
