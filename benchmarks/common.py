@@ -1,6 +1,7 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -19,8 +20,19 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+def emit(name: str, us: float, derived: str = "", sink: list | None = None):
+    """Print one trajectory entry; optionally collect it into `sink`
+    (a list later flushed to a BENCH_*.json file via write_json)."""
     print(f"{name},{us:.1f},{derived}")
+    if sink is not None:
+        sink.append({"name": name, "us": us, "derived": derived})
+
+
+def write_json(path: str, entries: list):
+    """Flush emit()-collected entries as a JSON trajectory file."""
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=1)
+    print(f"# wrote {path} ({len(entries)} entries)")
 
 
 # network settings from the paper §7.1

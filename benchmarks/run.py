@@ -10,7 +10,8 @@ import traceback
 
 def main() -> None:
     from . import (comm_protocols, comm_volume, kernel_bench, latency_sim,
-                   performance_parity, privacy_attack, roofline)
+                   performance_parity, privacy_attack, roofline,
+                   secure_matmul_bench)
 
     suites = [
         ("table1_comm_protocols", comm_protocols.run),
@@ -20,6 +21,8 @@ def main() -> None:
         ("table2_privacy_attack", privacy_attack.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
+        # full sizes via `python -m benchmarks.secure_matmul_bench --full`
+        ("secure_matmul", lambda: secure_matmul_bench.run(sizes=(512,))),
     ]
     failed = []
     for name, fn in suites:

@@ -1,0 +1,126 @@
+"""Secure-GEMM microbenchmark: fused vs unfused Beaver online phase.
+
+Times the *online* combine Z = E@F + E@B + A@F + C (the protocol work
+left after the one-round opening of E and F) for square n x n operands,
+comparing three variants (DESIGN.md §4):
+
+  * fused       — ONE leading-dim-2 GEMM dispatch carrying both
+                  parties' block GEMMs [E|A_i]@[B_i(+F);F], E@F folded
+                  into party 1's block (4n^3 MACs);
+  * fused_stack — the 2-block GEMM stack + a separate E@F (2 dispatches
+                  instead of 5);
+  * unfused     — the textbook 5-GEMM reference (5n^3 MACs);
+
+plus the vectorized TriplePool offline phase against the lazy per-call
+dealer.  All variants are asserted bit-identical under the same triple.
+
+GEMM-dispatch counts come from ring.matmul_dispatches deltas measured
+at trace time (shapes are static, so one trace == one call's dispatch
+schedule).  Emits a BENCH_secure_matmul.json trajectory entry.
+
+    PYTHONPATH=src python -m benchmarks.secure_matmul_bench [--full]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+from repro.core import beaver, comm, ring
+from repro.core.sharing import share
+
+from .common import emit, time_call, write_json
+
+# default sizes keep a CPU run to ~a minute; --full adds the paper-scale
+# points (hours of int64 GEMM time off-TPU)
+SIZES = (512, 1024)
+FULL_SIZES = SIZES + (2048, 4096)
+
+
+def _setup(n: int, key):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    x = share(k1, ring.rand_ring(k2, (n, n)))
+    y = share(k3, ring.rand_ring(k4, (n, n)))
+    with comm.muted():
+        triple = beaver.TripleDealer(k5).matmul_triple(x.shape, y.shape)
+    a, b, _ = triple
+    e = jax.block_until_ready((x - a).s0 + (x - a).s1)
+    f = jax.block_until_ready((y - b).s0 + (y - b).s1)
+    return e, f, triple
+
+
+def _count_gemms(fn, *args) -> int:
+    """GEMM dispatches issued by one abstract trace of fn."""
+    before = ring.matmul_dispatches
+    jax.eval_shape(fn, *args)
+    return ring.matmul_dispatches - before
+
+
+def run(sizes=SIZES, offline_batch: int = 4):
+    sink = []
+    key = jax.random.key(0)
+    for n in sizes:
+        e, f, (a, b, c) = _setup(n, key)
+
+        variants = {
+            # one leading-dim-2 dispatch, E@F folded: 2 block GEMMs
+            "fused": jax.jit(lambda e_, f_: beaver.matmul_online(
+                e_, f_, a, b, c, fused=True)),
+            # the 2-GEMM block stack + separate E@F (2 dispatches)
+            "fused_stack": jax.jit(lambda e_, f_: beaver.matmul_online(
+                e_, f_, a, b, c, fused="stack")),
+            # textbook 5-GEMM reference
+            "unfused": jax.jit(lambda e_, f_: beaver.matmul_online(
+                e_, f_, a, b, c, fused=False)),
+        }
+        times, ref = {}, None
+        for name, fn in variants.items():
+            g = _count_gemms(fn, e, f)
+            times[name] = time_call(fn, e, f)
+            z = fn(e, f)
+            if ref is None:
+                ref = z
+            else:  # bit-exactness under the same triple (exact ring adds)
+                assert bool((z.s0 == ref.s0).all()
+                            and (z.s1 == ref.s1).all()), \
+                    f"{name} mismatch at n={n}"
+            block = {"fused": "2(+EF folded)", "fused_stack": "2(+1 EF)",
+                     "unfused": "5"}[name]
+            emit(f"secure_matmul/online_{name}/n{n}", times[name],
+                 f"dispatches={g};block_gemms={block}", sink)
+        emit(f"secure_matmul/online_speedup/n{n}", 0.0,
+             f"fused={times['unfused'] / times['fused']:.2f}x;"
+             f"stack={times['unfused'] / times['fused_stack']:.2f}x",
+             sink)
+
+        # offline phase: vectorized pool batch vs lazy per-call dealer
+        spec = beaver._canon_spec(("matmul", (n, n), (n, n)))
+        pool = beaver.TriplePool(key, batch=offline_batch)
+
+        def pool_batch():
+            with comm.muted():
+                pool.generate(spec, offline_batch)
+            store = pool._pools[spec]
+            jax.block_until_ready(store[-1][0].s0)
+            store.clear()  # don't accumulate across timing iterations
+
+        def dealer_lazy():
+            d = beaver.TripleDealer(key)
+            with comm.muted():
+                last = None
+                for _ in range(offline_batch):
+                    last = d.matmul_triple((n, n), (n, n))
+            jax.block_until_ready(last[0].s0)
+
+        t_pool = time_call(pool_batch, warmup=1, iters=3)
+        t_lazy = time_call(dealer_lazy, warmup=1, iters=3)
+        emit(f"secure_matmul/offline_pool_batch{offline_batch}/n{n}",
+             t_pool, f"{t_lazy / t_pool:.2f}x vs lazy dealer", sink)
+        emit(f"secure_matmul/offline_lazy_dealer/n{n}", t_lazy, "", sink)
+
+    write_json("BENCH_secure_matmul.json", sink)
+    return sink
+
+
+if __name__ == "__main__":
+    run(FULL_SIZES if "--full" in sys.argv else SIZES)

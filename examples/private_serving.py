@@ -12,12 +12,9 @@
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.paper_models import GPT2_TINY as CFG
 from repro.core import comm
-from repro.core.private_model import build_private_model, private_forward
 from repro.models.registry import get_api
 from repro.serving.engine import ServingEngine
 
@@ -44,23 +41,18 @@ def main():
         print(f"  req {rid}: {outs[rid]}")
 
     # ---- 2. private generation (Centaur, share-state KV cache) -----------
-    from repro.core.private_model import (centaur_decode_step,
-                                          centaur_prefill)
-    pm = build_private_model(CFG, params, key, mode="centaur")
-    seq = [1, 2, 3]
+    from repro.serving.engine import PrivateServingEngine
     n_new = 3
+    peng = PrivateServingEngine(CFG, params, key, max_len=32)
+    rid_p = peng.submit([1, 2, 3], max_new_tokens=n_new)
     with comm.ledger() as led:
-        logits, caches = centaur_prefill(
-            pm, jnp.asarray(seq, jnp.int32)[None, :])
-        seq.append(int(np.argmax(np.asarray(logits)[0])))
-        for _ in range(n_new - 1):
-            logits, caches = centaur_decode_step(
-                pm, caches, jnp.asarray([[seq[-1]]], jnp.int32),
-                len(seq) - 1)
-            seq.append(int(np.argmax(np.asarray(logits)[0])))
+        outs_p, stats = peng.run_to_completion()
+    seq = [1, 2, 3] + outs_p[rid_p]
+    st = stats[rid_p]
     print(f"[centaur] generated {n_new} tokens privately: {seq[-n_new:]}")
-    print(f"  comm: {led.total_bytes() / 1e6:.1f} MB, "
-          f"{led.total_rounds()} rounds")
+    print(f"  comm: {st['online_bits'] / 8e6:.1f} MB online "
+          f"(+{st['offline_bits'] / 8e6:.1f} MB offline, pooled), "
+          f"{st['rounds']} rounds")
     for net, (bw, rtt) in NETWORKS.items():
         t = led.simulate_time(bw, rtt) / n_new
         print(f"  simulated network time/token {net}: {t:.2f}s")

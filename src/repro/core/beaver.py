@@ -5,14 +5,48 @@ party" model, paper §2.2).  Dealer traffic is billed as offline; the
 online cost of one share x share matmul is 1 round and
 2*(numel(E) + numel(F))*64 bits — for square n x n operands that is the
 paper's 256 n^2 bits (Table 1).
+
+Online-phase structure (DESIGN.md §4): the textbook combine
+
+    Z_i = E @ B_i + A_i @ F (+ C_i, + E @ F for party 1)
+
+issues five independent ring GEMMs per multiplication.  The fused path
+collapses each party's cross terms into one block-stacked GEMM along
+the contraction axis — party 1's E @ F folds into its B-block by
+distributivity —
+
+    party 0: [E | A_0] @ [B_0     ; F]
+    party 1: [E | A_1] @ [B_1 + F ; F]
+
+and batches both parties' stacks into a single leading-dim-2 GEMM: ONE
+dispatch and 4/5 of the reference MACs instead of 5 GEMMs.  Ring
+addition is exact mod 2^64, so the fused result is *bit-identical* to
+the unfused reference given the same triple — see
+tests/test_beaver_fusion.py.
+
+Offline phase (DESIGN.md §5): `TripleDealer` generates triples lazily
+per call (reference semantics); `TriplePool` pre-generates a batch of
+triples per (kind, shape) spec in one jit-compiled vectorized pass, so
+the offline phase is actually offline as the paper bills it.
 """
 from __future__ import annotations
+
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 
 from . import comm, ring
 from .sharing import ShareTensor, reconstruct, share
+
+# Flip to False to restore the unfused 5-GEMM reference combine globally
+# (benchmarks toggle per call via the `fused=` kwarg instead).
+FUSE_ONLINE = True
+
+
+def _matmul_triple_bits(a_shape, b_shape, c_shape) -> int:
+    return (comm.numel(a_shape) + comm.numel(b_shape)
+            + comm.numel(c_shape)) * comm.RING_BITS * 2
 
 
 class TripleDealer:
@@ -32,9 +66,9 @@ class TripleDealer:
         b = ring.rand_ring(kb, b_shape)
         c = ring.ring_matmul(a, b)
         ks0, ks1, ks2 = jax.random.split(ks, 3)
-        bits = (comm.numel(a_shape) + comm.numel(b_shape)
-                + comm.numel(c.shape)) * comm.RING_BITS * 2
-        comm.record("dealer_triple", rounds=1, bits=bits, online=False)
+        comm.record("dealer_triple", rounds=1,
+                    bits=_matmul_triple_bits(a_shape, b_shape, c.shape),
+                    online=False)
         return share(ks0, a), share(ks1, b), share(ks2, c)
 
     def mul_triple(self, shape):
@@ -48,6 +82,203 @@ class TripleDealer:
                     online=False)
         return share(ks0, a), share(ks1, b), share(ks2, c)
 
+    def square_triple(self, shape):
+        """(A, A^2) pair for the square protocol (half a mul triple)."""
+        ka, ks1, ks2 = self._split()
+        a = ring.rand_ring(ka, shape)
+        c = a * a
+        comm.record("dealer_triple", rounds=1,
+                    bits=comm.numel(shape) * comm.RING_BITS * 4,
+                    online=False)
+        return share(ks1, a), share(ks2, c)
+
+
+# =============================================================================
+# triple pool: vectorized, jit-compiled offline phase (DESIGN.md §5)
+# =============================================================================
+
+def _gen_matmul_triple(key, a_shape, b_shape):
+    ka, kb, ks = jax.random.split(key, 3)
+    a = ring.rand_ring(ka, a_shape)
+    b = ring.rand_ring(kb, b_shape)
+    c = ring.ring_matmul(a, b)
+    ks0, ks1, ks2 = jax.random.split(ks, 3)
+    return share(ks0, a), share(ks1, b), share(ks2, c)
+
+
+def _gen_mul_triple(key, shape):
+    ka, kb, ks = jax.random.split(key, 3)
+    a = ring.rand_ring(ka, shape)
+    b = ring.rand_ring(kb, shape)
+    ks0, ks1, ks2 = jax.random.split(ks, 3)
+    return share(ks0, a), share(ks1, b), share(ks2, a * b)
+
+
+def _gen_square_triple(key, shape):
+    ka, ks1, ks2 = jax.random.split(key, 3)
+    a = ring.rand_ring(ka, shape)
+    return share(ks1, a), share(ks2, a * a)
+
+
+_GEN = {"matmul": _gen_matmul_triple, "mul": _gen_mul_triple,
+        "square": _gen_square_triple}
+
+
+def _spec_offline_bits(spec) -> int:
+    kind = spec[0]
+    if kind == "matmul":
+        _, a_shape, b_shape = spec
+        c_shape = jax.eval_shape(
+            lambda a, b: jnp.matmul(a, b),
+            jax.ShapeDtypeStruct(a_shape, ring.RING_DTYPE),
+            jax.ShapeDtypeStruct(b_shape, ring.RING_DTYPE)).shape
+        return _matmul_triple_bits(a_shape, b_shape, c_shape)
+    n = comm.numel(spec[1])
+    return n * comm.RING_BITS * (6 if kind == "mul" else 4)
+
+
+class TriplePool:
+    """Shape-keyed pool of pre-generated multiplication triples.
+
+    Specs are `("matmul", a_shape, b_shape)`, `("mul", shape)` or
+    `("square", shape)`.  Generation for a spec batch runs as ONE
+    jit-compiled vectorized program (vmap over PRG subkeys), so a
+    layer's worth of triples costs a single dispatch — this is the
+    protocol's offline phase, billed as offline dealer traffic at
+    generation time.  The pool quacks like `TripleDealer`, so every
+    beaver op accepts either.
+    """
+
+    def __init__(self, key, batch: int = 8):
+        self._key = key
+        self.batch = batch
+        self._pools: dict[tuple, deque] = {}
+        self._gen_fns: dict[tuple, object] = {}
+        self._taken: dict[tuple, int] = {}
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _gen_fn(self, spec, n: int):
+        """jitted (key -> n stacked triples) generator for one spec."""
+        cache_key = (spec, n)
+        if cache_key not in self._gen_fns:
+            kind, shapes = spec[0], spec[1:]
+
+            def gen(key):
+                keys = jax.random.split(key, n)
+                return jax.vmap(lambda k: _GEN[kind](k, *shapes))(keys)
+
+            self._gen_fns[cache_key] = jax.jit(gen)
+        return self._gen_fns[cache_key]
+
+    def generate(self, spec, n: int):
+        """Vectorized offline generation of n triples for one spec.
+        n == 1 generates eagerly (no per-spec program compile) — the
+        right shape for one-shot specs like growing KV-decode GEMMs."""
+        spec = _canon_spec(spec)
+        pool = self._pools.setdefault(spec, deque())
+        if n == 1:
+            pool.append(_GEN[spec[0]](self._next_key(), *spec[1:]))
+        else:
+            stacked = self._gen_fn(spec, n)(self._next_key())
+            for i in range(n):
+                pool.append(jax.tree.map(lambda t: t[i], stacked))
+        comm.record("dealer_triple", rounds=1,
+                    bits=n * _spec_offline_bits(spec), online=False)
+
+    def prefetch(self, specs):
+        """Pre-generate exactly the given multiset of specs (e.g. one
+        forward layer's trace), one vectorized dispatch per unique
+        spec."""
+        counts: dict[tuple, int] = {}
+        for s in specs:
+            s = _canon_spec(s)
+            counts[s] = counts.get(s, 0) + 1
+        for spec, n in counts.items():
+            have = len(self._pools.get(spec, ()))
+            if have < n:
+                self.generate(spec, n - have)
+
+    def take(self, spec):
+        """Pop a triple, generating demand-proportionally on a miss:
+        min(batch, takes-so-far, >= 1).  One-shot shapes (e.g. the
+        per-step growing GEMMs of KV-cache decode) generate exactly
+        what they use — no inflated offline billing, no vectorized
+        generators compiled for shapes never seen again — while hot
+        recurring shapes ramp up to `batch`-ahead generation."""
+        spec = _canon_spec(spec)
+        pool = self._pools.setdefault(spec, deque())
+        if not pool:
+            n = min(self.batch, max(1, self._taken.get(spec, 0)))
+            self.generate(spec, n)
+        self._taken[spec] = self._taken.get(spec, 0) + 1
+        return pool.popleft()
+
+    def size(self, spec) -> int:
+        return len(self._pools.get(_canon_spec(spec), ()))
+
+    # ---- TripleDealer interface -------------------------------------------
+    def matmul_triple(self, a_shape, b_shape):
+        return self.take(("matmul", a_shape, b_shape))
+
+    def mul_triple(self, shape):
+        return self.take(("mul", shape))
+
+    def square_triple(self, shape):
+        return self.take(("square", shape))
+
+
+def _canon_spec(spec) -> tuple:
+    return tuple((spec[0],) + tuple(tuple(int(d) for d in s)
+                                    for s in spec[1:]))
+
+
+class ReplayDealer:
+    """Hands out pre-generated triples in recorded order (the online
+    side of the pooled offline phase; see private_model's jitted
+    forward).  Records nothing — offline traffic was billed by the pool
+    at generation time."""
+
+    def __init__(self, triples):
+        self._triples = iter(triples)
+
+    def matmul_triple(self, a_shape, b_shape):
+        return next(self._triples)
+
+    def mul_triple(self, shape):
+        return next(self._triples)
+
+    def square_triple(self, shape):
+        return next(self._triples)
+
+
+class RecordingDealer(TripleDealer):
+    """TripleDealer that also logs the (kind, shapes) request sequence —
+    used under an abstract trace to discover a layer's triple demand
+    so the pool can prefetch it."""
+
+    def __init__(self, key):
+        super().__init__(key)
+        self.specs: list[tuple] = []
+
+    def matmul_triple(self, a_shape, b_shape):
+        self.specs.append(_canon_spec(("matmul", a_shape, b_shape)))
+        return super().matmul_triple(a_shape, b_shape)
+
+    def mul_triple(self, shape):
+        self.specs.append(_canon_spec(("mul", shape)))
+        return super().mul_triple(shape)
+
+    def square_triple(self, shape):
+        self.specs.append(_canon_spec(("square", shape)))
+        return super().square_triple(shape)
+
+
+# =============================================================================
+# online phase
+# =============================================================================
 
 def _open_masked(x: ShareTensor, a: ShareTensor, protocol: str):
     """Open x - a (both parties exchange their shares)."""
@@ -58,9 +289,80 @@ def _open_masked(x: ShareTensor, a: ShareTensor, protocol: str):
     return e
 
 
-def matmul(x: ShareTensor, y: ShareTensor, dealer: TripleDealer,
+def matmul_online(e, f, a: ShareTensor, b: ShareTensor, c: ShareTensor,
+                  fused=None) -> ShareTensor:
+    """Online combine Z = E@F + E@B + A@F + C from opened E, F.
+
+    fused=True (default): one leading-dim-2 block GEMM
+
+        party 0:  [E | A_0] @ [B_0     ; F]  = E@B_0 + A_0@F
+        party 1:  [E | A_1] @ [B_1 + F ; F]  = E@B_1 + E@F + A_1@F
+
+    — E@F is *folded* into party 1's block by distributivity (ring adds
+    are exact mod 2^64), so the whole online phase is ONE batched GEMM
+    dispatch and 4n^3 MACs instead of the reference's 5 GEMMs / 5n^3.
+
+    fused="stack": the intermediate form — the same leading-dim-2 block
+    GEMM with a separate E@F (2 dispatches) — kept for benchmarking.
+
+    All variants are bit-identical given the same triple."""
+    if fused is None:
+        fused = FUSE_ONLINE
+    can_fuse = (fused and e.ndim >= 2 and f.ndim >= 2
+                and (e.shape[:-2] == f.shape[:-2] or f.ndim == 2))
+    if not can_fuse:
+        ef = ring.ring_matmul(e, f)
+        z0 = ring.ring_matmul(e, b.s0) + ring.ring_matmul(a.s0, f) + c.s0
+        z1 = (ef + ring.ring_matmul(e, b.s1) + ring.ring_matmul(a.s1, f)
+              + c.s1)
+        return ShareTensor(z0, z1)
+
+    # [E | A_i] along the contraction axis of the lhs (last), and
+    # [B_i ; F] along the contraction axis of the rhs (second-last);
+    # parties stacked on a fresh leading batch axis.  A rank-2 rhs
+    # against a batched lhs (e.g. one-hot @ embedding) is fused by
+    # flattening the lhs batch dims into rows.
+    stack_ef = fused == "stack"
+    if f.ndim == 2 and e.ndim > 2:
+        e2 = e.reshape(-1, e.shape[-1])
+        a0, a1 = (a.s0.reshape(e2.shape), a.s1.reshape(e2.shape))
+    else:
+        e2, a0, a1 = e, a.s0, a.s1
+    lhs = jnp.stack([jnp.concatenate([e2, a0], axis=-1),
+                     jnp.concatenate([e2, a1], axis=-1)])
+    rhs1_top = b.s1 if stack_ef else b.s1 + f
+    rhs = jnp.stack([jnp.concatenate([b.s0, f], axis=-2),
+                     jnp.concatenate([rhs1_top, f], axis=-2)])
+    cross = ring.ring_matmul(lhs, rhs)
+    out_shape = c.shape
+    z0 = cross[0].reshape(out_shape) + c.s0
+    z1 = cross[1].reshape(out_shape) + c.s1
+    if stack_ef:
+        z1 = z1 + ring.ring_matmul(e, f)
+    return ShareTensor(z0, z1)
+
+
+def mul_online(e, f, a: ShareTensor, b: ShareTensor, c: ShareTensor,
+               fused=None) -> ShareTensor:
+    """Element-wise online combine (one stacked multiply when fused;
+    e*f folds into party 1's term as e*(b_1 + f))."""
+    if fused is None:
+        fused = FUSE_ONLINE
+    if fused:
+        prod = (jnp.stack([e, a.s0, e, a.s1])
+                * jnp.stack([b.s0, f, b.s1 + f, f]))
+        z0 = prod[0] + prod[1] + c.s0
+        z1 = prod[2] + prod[3] + c.s1
+    else:
+        z0 = e * b.s0 + a.s0 * f + c.s0
+        z1 = e * f + e * b.s1 + a.s1 * f + c.s1
+    return ShareTensor(z0, z1)
+
+
+def matmul(x: ShareTensor, y: ShareTensor, dealer,
            frac_bits: int = ring.FRAC_BITS, rescale: bool = True,
-           protocol: str = "matmul") -> ShareTensor:
+           protocol: str = "matmul",
+           fused: bool | None = None) -> ShareTensor:
     """[X @ Y] from [X], [Y].  Batched shapes supported (jnp.matmul rules).
 
     Z = E@F + E@B + A@F + C with E = X-A, F = Y-B opened in one round.
@@ -69,43 +371,40 @@ def matmul(x: ShareTensor, y: ShareTensor, dealer: TripleDealer,
     e = _open_masked(x, a, protocol)
     f = _open_masked(y, b, protocol)
     comm.record(protocol, rounds=1, bits=0)  # E,F open concurrently: 1 round
-    ef = ring.ring_matmul(e, f)
-    z0 = ring.ring_matmul(e, b.s0) + ring.ring_matmul(a.s0, f) + c.s0
-    z1 = (ef + ring.ring_matmul(e, b.s1) + ring.ring_matmul(a.s1, f)
-          + c.s1)
-    z = ShareTensor(z0, z1)
+    z = matmul_online(e, f, a, b, c, fused)
     return z.truncate(frac_bits) if rescale else z
 
 
-def mul(x: ShareTensor, y: ShareTensor, dealer: TripleDealer,
+def mul(x: ShareTensor, y: ShareTensor, dealer,
         frac_bits: int = ring.FRAC_BITS, rescale: bool = True,
-        protocol: str = "mul") -> ShareTensor:
+        protocol: str = "mul", fused: bool | None = None) -> ShareTensor:
     """Element-wise [X * Y] (broadcasting not supported: shapes must match)."""
     assert x.shape == y.shape, (x.shape, y.shape)
     a, b, c = dealer.mul_triple(x.shape)
     e = _open_masked(x, a, protocol)
     f = _open_masked(y, b, protocol)
     comm.record(protocol, rounds=1, bits=0)
-    z0 = e * b.s0 + a.s0 * f + c.s0
-    z1 = e * f + e * b.s1 + a.s1 * f + c.s1
-    z = ShareTensor(z0, z1)
+    z = mul_online(e, f, a, b, c, fused)
     return z.truncate(frac_bits) if rescale else z
 
 
-def square(x: ShareTensor, dealer: TripleDealer,
-           frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
+def square(x: ShareTensor, dealer,
+           frac_bits: int = ring.FRAC_BITS,
+           fused: bool | None = None) -> ShareTensor:
     """[X^2] with a square triple (A, A^2): only E = X-A is opened, so the
     cost is half a mul — 1 round, 128 * numel bits (CrypTen semantics;
     this is what makes exp cost the paper's 1024 bits/scalar)."""
-    ka, ks1, ks2 = dealer._split()
-    a = ring.rand_ring(ka, x.shape)
-    c = a * a
-    comm.record("dealer_triple", rounds=1,
-                bits=comm.numel(x.shape) * comm.RING_BITS * 4, online=False)
-    a_sh = share(ks1, a)
-    c_sh = share(ks2, c)
+    if fused is None:
+        fused = FUSE_ONLINE
+    a_sh, c_sh = dealer.square_triple(x.shape)
     e = _open_masked(x, a_sh, "square")
     comm.record("square", rounds=1, bits=0)
-    z0 = 2 * e * a_sh.s0 + c_sh.s0
-    z1 = e * e + 2 * e * a_sh.s1 + c_sh.s1
+    if fused:
+        # z0 = e*(2 a_0); z1 = e*(e + 2 a_1)  (e*e folded, one stacked mul)
+        prod = jnp.stack([2 * a_sh.s0, e + 2 * a_sh.s1]) * e
+        z0 = prod[0] + c_sh.s0
+        z1 = prod[1] + c_sh.s1
+    else:
+        z0 = 2 * e * a_sh.s0 + c_sh.s0
+        z1 = e * e + 2 * e * a_sh.s1 + c_sh.s1
     return ShareTensor(z0, z1).truncate(frac_bits)

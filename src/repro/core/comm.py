@@ -80,6 +80,7 @@ class CommLedger:
 # ---- ambient ledger / tag stacks ----------------------------------------
 _LEDGERS: list[CommLedger] = []
 _TAGS: list[str] = []
+_CAPTURES: list[CommLedger] = []
 
 
 @contextlib.contextmanager
@@ -90,6 +91,39 @@ def ledger():
         yield led
     finally:
         _LEDGERS.pop()
+
+
+@contextlib.contextmanager
+def capture():
+    """Record *exclusively* into the yielded ledger.
+
+    Used to build static cost schedules: an abstract trace of a protocol
+    block (jax.eval_shape) records its events here without leaking them
+    into the caller's ambient ledgers, so the schedule can later be
+    `replay`ed exactly once per real execution of the jitted block."""
+    led = CommLedger()
+    _CAPTURES.append(led)
+    try:
+        yield led
+    finally:
+        _CAPTURES.pop()
+
+
+def replay(events, online_only: bool = False):
+    """Bill a pre-captured schedule into every active ledger.
+
+    Events keep their capture-time protocol/tag so per-layer breakdowns
+    are identical to eager execution.  `online_only` skips offline
+    (dealer) events — used when the triple pool bills the offline phase
+    itself at generation time."""
+    if _MUTED[-1] or _CAPTURES:
+        return
+    for led in _LEDGERS:
+        for e in events:
+            if online_only and not e.online:
+                continue
+            led.events.append(CommEvent(e.protocol, e.rounds, e.bits,
+                                        e.tag, e.online))
 
 
 @contextlib.contextmanager
@@ -120,8 +154,14 @@ def muted():
 
 
 def record(protocol: str, rounds: int, bits: int, online: bool = True):
-    """Record into every active ledger (no-op when none is active)."""
+    """Record into every active ledger (no-op when none is active).
+
+    While a `capture()` is open, events go only to the innermost capture
+    ledger (they will be billed to real ledgers later via `replay`)."""
     if _MUTED[-1]:
+        return
+    if _CAPTURES:
+        _CAPTURES[-1].record(protocol, rounds, bits, online)
         return
     for led in _LEDGERS:
         led.record(protocol, rounds, bits, online)

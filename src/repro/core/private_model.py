@@ -77,13 +77,20 @@ class PrivateModel:
     perms: dict                      # named index-permutations
     wp: dict                         # prepared parameters
     ks: KeyStream
-    dealer: beaver.TripleDealer
+    dealer: Any                      # TripleDealer or TriplePool
     exposed: dict = field(default_factory=dict)
+    pool: Any = None                 # lazily-built beaver.TriplePool
+    jit_cache: dict = field(default_factory=dict)
 
     def expose(self, name, value):
         """Record an intermediate as seen by the cloud platform P1."""
         if name not in self.exposed:
             self.exposed[name] = value
+
+    def triple_pool(self):
+        if self.pool is None:
+            self.pool = beaver.TriplePool(self.ks())
+        return self.pool
 
 
 def _mamba_channel_perms(cfg, ks):
@@ -100,10 +107,11 @@ def _mamba_channel_perms(cfg, ks):
     return {"H": pH, "P": pP, "N": pN, "XP": pXP, "GN": pGN}
 
 
-def build_private_model(cfg, params, key, mode: str = "centaur"
-                        ) -> PrivateModel:
+def build_private_model(cfg, params, key, mode: str = "centaur",
+                        use_pool: bool = False) -> PrivateModel:
     ks = KeyStream(key)
-    dealer = beaver.TripleDealer(ks())
+    dealer = (beaver.TriplePool(ks()) if use_pool
+              else beaver.TripleDealer(ks()))
     d = cfg.d_model
     perms = {"d": permute.gen_perm(ks(), d)}
     if mode == "permute" or mode == "centaur":
@@ -643,6 +651,48 @@ def _c_mamba_block(pm: PrivateModel, p, x: ShareTensor, layer_idx: int):
         return _linear(pm, p["out_proj"], y)
 
 
+def _c_layer(pm: PrivateModel, p, x: ShareTensor, i: int) -> ShareTensor:
+    """One centaur transformer layer (dense/encoder/moe families).
+    Exposure hooks fire only for i == 0; the jitted path passes i >= 1
+    so no traced intermediate escapes into pm.exposed."""
+    cfg = pm.cfg
+    h = _c_norm(pm, p["ln1"], x) if cfg.prenorm else x
+    attn = (_c_mla_attention if cfg.use_mla else _c_attention)(
+        pm, p["attn"], h, i)
+    x = x + attn
+    if not cfg.prenorm:
+        x = _c_norm(pm, p["ln1"], x,
+                    expose_as="O4" if i == 0 else None)
+    elif i == 0:
+        pm.expose("O4", ring.decode(reconstruct(x), dtype=P32))
+    h = _c_norm(pm, p["ln2"], x) if cfg.prenorm else x
+    f = _c_ffn(pm, p["ffn"], h, i)
+    x = x + f
+    if not cfg.prenorm:
+        x = _c_norm(pm, p["ln2"], x,
+                    expose_as="O6" if i == 0 else None)
+    elif i == 0:
+        pm.expose("O6", ring.decode(reconstruct(x), dtype=P32))
+    return x
+
+
+def _c_head(pm: PrivateModel, x: ShareTensor):
+    """Adaptation layer + de-permutation (shared by eager/jit paths)."""
+    cfg = pm.cfg
+    with comm.tag("adaptation"):
+        if cfg.family == "encoder":
+            pooled = protocols.linear(pm.wp["pooler"]["w"],
+                                      pm.wp["pooler"]["b"], x[:, 0, :])
+            t = nonlinear.pp_tanh(pooled, pm.ks())
+            out = protocols.linear(pm.wp["classifier"]["w"],
+                                   pm.wp["classifier"]["b"], t)
+            return ring.decode(reconstruct(out), dtype=P32)
+        x = _c_norm(pm, pm.wp["final_norm"], x, tag="adaptation")
+        logits_p = protocols.linear(pm.wp["head"]["w"], None, x)
+    yv = ring.decode(reconstruct(logits_p), dtype=P32)
+    return permute.apply_inv_perm(yv, pm.perms["v"], -1)
+
+
 # =============================================================================
 # forward passes
 # =============================================================================
@@ -699,39 +749,9 @@ def centaur_forward(pm: PrivateModel, tokens):
             h = _c_norm(pm, p["ln1"], x)
             x = x + _c_mamba_block(pm, p["mamba"], h, i)
             continue
-        h = _c_norm(pm, p["ln1"], x) if cfg.prenorm else x
-        attn = (_c_mla_attention if cfg.use_mla else _c_attention)(
-            pm, p["attn"], h, i)
-        x = x + attn
-        if not cfg.prenorm:
-            x = _c_norm(pm, p["ln1"], x,
-                        expose_as="O4" if i == 0 else None)
-        elif i == 0:
-            pm.expose("O4", ring.decode(reconstruct(x), dtype=P32))
-        h = _c_norm(pm, p["ln2"], x) if cfg.prenorm else x
-        f = _c_ffn(pm, p["ffn"], h, i)
-        x = x + f
-        if not cfg.prenorm:
-            x = _c_norm(pm, p["ln2"], x,
-                        expose_as="O6" if i == 0 else None)
-        elif i == 0:
-            pm.expose("O6", ring.decode(reconstruct(x), dtype=P32))
+        x = _c_layer(pm, p, x, i)
 
-    with comm.tag("adaptation"):
-        if cfg.family == "encoder":
-            pooled = protocols.linear(pm.wp["pooler"]["w"],
-                                      pm.wp["pooler"]["b"], x[:, 0, :])
-            t = nonlinear.pp_tanh(pooled, pm.ks())
-            out = protocols.linear(pm.wp["classifier"]["w"],
-                                   pm.wp["classifier"]["b"], t)
-            return ring.decode(reconstruct(out), dtype=P32)
-        if cfg.prenorm:
-            x = _c_norm(pm, pm.wp["final_norm"], x, tag="adaptation")
-        else:
-            x = _c_norm(pm, pm.wp["final_norm"], x, tag="adaptation")
-        logits_p = protocols.linear(pm.wp["head"]["w"], None, x)
-    yv = ring.decode(reconstruct(logits_p), dtype=P32)
-    return permute.apply_inv_perm(yv, pm.perms["v"], -1)
+    return _c_head(pm, x)
 
 
 # =============================================================================
@@ -782,62 +802,50 @@ def _s_act(pm, x: ShareTensor):
         return smpc_nl.smpc_gelu(x, pm.dealer)
 
 
-def smpc_forward(pm: PrivateModel, tokens):
-    """PUMA/MPCFormer-style baseline (encoder/dense MLP families)."""
+def _s_layer(pm: PrivateModel, p, x: ShareTensor) -> ShareTensor:
+    """One smpc-baseline transformer layer (shared weights)."""
     cfg = pm.cfg
-    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp", \
-        "smpc baseline implemented for the paper's BERT/GPT-2 shapes"
-    B, S = tokens.shape
+    B, S, _ = x.shape
     h, dh = cfg.num_heads, cfg.dh
-    onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=ring.RING_DTYPE)
-    x_oh = share(pm.ks(), onehot)
-    with comm.tag("embedding"):
-        emb_t = pm.wp["embed"]["tok"]
-        y = beaver.matmul(x_oh, emb_t, pm.dealer, rescale=False)
-        if "pos" in pm.wp["embed"]:
-            pos = pm.wp["embed"]["pos"]
-            y = y + ShareTensor(pos.s0[:S][None], pos.s1[:S][None])
-        if "embed_norm" in pm.wp:
-            y = _s_norm(pm, pm.wp["embed_norm"], y)
-    x = y
+    a = p["attn"]
+    hin = _s_norm(pm, p["ln1"], x) if cfg.prenorm else x
+    with comm.tag("linear"):
+        q = _s_linear(pm, a["wq"], None, hin).reshape(B, S, h, dh)
+        k = _s_linear(pm, a["wk"], None, hin).reshape(B, S, h, dh)
+        v = _s_linear(pm, a["wv"], None, hin).reshape(B, S, h, dh)
+    q = q.transpose(0, 2, 1, 3)
+    kt = ShareTensor(k.s0.transpose(0, 2, 3, 1), k.s1.transpose(0, 2, 3, 1))
+    with comm.tag("linear"):
+        o1 = beaver.matmul(q, kt, pm.dealer).mul_public(
+            ring.encode(dh ** -0.5))
+    if cfg.causal:
+        mask = jnp.tril(jnp.ones((S, S))) - 1.0
+        o1 = o1 + ring.encode(mask * 1e4)
+    o2 = _s_softmax(pm, o1)
+    vt = ShareTensor(v.s0.transpose(0, 2, 1, 3), v.s1.transpose(0, 2, 1, 3))
+    with comm.tag("linear"):
+        o3 = beaver.matmul(o2, vt, pm.dealer)
+    o3 = o3.transpose(0, 2, 1, 3).reshape(B, S, h * dh)
+    with comm.tag("linear"):
+        attn_out = _s_linear(pm, a["wo"], None, o3)
+    x = x + attn_out
+    if not cfg.prenorm:
+        x = _s_norm(pm, p["ln1"], x)
+    hin = _s_norm(pm, p["ln2"], x) if cfg.prenorm else x
+    f = p["ffn"]
+    with comm.tag("linear"):
+        o5 = _s_linear(pm, f["w_up"], f["b_up"], hin)
+    g = _s_act(pm, o5)
+    with comm.tag("linear"):
+        o6 = _s_linear(pm, f["w_down"], f["b_down"], g)
+    x = x + o6
+    if not cfg.prenorm:
+        x = _s_norm(pm, p["ln2"], x)
+    return x
 
-    for i in range(cfg.num_layers):
-        p = jax.tree.map(lambda a: a[i], pm.wp["layers"])
-        a = p["attn"]
-        hin = _s_norm(pm, p["ln1"], x) if cfg.prenorm else x
-        with comm.tag("linear"):
-            q = _s_linear(pm, a["wq"], None, hin).reshape(B, S, h, dh)
-            k = _s_linear(pm, a["wk"], None, hin).reshape(B, S, h, dh)
-            v = _s_linear(pm, a["wv"], None, hin).reshape(B, S, h, dh)
-        q = q.transpose(0, 2, 1, 3)
-        kt = ShareTensor(k.s0.transpose(0, 2, 3, 1), k.s1.transpose(0, 2, 3, 1))
-        with comm.tag("linear"):
-            o1 = beaver.matmul(q, kt, pm.dealer).mul_public(
-                ring.encode(dh ** -0.5))
-        if cfg.causal:
-            mask = jnp.tril(jnp.ones((S, S))) - 1.0
-            o1 = o1 + ring.encode(mask * 1e4)
-        o2 = _s_softmax(pm, o1)
-        vt = ShareTensor(v.s0.transpose(0, 2, 1, 3), v.s1.transpose(0, 2, 1, 3))
-        with comm.tag("linear"):
-            o3 = beaver.matmul(o2, vt, pm.dealer)
-        o3 = o3.transpose(0, 2, 1, 3).reshape(B, S, h * dh)
-        with comm.tag("linear"):
-            attn_out = _s_linear(pm, a["wo"], None, o3)
-        x = x + attn_out
-        if not cfg.prenorm:
-            x = _s_norm(pm, p["ln1"], x)
-        hin = _s_norm(pm, p["ln2"], x) if cfg.prenorm else x
-        f = p["ffn"]
-        with comm.tag("linear"):
-            o5 = _s_linear(pm, f["w_up"], f["b_up"], hin)
-        g = _s_act(pm, o5)
-        with comm.tag("linear"):
-            o6 = _s_linear(pm, f["w_down"], f["b_down"], g)
-        x = x + o6
-        if not cfg.prenorm:
-            x = _s_norm(pm, p["ln2"], x)
 
+def _s_head(pm: PrivateModel, x: ShareTensor):
+    cfg = pm.cfg
     with comm.tag("adaptation"):
         if cfg.family == "encoder":
             pooled = _s_linear(pm, pm.wp["pooler"]["w"],
@@ -853,6 +861,34 @@ def smpc_forward(pm: PrivateModel, tokens):
             jnp.swapaxes(head_w.s0, 0, 1), jnp.swapaxes(head_w.s1, 0, 1)),
             pm.dealer)
     return ring.decode(reconstruct(logits), dtype=P32)
+
+
+def _s_embed(pm: PrivateModel, tokens) -> ShareTensor:
+    cfg = pm.cfg
+    _, S = tokens.shape
+    onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=ring.RING_DTYPE)
+    x_oh = share(pm.ks(), onehot)
+    with comm.tag("embedding"):
+        emb_t = pm.wp["embed"]["tok"]
+        y = beaver.matmul(x_oh, emb_t, pm.dealer, rescale=False)
+        if "pos" in pm.wp["embed"]:
+            pos = pm.wp["embed"]["pos"]
+            y = y + ShareTensor(pos.s0[:S][None], pos.s1[:S][None])
+        if "embed_norm" in pm.wp:
+            y = _s_norm(pm, pm.wp["embed_norm"], y)
+    return y
+
+
+def smpc_forward(pm: PrivateModel, tokens):
+    """PUMA/MPCFormer-style baseline (encoder/dense MLP families)."""
+    cfg = pm.cfg
+    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp", \
+        "smpc baseline implemented for the paper's BERT/GPT-2 shapes"
+    x = _s_embed(pm, tokens)
+    for i in range(cfg.num_layers):
+        p = jax.tree.map(lambda a: a[i], pm.wp["layers"])
+        x = _s_layer(pm, p, x)
+    return _s_head(pm, x)
 
 
 # =============================================================================
@@ -925,7 +961,127 @@ def permute_forward(pm: PrivateModel, tokens):
     return permute.apply_inv_perm(logits, pm.perms["v"], -1)
 
 
-def private_forward(pm: PrivateModel, tokens):
+# =============================================================================
+# jitted per-layer forward (hot path: fused online phase + triple pool +
+# static comm schedule — see DESIGN.md §6)
+# =============================================================================
+
+@dataclass
+class _JitLayer:
+    fn: Any           # jitted (p, x, key, triples) -> x'
+    specs: list       # per-layer triple demand, in request order
+    events: list      # captured per-layer comm schedule (CommEvents)
+
+
+def _shadow(pm: PrivateModel, key, dealer) -> PrivateModel:
+    """pm clone with a traced key stream/dealer and inert exposure."""
+    return PrivateModel(pm.cfg, pm.mode, pm.perms, pm.wp,
+                        KeyStream(key), dealer)
+
+
+def _build_jit_layer(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
+    """Compile one layer into a jitted function plus its static cost
+    schedule and triple demand.
+
+    1. An abstract trace (jax.eval_shape — zero FLOPs) under a
+       `comm.capture()` discovers the layer's exact (rounds, bits)
+       schedule and, via a RecordingDealer, the ordered multiset of
+       Beaver triples it consumes.
+    2. The online function is jitted with triples as *inputs* (a
+       ReplayDealer hands them out in recorded order), so the offline
+       phase runs ahead of time through the vectorized TriplePool and
+       the jitted online program contains no dealer work.
+    3. `comm.record` is Python-side and would fire once at trace time
+       only; the traced body runs muted and the captured schedule is
+       `comm.replay`ed per call instead, keeping the ledger exact.
+    """
+    key = pm.ks()
+
+    recorders = []
+
+    def record_run(p_, x_, key_):
+        kd, ku = jax.random.split(key_)
+        rec = beaver.RecordingDealer(kd)
+        recorders.append(rec)
+        return body(_shadow(pm, ku, rec), p_, x_)
+
+    with comm.capture() as sched:
+        jax.eval_shape(record_run, p, x, key)
+    specs = recorders[-1].specs
+
+    def online_run(p_, x_, key_, triples):
+        _, ku = jax.random.split(key_)
+        with comm.muted():
+            return body(_shadow(pm, ku, beaver.ReplayDealer(triples)),
+                        p_, x_)
+
+    return _JitLayer(jax.jit(online_run), specs, list(sched.events))
+
+
+def _jit_layer_for(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
+    cache_key = (name, jax.tree.structure(p),
+                 tuple(jnp.shape(le) for le in jax.tree.leaves(p)),
+                 x.shape)
+    if cache_key not in pm.jit_cache:
+        pm.jit_cache[cache_key] = _build_jit_layer(pm, name, body, p, x)
+    return pm.jit_cache[cache_key]
+
+
+def _run_jit_layers(pm: PrivateModel, layer_ps, body, name: str,
+                    x: ShareTensor) -> ShareTensor:
+    """Offline: prefetch every layer's triples in one vectorized batch
+    per spec.  Online: run the jitted layer per depth, replaying the
+    captured schedule (online events; offline was billed by the pool)."""
+    jl = _jit_layer_for(pm, name, body, layer_ps[0], x)
+    pool = pm.triple_pool()
+    pool.prefetch(jl.specs * len(layer_ps))
+    for p in layer_ps:
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        x = jl.fn(p, x, pm.ks(), triples)
+    return x
+
+
+def _jittable(pm: PrivateModel) -> bool:
+    cfg = pm.cfg
+    if pm.mode == "centaur":
+        return cfg.family in ("dense", "encoder")
+    if pm.mode in ("smpc", "mpcformer", "secformer"):
+        return cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp"
+    return False
+
+
+def centaur_forward_jit(pm: PrivateModel, tokens):
+    """Jit-compiled per-layer centaur forward.  Embedding and head run
+    eagerly (they bill normally); the layer stack runs as one compiled
+    program per depth with pool-fed triples.  Unlike the eager path it
+    does not populate pm.exposed (no intermediates leave the trace)."""
+    _, S = tokens.shape
+    xoh = encrypt_tokens(pm, tokens)
+    x = _c_embed(pm, xoh, jnp.arange(S))
+    x = _run_jit_layers(pm, pm.wp["layers"],
+                        lambda sh, p, xin: _c_layer(sh, p, xin, 1),
+                        "centaur_layer", x)
+    return _c_head(pm, x)
+
+
+def smpc_forward_jit(pm: PrivateModel, tokens):
+    """Jit-compiled per-layer smpc/mpcformer baseline forward."""
+    cfg = pm.cfg
+    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp", \
+        "smpc baseline implemented for the paper's BERT/GPT-2 shapes"
+    x = _s_embed(pm, tokens)
+    layer_ps = [jax.tree.map(lambda a: a[i], pm.wp["layers"])
+                for i in range(cfg.num_layers)]
+    x = _run_jit_layers(pm, layer_ps, _s_layer, "smpc_layer", x)
+    return _s_head(pm, x)
+
+
+def private_forward(pm: PrivateModel, tokens, jit: bool = False):
+    if jit and _jittable(pm):
+        if pm.mode == "centaur":
+            return centaur_forward_jit(pm, tokens)
+        return smpc_forward_jit(pm, tokens)
     if pm.mode == "centaur":
         return centaur_forward(pm, tokens)
     if pm.mode in ("smpc", "mpcformer", "secformer"):

@@ -53,8 +53,108 @@ def rand_ring(key, shape):
     return jax.lax.bitcast_convert_type(bits, RING_DTYPE)
 
 
+# ---- matmul backend selection ---------------------------------------------
+# "auto": Pallas int8-digit MXU kernel (kernels.ops.ring64_matmul) on TPU,
+# native int64 matmul elsewhere.  "pallas" forces the kernel (interpret
+# mode off-TPU — slow, for parity testing), "host" forces jnp.matmul.
+import os  # noqa: E402
+
+MATMUL_BACKENDS = ("auto", "host", "pallas")
+_matmul_backend = os.environ.get("REPRO_RING_MATMUL", "auto")
+
+matmul_dispatches = 0  # GEMM-dispatch counter (benchmarks read deltas)
+
+
+def set_matmul_backend(name: str):
+    """Select the ring-GEMM backend; returns the previous one."""
+    global _matmul_backend
+    assert name in MATMUL_BACKENDS, name
+    prev, _matmul_backend = _matmul_backend, name
+    return prev
+
+
+# leading-dim stacks up to this size (the fused Beaver online phase
+# batches the two parties) unroll into per-slice Pallas kernel calls
+_PALLAS_MAX_STACK = 4
+
+
+def _tile_aligned(dims) -> bool:
+    return all(d > 0 and d % min(128, d) == 0 for d in dims)
+
+
+def _pallas_eligible(a, b) -> bool:
+    """ring64_matmul serves 2-D operands whose dims fill whole MXU
+    tiles (d <= 128 or d % 128 == 0), plus small equal leading-dim
+    stacks of such operands (unrolled per slice); everything else
+    stays on the host path."""
+    if a.ndim == 2 and b.ndim == 2:
+        return _tile_aligned((*a.shape, b.shape[-1]))
+    if (a.ndim == 3 and b.ndim == 3
+            and a.shape[0] == b.shape[0] <= _PALLAS_MAX_STACK):
+        return _tile_aligned((*a.shape[1:], b.shape[-1]))
+    return False
+
+
+# f64-digit host GEMM: worth it above ~32^3 MACs; digit products must
+# stay inside the 52-bit f64 mantissa: 4 * K * (2^16-1)^2 < 2^52.
+_F64_MIN_MACS = 1 << 15
+_F64_MAX_K = 1 << 17
+
+
+def _f64_digit_eligible(a, b) -> bool:
+    if a.ndim < 2 or b.ndim < 2:
+        return False
+    k = a.shape[-1]
+    return (k <= _F64_MAX_K
+            and a.shape[-2] * k * b.shape[-1] >= _F64_MIN_MACS)
+
+
+def _f64_digit_matmul(a, b):
+    """Exact mod-2^64 GEMM out of ten float64 GEMMs (DESIGN.md §3).
+
+    XLA's CPU int64 matmul is a scalar loop (~45x slower than the f64
+    BLAS path), so each operand is split into four 16-bit digit planes
+    lifted to f64; digit products (< 2^32) summed over K <= 2^17 rows
+    stay below the 2^52 mantissa, so every dot is exact.  Only pairs
+    with i+j <= 3 survive mod 2^64 -> 10 GEMMs, recombined with integer
+    shifts.  Bit-identical to the int64 reference on all ring values."""
+    ua = jax.lax.bitcast_convert_type(a, jnp.uint64)
+    ub = jax.lax.bitcast_convert_type(b, jnp.uint64)
+    da = [jnp.right_shift(ua, 16 * i).astype(jnp.uint16)
+          .astype(jnp.float64) for i in range(4)]
+    db = [jnp.right_shift(ub, 16 * i).astype(jnp.uint16)
+          .astype(jnp.float64) for i in range(4)]
+    acc = None
+    for p in range(4):
+        s = None
+        for i in range(p + 1):
+            d = jnp.matmul(da[i], db[p - i])
+            s = d if s is None else s + d
+        v = jnp.left_shift(s.astype(jnp.uint64), 16 * p)
+        acc = v if acc is None else acc + v
+    return jax.lax.bitcast_convert_type(acc, jnp.int64)
+
+
 def ring_matmul(a, b):
-    """a @ b in the ring (int64 wraparound == mod 2^64)."""
+    """a @ b in the ring (int64 wraparound == mod 2^64).
+
+    Backend routing (DESIGN.md §3): on TPU, 2-D tile-aligned operands
+    hit the Pallas int8-digit MXU kernel; off-TPU, large shapes hit the
+    exact f64-digit GEMM; small/ragged shapes use the native int64
+    matmul (which wraps).  All paths are bit-identical."""
+    global matmul_dispatches
+    matmul_dispatches += 1
+    backend = _matmul_backend
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "pallas" or (backend == "auto" and on_tpu):
+        if _pallas_eligible(a, b):
+            from repro.kernels import ops
+            if a.ndim == 3:  # fused-online party stack: unroll slices
+                return jnp.stack([ops.ring64_matmul(a[i], b[i])
+                                  for i in range(a.shape[0])])
+            return ops.ring64_matmul(a, b)
+    if backend == "auto" and not on_tpu and _f64_digit_eligible(a, b):
+        return _f64_digit_matmul(a, b)
     return jnp.matmul(a, b)
 
 

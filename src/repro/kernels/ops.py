@@ -2,7 +2,11 @@
 
 `interpret` defaults to True on CPU (this container) and False on real
 TPU; the composition logic (e.g. ring64_matmul out of narrow+wide
-passes) is backend-independent."""
+passes) is backend-independent.
+
+`core.ring.ring_matmul` routes share GEMMs to `ring64_matmul` on TPU
+for 2-D MXU-tileable operands (DESIGN.md §3); the host int64 matmul
+covers everything else."""
 from __future__ import annotations
 
 import jax

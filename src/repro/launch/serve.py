@@ -61,7 +61,7 @@ def main(argv=None):
     tokens = jax.random.randint(jax.random.key(3), (1, 16), 0,
                                 cfg.vocab_size)
     with comm.ledger() as led:
-        logits = private_forward(pm, tokens)
+        logits = private_forward(pm, tokens, jit=True)
     print(f"private forward ok: logits {np.asarray(logits).shape}, "
           f"comm {led.total_bytes() / 1e6:.1f} MB / "
           f"{led.total_rounds()} rounds")

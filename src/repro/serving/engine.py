@@ -31,11 +31,26 @@ class Request:
         return len(self.out) >= self.max_new_tokens
 
 
-class ServingEngine:
+class RequestQueue:
+    """Shared request-admission plumbing for the serving engines."""
+
+    def __init__(self):
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rid = itertools.count()
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+
+class ServingEngine(RequestQueue):
     """Greedy-decoding continuous-batching server."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_len: int = 256):
+        super().__init__()
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
@@ -45,17 +60,8 @@ class ServingEngine:
         self.pos = np.zeros(max_slots, np.int32)
         self.cache = self.api.init_cache(cfg, max_slots, max_len) \
             if self.api.init_cache else None
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
-        self._rid = itertools.count()
         self._decode = jax.jit(
             lambda p, c, t, pos: self.api.decode_step(cfg, p, c, t, pos))
-
-    # ---- client API --------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int = 16) -> int:
-        rid = next(self._rid)
-        self.queue.append(Request(rid, list(prompt), max_new_tokens))
-        return rid
 
     def run_to_completion(self, max_steps: int = 10_000):
         for _ in range(max_steps):
@@ -115,3 +121,56 @@ class ServingEngine:
                 self.finished.append(self.slots[i])
                 self.slots[i] = None
         return True
+
+
+class PrivateServingEngine(RequestQueue):
+    """Greedy-decoding server behind the Centaur protocol.
+
+    Each request runs private prefill then share-state KV-cache decode
+    steps (core.private_model).  The model's dealer is a TriplePool
+    (one-shot decode shapes generate on demand; recurring shapes are
+    batched offline), and the online phase uses the fused block-stacked
+    GEMM combine.  Comm is tracked per request so callers can report
+    per-token cost like the paper's Fig. 8."""
+
+    def __init__(self, cfg: ModelConfig, params, key, *,
+                 max_len: int = 256):
+        from repro.core import comm as _comm
+        from repro.core import private_model as _pm
+        assert cfg.family == "dense" and not cfg.use_mla, \
+            "private serving covers the dense KV-cache decode path"
+        super().__init__()
+        self.cfg = cfg
+        self.max_len = max_len
+        self._comm = _comm
+        self._pmod = _pm
+        self.pm = _pm.build_private_model(cfg, params, key,
+                                          mode="centaur", use_pool=True)
+        self.stats: dict[int, dict] = {}
+
+    def _serve_one(self, req: Request) -> dict:
+        pmod = self._pmod
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        with self._comm.ledger() as led:
+            logits, caches = pmod.centaur_prefill(self.pm, toks)
+            req.out.append(int(np.argmax(np.asarray(logits)[0])))
+            while not req.done and \
+                    len(req.prompt) + len(req.out) < self.max_len:
+                pos = len(req.prompt) + len(req.out) - 1
+                logits, caches = pmod.centaur_decode_step(
+                    self.pm, caches,
+                    jnp.asarray([[req.out[-1]]], jnp.int32), pos)
+                req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        return {"rounds": led.total_rounds(),
+                "online_bits": led.total_bits(),
+                "offline_bits": led.total_bits(False) - led.total_bits(),
+                "tokens": len(req.out)}
+
+    def run_to_completion(self) -> tuple[dict, dict]:
+        """Serve the queue; returns (outputs, per-request comm stats),
+        both cumulative over every request this engine has finished."""
+        while self.queue:
+            req = self.queue.pop(0)
+            self.stats[req.rid] = self._serve_one(req)
+            self.finished.append(req)
+        return {r.rid: r.out for r in self.finished}, self.stats

@@ -1,0 +1,281 @@
+"""Fused Beaver online phase, triple pool, ring-GEMM backend wiring and
+the jitted private forward (DESIGN.md §3-§6).
+
+The fusion contract: given the SAME dealer key (hence the same
+triples), the fused block-stacked combine must produce bit-identical
+shares to the unfused 5-GEMM reference, and the comm ledger (rounds and
+bits, online and offline) must be unchanged."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beaver, comm, ring
+from repro.core.sharing import reconstruct_float, share, share_float
+
+KEY = jax.random.key(0)
+
+
+def _run_both(op, key, *mk_args):
+    """Run op fused and unfused from identical dealer keys; return
+    (fused ShareTensor, unfused ShareTensor, fused ledger, unfused
+    ledger)."""
+    outs, leds = [], []
+    for fused in (True, False):
+        with comm.ledger() as led:
+            outs.append(op(beaver.TripleDealer(key), fused))
+        leds.append(led)
+    return outs[0], outs[1], leds[0], leds[1]
+
+
+# ---- fused == unfused, bit for bit ------------------------------------------
+
+@pytest.mark.parametrize("xs,ys", [
+    ((6, 16), (16, 5)),           # plain 2-D
+    ((1, 48), (48, 1)),           # degenerate dims
+    ((3, 4, 8), (3, 8, 5)),       # batched
+    ((2, 3, 4, 8), (2, 3, 8, 5)),  # doubly batched (attention shape)
+    ((2, 5, 16), (16, 7)),        # batched lhs, rank-2 rhs (embedding)
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fused_matmul_bit_identical(xs, ys, seed):
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(seed), 4)
+    x = share_float(k1, jax.random.normal(k2, xs) * 3)
+    y = share_float(k3, jax.random.normal(k4, ys) * 3)
+
+    zf, zu, lf, lu = _run_both(
+        lambda d, fused: beaver.matmul(x, y, d, fused=fused), k1)
+    np.testing.assert_array_equal(np.asarray(zf.s0), np.asarray(zu.s0))
+    np.testing.assert_array_equal(np.asarray(zf.s1), np.asarray(zu.s1))
+    for online_only in (True, False):
+        assert lf.total_bits(online_only) == lu.total_bits(online_only)
+        assert lf.total_rounds(online_only) == lu.total_rounds(online_only)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_fused_mul_and_square_bit_identical(seed):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    x = share_float(k1, jax.random.normal(k2, (5, 9)) * 2)
+    y = share_float(k2, jax.random.normal(k3, (5, 9)) * 2)
+
+    zf, zu, lf, lu = _run_both(
+        lambda d, fused: beaver.mul(x, y, d, fused=fused), k3)
+    np.testing.assert_array_equal(np.asarray(zf.s0), np.asarray(zu.s0))
+    np.testing.assert_array_equal(np.asarray(zf.s1), np.asarray(zu.s1))
+
+    sf, su, lf, lu = _run_both(
+        lambda d, fused: beaver.square(x, d, fused=fused), k3)
+    np.testing.assert_array_equal(np.asarray(sf.s0), np.asarray(su.s0))
+    np.testing.assert_array_equal(np.asarray(sf.s1), np.asarray(su.s1))
+    assert lf.total_bits() == lu.total_bits()
+    assert lf.total_bits(False) == lu.total_bits(False)
+
+
+def test_fused_online_gemm_dispatch_counts():
+    """Fused: ONE leading-dim-2 dispatch (2 block GEMMs, E@F folded).
+    "stack" form: 2 dispatches (block stack + E@F).  Reference: 5."""
+    k1, k2 = jax.random.split(KEY)
+    a, b, c = beaver.TripleDealer(k1).matmul_triple((32, 32), (32, 32))
+    e = ring.rand_ring(k1, (32, 32))
+    f = ring.rand_ring(k2, (32, 32))
+
+    def count(fused):
+        before = ring.matmul_dispatches
+        jax.eval_shape(
+            lambda e_, f_: beaver.matmul_online(e_, f_, a, b, c, fused),
+            e, f)
+        return ring.matmul_dispatches - before
+
+    assert count(True) == 1
+    assert count("stack") == 2
+    assert count(False) == 5
+
+
+def test_fused_stack_variant_bit_identical():
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x = share_float(k1, jax.random.normal(k2, (6, 16)) * 3)
+    y = share_float(k3, jax.random.normal(k4, (16, 5)) * 3)
+    zs, zu, _, _ = _run_both(
+        lambda d, fused: beaver.matmul(
+            x, y, d, fused="stack" if fused else False), k1)
+    np.testing.assert_array_equal(np.asarray(zs.s0), np.asarray(zu.s0))
+    np.testing.assert_array_equal(np.asarray(zs.s1), np.asarray(zu.s1))
+
+
+# ---- triple pool ------------------------------------------------------------
+
+def test_triple_pool_triples_are_valid():
+    pool = beaver.TriplePool(KEY, batch=3)
+    from repro.core.sharing import reconstruct
+    a, b, c = pool.matmul_triple((8, 16), (16, 4))
+    np.testing.assert_array_equal(
+        np.asarray(ring.ring_matmul(reconstruct(a), reconstruct(b))),
+        np.asarray(reconstruct(c)))
+    a, b, c = pool.mul_triple((7,))
+    np.testing.assert_array_equal(
+        np.asarray(reconstruct(a) * reconstruct(b)),
+        np.asarray(reconstruct(c)))
+    a, c = pool.square_triple((5, 5))
+    np.testing.assert_array_equal(
+        np.asarray(reconstruct(a) * reconstruct(a)),
+        np.asarray(reconstruct(c)))
+
+
+def test_triple_pool_offline_billing_matches_dealer():
+    """Pool offline bits for n triples == n lazy-dealer triples."""
+    shapes = ((6, 16), (16, 5))
+    with comm.ledger() as led_pool:
+        pool = beaver.TriplePool(KEY, batch=4)
+        pool.prefetch([("matmul", *shapes)] * 4)
+    with comm.ledger() as led_lazy:
+        d = beaver.TripleDealer(KEY)
+        for _ in range(4):
+            d.matmul_triple(*shapes)
+    assert led_pool.total_bits(False) == led_lazy.total_bits(False)
+    assert led_pool.total_bits() == led_lazy.total_bits() == 0
+    # vectorized: ONE offline event for the whole batch
+    assert len(led_pool.events) == 1 and len(led_lazy.events) == 4
+
+
+def test_beaver_matmul_with_pool_dealer():
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (6, 16))
+    y = jax.random.normal(k2, (16, 5))
+    pool = beaver.TriplePool(k2, batch=2)
+    z = beaver.matmul(share_float(k1, x), share_float(k2, y), pool)
+    np.testing.assert_allclose(reconstruct_float(z), x @ y,
+                               atol=18 * 2 ** -ring.FRAC_BITS)
+    # demand-proportional miss generation: one-shot shapes (e.g.
+    # KV-decode GEMMs) generate exactly what they use ...
+    spec = ("matmul", (6, 16), (16, 5))
+    assert pool.size(spec) == 0
+    beaver.matmul(share_float(k2, x), share_float(k1, y), pool)
+    assert pool.size(spec) == 0
+    # ... hot recurring shapes ramp up to batch-ahead generation
+    beaver.matmul(share_float(k1, x), share_float(k2, y), pool)
+    assert pool.size(spec) == 1
+
+
+# ---- ring GEMM backend wiring ----------------------------------------------
+
+def test_ring_matmul_pallas_backend_parity():
+    """Forced pallas backend (interpret mode on CPU) must be
+    bit-identical to the host int64 matmul on tile-eligible shapes."""
+    k1, k2 = jax.random.split(KEY)
+    a = ring.rand_ring(k1, (16, 64))
+    b = ring.rand_ring(k2, (64, 32))
+    host = ring.ring_matmul(a, b)
+    ast = ring.rand_ring(k1, (2, 16, 32))  # fused-online party stack
+    bst = ring.rand_ring(k2, (2, 32, 16))
+    abig = ring.rand_ring(k1, (5, 8, 8))   # too deep a stack: host path
+    bbig = ring.rand_ring(k2, (5, 8, 8))
+    prev = ring.set_matmul_backend("pallas")
+    try:
+        pallas = ring.ring_matmul(a, b)
+        stacked = ring.ring_matmul(ast, bst)
+        batched = ring.ring_matmul(abig, bbig)
+    finally:
+        ring.set_matmul_backend(prev)
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(pallas))
+    np.testing.assert_array_equal(np.asarray(stacked),
+                                  np.asarray(jnp.matmul(ast, bst)))
+    np.testing.assert_array_equal(np.asarray(batched),
+                                  np.asarray(jnp.matmul(abig, bbig)))
+
+
+@pytest.mark.parametrize("gen", ["rand", "extremes", "allones"])
+def test_ring_matmul_f64_digit_exact(gen):
+    """The host f64-digit GEMM must be bit-identical to the int64
+    reference on all ring values (digit dots stay inside the f64
+    mantissa — DESIGN.md §3)."""
+    k1, k2 = jax.random.split(KEY)
+    mk = {
+        "rand": lambda k, s: ring.rand_ring(k, s),
+        "extremes": lambda k, s: jnp.where(
+            jax.random.bernoulli(k, 0.5, s),
+            jnp.int64(-2 ** 63), jnp.int64(2 ** 63 - 1)),
+        "allones": lambda k, s: jnp.full(s, -1, jnp.int64),
+    }[gen]
+    a = mk(k1, (96, 200))
+    b = mk(k2, (200, 64))
+    np.testing.assert_array_equal(
+        np.asarray(ring._f64_digit_matmul(a, b)),
+        np.asarray(jnp.matmul(a, b)))
+    # batched form
+    ab = mk(k1, (2, 3, 16, 40))
+    bb = mk(k2, (2, 3, 40, 8))
+    np.testing.assert_array_equal(
+        np.asarray(ring._f64_digit_matmul(ab, bb)),
+        np.asarray(jnp.matmul(ab, bb)))
+
+
+def test_ring_matmul_auto_equals_forced_host():
+    k1, k2 = jax.random.split(KEY)
+    a = ring.rand_ring(k1, (64, 64))  # above the f64 MAC threshold
+    b = ring.rand_ring(k2, (64, 64))
+    auto = ring.ring_matmul(a, b)
+    prev = ring.set_matmul_backend("host")
+    try:
+        host = ring.ring_matmul(a, b)
+    finally:
+        ring.set_matmul_backend(prev)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(host))
+
+
+def test_ring_matmul_pallas_eligibility():
+    z = jnp.zeros
+    assert ring._pallas_eligible(z((128, 256)), z((256, 128)))
+    assert ring._pallas_eligible(z((16, 64)), z((64, 32)))
+    assert not ring._pallas_eligible(z((200, 128)), z((128, 128)))
+    assert not ring._pallas_eligible(z((2, 128, 128)), z((128, 128)))
+    # the fused-online party stack (small equal leading dim) is served
+    assert ring._pallas_eligible(z((2, 128, 256)), z((2, 256, 128)))
+    assert not ring._pallas_eligible(z((8, 128, 128)), z((8, 128, 128)))
+    # zero-sized dims fall through without dividing by zero
+    assert not ring._pallas_eligible(z((0, 128)), z((128, 128)))
+
+
+# ---- jitted private forward -------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["centaur", "smpc"])
+def test_jit_forward_matches_eager_and_ledger_exact(mode):
+    from repro.configs.paper_models import BERT_TINY as cfg
+    from repro.core.private_model import build_private_model, \
+        private_forward
+    from repro.models.registry import get_api
+    api = get_api(cfg)
+    params = api.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+
+    pm_e = build_private_model(cfg, params, KEY, mode=mode)
+    with comm.ledger() as led_e:
+        out_e = private_forward(pm_e, tokens)
+    pm_j = build_private_model(cfg, params, KEY, mode=mode)
+    with comm.ledger() as led_j:
+        out_j = private_forward(pm_j, tokens, jit=True)
+        # second call reuses the compiled layer and bills identically
+        private_forward(pm_j, tokens, jit=True)
+
+    atol = 5e-3 if mode == "centaur" else 5e-2
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_j),
+                               atol=atol)
+    # ledger is exact: two jit forwards were billed => totals are 2x eager
+    assert led_j.total_bits() == 2 * led_e.total_bits()
+    assert led_j.total_rounds() == 2 * led_e.total_rounds()
+    assert led_j.total_bits(False) == 2 * led_e.total_bits(False)
+
+
+def test_jit_forward_share_is_fresh_random():
+    """The jitted path reshares with fresh keys — outputs agree with
+    eager semantics but shares differ call to call (masking intact)."""
+    from repro.configs.paper_models import GPT2_TINY as cfg
+    from repro.core.private_model import build_private_model, \
+        centaur_forward_jit
+    from repro.models.registry import get_api
+    api = get_api(cfg)
+    params = api.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    pm = build_private_model(cfg, params, KEY, mode="centaur")
+    o1 = centaur_forward_jit(pm, tokens)
+    o2 = centaur_forward_jit(pm, tokens)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-3)

@@ -4,7 +4,12 @@ homomorphism, and the fixed-point error model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import beaver, comm, permute, ring
 from repro.core.sharing import ShareTensor, reconstruct_float, share_float
