@@ -1,0 +1,101 @@
+"""Continuous-batching private decode benchmark (DESIGN.md §7).
+
+Serves the same request set through the slot-based PrivateServingEngine
+at slots ∈ {1, 2, 4} on the tiny dense config and reports warm
+tokens/sec — slots=1 is the sequential baseline (same code path, batch
+of one).  Each engine serves a warm-up round first so jit compiles and
+triple-generator programs are excluded from the timed round; token
+outputs are cross-checked against the sequential run on every setting.
+
+    PYTHONPATH=src python benchmarks/private_serving_bench.py [--smoke]
+
+Writes BENCH_private_serving.json next to the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+OUT = os.path.join(os.path.dirname(__file__), "..",
+                   "BENCH_private_serving.json")
+
+
+def _prompts(n_requests: int):
+    # deterministic mixed lengths (2..5) — staggered admissions at
+    # every slot count
+    return [[(3 * i + j) % 300 + 1 for j in range(2 + i % 4)]
+            for i in range(n_requests)]
+
+
+def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
+        max_len: int = 24, rounds: int = 2, out: str | None = OUT,
+        smoke: bool = False):
+    from repro.configs.paper_models import GPT2_TINY as CFG
+    from repro.models.registry import get_api
+    from repro.serving.engine import PrivateServingEngine
+
+    if smoke:
+        n_requests, n_new, rounds = 4, 3, 2
+    key = jax.random.key(0)
+    params = get_api(CFG).init_params(CFG, key)
+    prompts = _prompts(n_requests)
+
+    results = {"config": CFG.name, "n_requests": n_requests,
+               "n_new": n_new, "max_len": max_len, "slots": {}}
+    baseline_tokens = None
+    for slots in slot_counts:
+        eng = PrivateServingEngine(CFG, params, key, max_slots=slots,
+                                   max_len=max_len)
+        for _ in range(rounds):            # last round is the warm one
+            rids = [eng.submit(p, max_new_tokens=n_new)
+                    for p in prompts]
+            t0 = time.monotonic()
+            outs, stats = eng.run_to_completion()
+            dt = time.monotonic() - t0
+        tokens = [outs[r] for r in rids]
+        if baseline_tokens is None:
+            baseline_tokens = tokens
+        assert tokens == baseline_tokens, \
+            f"slots={slots} changed the decoded tokens"
+        total = sum(len(t) for t in tokens)
+        per_req = [stats[r] for r in rids]
+        results["slots"][str(slots)] = {
+            "tokens": total,
+            "time_s": round(dt, 4),
+            "tokens_per_sec": round(total / dt, 2),
+            "online_bits_total": sum(s["online_bits"] for s in per_req),
+            "rounds_total": sum(s["rounds"] for s in per_req),
+        }
+        print(f"[private-serving] slots={slots}: "
+              f"{total / dt:.2f} tok/s warm ({total} tokens, {dt:.2f}s)")
+
+    seq = results["slots"].get("1")
+    if seq:
+        for slots, r in results["slots"].items():
+            r["speedup_vs_sequential"] = round(
+                r["tokens_per_sec"] / seq["tokens_per_sec"], 3)
+        best = max(r["speedup_vs_sequential"]
+                   for r in results["slots"].values())
+        print(f"[private-serving] best speedup vs sequential: {best}x")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[private-serving] wrote {os.path.abspath(out)}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run; skips writing the json")
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args(argv)
+    run(out=None if args.smoke else args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

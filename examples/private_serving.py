@@ -2,10 +2,10 @@
 
 1. Plaintext serving: continuous-batching engine over a KV cache,
    several concurrent requests, greedy decoding.
-2. Private serving: the same model behind the Centaur protocol —
-   each generation step is a full private forward (shares in, permuted
-   logits out, client de-permutes and feeds the next token back).
-   Comm cost per generated token is reported like paper Fig 8.
+2. Private serving: the SAME continuous-batching loop behind the
+   Centaur protocol — requests admitted into slots of a stacked padded
+   share-domain KV cache, one jitted batched private decode step per
+   tick, per-request comm attribution (paper Fig 8 style reporting).
 
     PYTHONPATH=src python examples/private_serving.py
 """
@@ -21,6 +21,10 @@ from repro.serving.engine import ServingEngine
 NETWORKS = {"LAN(3Gbps,0.8ms)": (3e9, 0.8e-3),
             "WAN(100Mbps,80ms)": (100e6, 80e-3)}
 
+PROMPTS = [[1, 2, 3], [7, 8], [9, 10, 11, 12], [3, 1], [5, 5, 5]]
+N_NEW = 4
+MAX_LEN = 24
+
 
 def main():
     key = jax.random.key(0)
@@ -29,39 +33,63 @@ def main():
 
     # ---- 1. plaintext continuous batching --------------------------------
     eng = ServingEngine(CFG, params, max_slots=4, max_len=64)
-    prompts = [[1, 2, 3], [7, 8], [9, 10, 11, 12], [3, 1], [5, 5, 5]]
-    rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    rids = [eng.submit(p, max_new_tokens=8) for p in PROMPTS]
     t0 = time.monotonic()
     outs = eng.run_to_completion()
     dt = time.monotonic() - t0
     total = sum(len(v) for v in outs.values())
-    print(f"[plain] served {len(prompts)} requests, {total} tokens "
+    print(f"[plain] served {len(PROMPTS)} requests, {total} tokens "
           f"in {dt:.2f}s ({total / dt:.1f} tok/s on CPU)")
     for rid in rids[:2]:
         print(f"  req {rid}: {outs[rid]}")
 
-    # ---- 2. private generation (Centaur, share-state KV cache) -----------
+    # ---- 2. private continuous batching (Centaur slot engine) ------------
     from repro.serving.engine import PrivateServingEngine
-    n_new = 3
-    peng = PrivateServingEngine(CFG, params, key, max_len=32)
-    rid_p = peng.submit([1, 2, 3], max_new_tokens=n_new)
+    peng = PrivateServingEngine(CFG, params, key, max_slots=4,
+                                max_len=MAX_LEN)
+    for p in PROMPTS:                       # warm-up round: jit compiles
+        peng.submit(p, max_new_tokens=N_NEW)
+    peng.run_to_completion()
+    rids_p = [peng.submit(p, max_new_tokens=N_NEW) for p in PROMPTS]
     with comm.ledger() as led:
+        t0 = time.monotonic()
         outs_p, stats = peng.run_to_completion()
-    seq = [1, 2, 3] + outs_p[rid_p]
-    st = stats[rid_p]
-    print(f"[centaur] generated {n_new} tokens privately: {seq[-n_new:]}")
-    print(f"  comm: {st['online_bits'] / 8e6:.1f} MB online "
-          f"(+{st['offline_bits'] / 8e6:.1f} MB offline, pooled), "
-          f"{st['rounds']} rounds")
+        dt = time.monotonic() - t0
+    total = sum(len(outs_p[r]) for r in rids_p)
+    print(f"[centaur] continuous batching: {len(PROMPTS)} requests, "
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+    for rid in rids_p[:2]:
+        st = stats[rid]
+        print(f"  req {rid}: {outs_p[rid]}  "
+              f"({st['online_bits'] / 8e6:.1f} MB online "
+              f"+{st['offline_bits'] / 8e6:.1f} MB offline, "
+              f"{st['rounds']} rounds)")
+    # per-request attribution is exact: it sums back to the ledger
+    assert sum(stats[r]["online_bits"] for r in rids_p) \
+        == led.total_bits()
     for net, (bw, rtt) in NETWORKS.items():
-        t = led.simulate_time(bw, rtt) / n_new
+        t = led.simulate_time(bw, rtt) / total
         print(f"  simulated network time/token {net}: {t:.2f}s")
 
+    # sequential baseline: same engine, one slot — bit-identical tokens
+    seng = PrivateServingEngine(CFG, params, key, max_slots=1,
+                                max_len=MAX_LEN)
+    for p in PROMPTS:                       # warm-up round: jit compiles
+        seng.submit(p, max_new_tokens=N_NEW)
+    seng.run_to_completion()
+    rids_s = [seng.submit(p, max_new_tokens=N_NEW) for p in PROMPTS]
+    t0 = time.monotonic()
+    outs_s, _ = seng.run_to_completion()
+    dt_s = time.monotonic() - t0
+    assert [outs_p[r] for r in rids_p] == [outs_s[r] for r in rids_s]
+    print(f"  sequential baseline: {total / dt_s:.1f} tok/s -> "
+          f"batched speedup {dt_s / dt:.2f}x, same tokens ✓")
+
     # plaintext-greedy agreement check
-    eng2 = ServingEngine(CFG, params, max_slots=1, max_len=32)
-    rid = eng2.submit([1, 2, 3], max_new_tokens=n_new)
-    ref = eng2.run_to_completion()[rid][:n_new]
-    assert ref == seq[-n_new:], (ref, seq[-n_new:])
+    eng2 = ServingEngine(CFG, params, max_slots=1, max_len=MAX_LEN)
+    rids2 = [eng2.submit(p, max_new_tokens=N_NEW) for p in PROMPTS]
+    ref = eng2.run_to_completion()
+    assert [ref[r] for r in rids2] == [outs_p[r] for r in rids_p]
     print("  private generation == plaintext greedy decoding ✓")
 
 

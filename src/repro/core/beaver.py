@@ -201,6 +201,27 @@ class TriplePool:
             if have < n:
                 self.generate(spec, n - have)
 
+    def reserve(self, specs, steps: int = 1):
+        """Keep `steps` repetitions of a *recurring* spec multiset in
+        stock, refilling in whole-horizon quanta.
+
+        Continuous-batching decode consumes the same triple shapes every
+        tick (the padded slot batch is shape-static).  When a spec's
+        stock drops below one tick's demand, a full `steps * demand`
+        batch is regenerated in ONE vectorized dispatch — the refill
+        size is constant, so exactly one generator program is compiled
+        per spec and the offline phase runs once every `steps` ticks
+        instead of dribbling n=1 generations (the cost profile the
+        growing per-request KV shapes used to force)."""
+        steps = max(int(steps), 1)
+        counts: dict[tuple, int] = {}
+        for s in specs:
+            s = _canon_spec(s)
+            counts[s] = counts.get(s, 0) + 1
+        for spec, c in counts.items():
+            if len(self._pools.get(spec, ())) < c:
+                self.generate(spec, steps * c)
+
     def take(self, spec):
         """Pop a triple, generating demand-proportionally on a miss:
         min(batch, takes-so-far, >= 1).  One-shot shapes (e.g. the

@@ -172,3 +172,44 @@ def numel(shape) -> int:
     for s in shape:
         n *= int(s)
     return n
+
+
+# ---- per-request attribution (continuous-batching serving) -----------------
+
+def attribute(events, keys):
+    """Split a batched step's events across the requests it served.
+
+    One batched decode tick bills the ambient ledger once for the whole
+    slot batch; each of the `keys` (request ids) did an equal 1/n share
+    of that step's work (every active slot contributes identically-shaped
+    rows to every protocol message).  Each event's rounds/bits are split
+    by integer division with the remainder dealt round-robin, the start
+    offset rotating with the event index so no key is systematically
+    favored.  The split is *exact*: for every event,
+    sum over keys == original, so per-request totals always sum to the
+    ledger totals, and with a single key the events are returned intact
+    (single-slot batched == sequential billing).
+
+    Semantics: bits are genuinely partitioned (each slot's rows cross
+    the wire once), while rounds are shared latency — every active slot
+    experiences each round concurrently.  The 1/n rounds share is a
+    *cost attribution* that keeps sums conserving (amortization is the
+    point of batching); to estimate one request's wall-clock latency,
+    use the global ledger's rounds over the ticks it was active, not
+    its attributed share.
+    """
+    n = len(keys)
+    out = {k: CommLedger() for k in keys}
+    if n == 0:
+        return out
+    for j, e in enumerate(events):
+        qb, rb = divmod(e.bits, n)
+        qr, rr = divmod(e.rounds, n)
+        for i, k in enumerate(keys):
+            off = (i + j) % n
+            out[k].events.append(CommEvent(
+                e.protocol,
+                qr + (1 if off < rr else 0),
+                qb + (1 if off < rb else 0),
+                e.tag, e.online))
+    return out

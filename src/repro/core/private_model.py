@@ -89,7 +89,12 @@ class PrivateModel:
 
     def triple_pool(self):
         if self.pool is None:
-            self.pool = beaver.TriplePool(self.ks())
+            # a pool built with use_pool=True is the model's dealer;
+            # reuse it so jitted paths and eager paths draw from (and
+            # bill) one offline phase
+            self.pool = (self.dealer
+                         if isinstance(self.dealer, beaver.TriplePool)
+                         else beaver.TriplePool(self.ks()))
         return self.pool
 
 
@@ -651,14 +656,20 @@ def _c_mamba_block(pm: PrivateModel, p, x: ShareTensor, layer_idx: int):
         return _linear(pm, p["out_proj"], y)
 
 
-def _c_layer(pm: PrivateModel, p, x: ShareTensor, i: int) -> ShareTensor:
-    """One centaur transformer layer (dense/encoder/moe families).
-    Exposure hooks fire only for i == 0; the jitted path passes i >= 1
-    so no traced intermediate escapes into pm.exposed."""
+# layer index >= 1 disables the i == 0 exposure hooks (the jitted and
+# serving paths pass this so no traced intermediate escapes into
+# pm.exposed)
+_NO_EXPOSE = 1
+
+
+def _c_block(pm: PrivateModel, p, x: ShareTensor, i: int, attn_fn):
+    """The transformer residual skeleton shared by the full forward,
+    prefill and slotted decode (pre/post-norm handling, exposure hooks
+    only for i == 0).  attn_fn(h) -> (attn_out, extra); `extra` carries
+    a KV cache for the serving paths, None for the plain forward."""
     cfg = pm.cfg
     h = _c_norm(pm, p["ln1"], x) if cfg.prenorm else x
-    attn = (_c_mla_attention if cfg.use_mla else _c_attention)(
-        pm, p["attn"], h, i)
+    attn, extra = attn_fn(h)
     x = x + attn
     if not cfg.prenorm:
         x = _c_norm(pm, p["ln1"], x,
@@ -673,7 +684,15 @@ def _c_layer(pm: PrivateModel, p, x: ShareTensor, i: int) -> ShareTensor:
                     expose_as="O6" if i == 0 else None)
     elif i == 0:
         pm.expose("O6", ring.decode(reconstruct(x), dtype=P32))
-    return x
+    return x, extra
+
+
+def _c_layer(pm: PrivateModel, p, x: ShareTensor, i: int) -> ShareTensor:
+    """One centaur transformer layer (dense/encoder/moe families)."""
+    attn = _c_mla_attention if pm.cfg.use_mla else _c_attention
+    out, _ = _c_block(pm, p, x, i,
+                      lambda h: (attn(pm, p["attn"], h, i), None))
+    return out
 
 
 def _c_head(pm: PrivateModel, x: ShareTensor):
@@ -1019,9 +1038,10 @@ def _build_jit_layer(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
 
 
 def _jit_layer_for(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
-    cache_key = (name, jax.tree.structure(p),
-                 tuple(jnp.shape(le) for le in jax.tree.leaves(p)),
-                 x.shape)
+    # x may be any pytree of arrays/ShareTensors (the slotted decode
+    # threads (x, k_cache, v_cache, pos) through one body)
+    cache_key = (name, jax.tree.structure((p, x)),
+                 tuple(jnp.shape(le) for le in jax.tree.leaves((p, x))))
     if cache_key not in pm.jit_cache:
         pm.jit_cache[cache_key] = _build_jit_layer(pm, name, body, p, x)
     return pm.jit_cache[cache_key]
@@ -1060,7 +1080,7 @@ def centaur_forward_jit(pm: PrivateModel, tokens):
     xoh = encrypt_tokens(pm, tokens)
     x = _c_embed(pm, xoh, jnp.arange(S))
     x = _run_jit_layers(pm, pm.wp["layers"],
-                        lambda sh, p, xin: _c_layer(sh, p, xin, 1),
+                        lambda sh, p, xin: _c_layer(sh, p, xin, _NO_EXPOSE),
                         "centaur_layer", x)
     return _c_head(pm, x)
 
@@ -1092,15 +1112,43 @@ def private_forward(pm: PrivateModel, tokens, jit: bool = False):
 
 
 # =============================================================================
-# private serving: KV-cache decode (centaur mode, dense/encoder families)
+# private serving: slot-stacked padded KV-cache decode (centaur mode,
+# dense family) — the continuous-batching hot path.  DESIGN.md §7.
 # =============================================================================
 
-def _c_attention_cached(pm: PrivateModel, p, x: ShareTensor, pos: int,
-                        kv_cache, layer_idx: int):
-    """Incremental private attention: K/V prefixes live as *shares* on
-    the compute parties; each step appends the new K/V shares (free) and
-    runs the paper's Pi_MatMul -> Pi_PPP -> Pi_PPSM flow over the full
-    prefix.  kv_cache: {"k": [X (B,T,hk,dh)], "v": ...} or None."""
+def init_slot_caches(pm: PrivateModel, n_slots: int, max_len: int):
+    """Zeroed slot-stacked share KV caches: per layer {"k","v"} of shape
+    (n_slots, max_len, hk, dh).  Zero shares reconstruct to zero, and
+    the additive validity mask keeps unwritten rows at exactly zero
+    softmax mass, so slots can be filled/evicted independently."""
+    cfg = pm.cfg
+    z = jnp.zeros((n_slots, max_len, cfg.num_kv_heads, cfg.dh),
+                  ring.RING_DTYPE)
+    return [{"k": ShareTensor(z, z), "v": ShareTensor(z, z)}
+            for _ in range(cfg.num_layers)]
+
+
+def _slot_write(cache: ShareTensor, new: ShareTensor, pos):
+    """Write new K/V rows (B,S,hk,dh) into the padded cache (B,L,hk,dh)
+    at per-slot offsets pos (B,) — applied to each share separately."""
+    def upd(c, nw):
+        return jax.vmap(lambda cb, nb, pb:
+                        jax.lax.dynamic_update_slice_in_dim(cb, nb, pb,
+                                                            axis=0)
+                        )(c, nw, pos)
+    return ShareTensor(upd(cache.s0, new.s0), upd(cache.s1, new.s1))
+
+
+def _pad_cache_to(c: ShareTensor, max_len: int) -> ShareTensor:
+    pad = [(0, 0)] * c.ndim
+    pad[1] = (0, max_len - c.shape[1])
+    return ShareTensor(jnp.pad(c.s0, pad), jnp.pad(c.s1, pad))
+
+
+def _c_attention_prefill(pm: PrivateModel, p, x: ShareTensor):
+    """Prefill attention: the paper's Pi_MatMul -> Pi_PPP -> Pi_PPSM flow
+    over the prompt; K/V shares are returned so the caller can splice
+    them into a padded slot cache (appending shares is free)."""
     cfg = pm.cfg
     B, S, _ = x.shape
     h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
@@ -1110,40 +1158,34 @@ def _c_attention_cached(pm: PrivateModel, p, x: ShareTensor, pos: int,
         v = _linear(pm, p["wv"], x).reshape(B, S, hk, dh)
     if cfg.pos_embed == "rope":
         from repro.models.layers import rope_freqs
-        posv = pos + jnp.arange(S)[None, :].repeat(B, 0)
+        posv = jnp.arange(S)[None, :].repeat(B, 0)
         cos, sin = rope_freqs(cfg, posv, dh)
         q = rope_on_shares(q.reshape(B, S, hk * g, dh), cos, sin
                            ).reshape(B, S, hk, g, dh)
         k = rope_on_shares(k, cos, sin)
-    if kv_cache is not None:
-        k = ShareTensor(jnp.concatenate([kv_cache["k"].s0, k.s0], 1),
-                        jnp.concatenate([kv_cache["k"].s1, k.s1], 1))
-        v = ShareTensor(jnp.concatenate([kv_cache["v"].s0, v.s0], 1),
-                        jnp.concatenate([kv_cache["v"].s1, v.s1], 1))
     new_cache = {"k": k, "v": v}
-    T = k.shape[1]
 
     qh = q.transpose(0, 2, 3, 1, 4)                   # (B,hk,g,S,dh)
     kt = ShareTensor(k.s0.transpose(0, 2, 3, 1), k.s1.transpose(0, 2, 3, 1))
     kt = ShareTensor(jnp.broadcast_to(kt.s0[:, :, None],
-                                      (B, hk, g, dh, T)),
+                                      (B, hk, g, dh, S)),
                      jnp.broadcast_to(kt.s1[:, :, None],
-                                      (B, hk, g, dh, T)))
+                                      (B, hk, g, dh, S)))
     with comm.tag("linear"):
         o1 = beaver.matmul(qh, kt, pm.dealer)
     o1 = o1.mul_public(ring.encode(dh ** -0.5))
-    q_pos = pos + jnp.arange(S)
-    mask = (jnp.arange(T)[None, :] <= q_pos[:, None]).astype(jnp.float64)
+    mask = (jnp.arange(S)[None, :]
+            <= jnp.arange(S)[:, None]).astype(jnp.float64)
     o1 = o1 + ring.encode((mask - 1.0) * 1e4)
-    pi1 = permute.gen_perm(pm.ks(), T)
+    pi1 = permute.gen_perm(pm.ks(), S)
     with comm.tag("softmax"):
         o1p = protocols.pp_permute(o1, pi1, axis=-1)
         o2p = nonlinear.pp_softmax(o1p, pm.ks())
         vp = protocols.pp_permute(
             ShareTensor(v.s0.transpose(0, 2, 1, 3),
                         v.s1.transpose(0, 2, 1, 3)), pi1, axis=-2)
-    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None], (B, hk, g, T, dh)),
-                     jnp.broadcast_to(vp.s1[:, :, None], (B, hk, g, T, dh)))
+    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None], (B, hk, g, S, dh)),
+                     jnp.broadcast_to(vp.s1[:, :, None], (B, hk, g, S, dh)))
     with comm.tag("linear"):
         o3 = beaver.matmul(o2p, vp, pm.dealer)
     o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
@@ -1151,28 +1193,78 @@ def _c_attention_cached(pm: PrivateModel, p, x: ShareTensor, pos: int,
         return _linear(pm, p["wo"], o3), new_cache
 
 
-def _centaur_hidden_cached(pm: PrivateModel, tokens, pos: int, caches):
+def _c_attention_slotted(pm: PrivateModel, p, x: ShareTensor,
+                         cache: dict, pos):
+    """Batched single-token private attention against padded slot caches.
+
+    x: (B,1,d) shares for B independent slots; cache {"k","v"}: padded
+    (B,L,hk,dh) share tensors; pos (B,): the row the new K/V shares land
+    in (== the token's absolute position).  Queries attend to the whole
+    padded axis with an additive validity mask applied *on shares*
+    (columns t > pos[b] get -1e4 before the softmax reveal): unwritten
+    rows hold zero shares, so their revealed scores are exactly -1e4
+    relative to any live score and exp underflows to exact float32 zero
+    — the batched softmax is the sequential softmax plus zero-mass
+    entries.  P1's reveal shows only *which* permuted columns are dead,
+    i.e. the slot's occupancy count, which the sequential protocol
+    reveals anyway through its growing shapes."""
     cfg = pm.cfg
-    B, S = tokens.shape
-    xoh = encrypt_tokens(pm, tokens)
-    positions = pos + jnp.arange(S)
-    x = _c_embed(pm, xoh, positions)
-    new_caches = []
-    for i in range(cfg.num_layers):
-        p = pm.wp["layers"][i]
-        h = _c_norm(pm, p["ln1"], x) if cfg.prenorm else x
-        attn, nc = _c_attention_cached(pm, p["attn"], h, pos,
-                                       None if caches is None
-                                       else caches[i], i)
-        new_caches.append(nc)
-        x = x + attn
-        if not cfg.prenorm:
-            x = _c_norm(pm, p["ln1"], x)
-        h = _c_norm(pm, p["ln2"], x) if cfg.prenorm else x
-        x = x + _c_ffn(pm, p["ffn"], h, i)
-        if not cfg.prenorm:
-            x = _c_norm(pm, p["ln2"], x)
-    return x, new_caches
+    B, S, _ = x.shape
+    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    with comm.tag("linear"):
+        q = _linear(pm, p["wq"], x).reshape(B, S, hk, g, dh)
+        k = _linear(pm, p["wk"], x).reshape(B, S, hk, dh)
+        v = _linear(pm, p["wv"], x).reshape(B, S, hk, dh)
+    q_pos = pos[:, None] + jnp.arange(S)[None, :]     # (B,S)
+    if cfg.pos_embed == "rope":
+        from repro.models.layers import rope_freqs
+        cos, sin = rope_freqs(cfg, q_pos, dh)
+        q = rope_on_shares(q.reshape(B, S, hk * g, dh), cos, sin
+                           ).reshape(B, S, hk, g, dh)
+        k = rope_on_shares(k, cos, sin)
+    k_cache = _slot_write(cache["k"], k, pos)
+    v_cache = _slot_write(cache["v"], v, pos)
+    new_cache = {"k": k_cache, "v": v_cache}
+    L = k_cache.shape[1]
+
+    qh = q.transpose(0, 2, 3, 1, 4)                   # (B,hk,g,S,dh)
+    kt = ShareTensor(k_cache.s0.transpose(0, 2, 3, 1),
+                     k_cache.s1.transpose(0, 2, 3, 1))
+    kt = ShareTensor(jnp.broadcast_to(kt.s0[:, :, None],
+                                      (B, hk, g, dh, L)),
+                     jnp.broadcast_to(kt.s1[:, :, None],
+                                      (B, hk, g, dh, L)))
+    with comm.tag("linear"):
+        o1 = beaver.matmul(qh, kt, pm.dealer)         # (B,hk,g,S,L)
+    o1 = o1.mul_public(ring.encode(dh ** -0.5))
+    mask = (jnp.arange(L)[None, None, :]
+            <= q_pos[:, :, None]).astype(jnp.float64)  # (B,S,L)
+    o1 = o1 + ring.encode((mask - 1.0) * 1e4)[:, None, None]
+    # one INDEPENDENT fresh pi1 per slot: a shared permutation would
+    # let P1 align revealed score columns across tenants' requests
+    pi1 = jax.vmap(lambda k: permute.gen_perm(k, L))(
+        jax.random.split(pm.ks(), B))                  # (B,L)
+    with comm.tag("softmax"):
+        o1p = protocols.pp_permute_batched(o1, pi1, axis=-1)
+        o2p = nonlinear.pp_softmax(o1p, pm.ks())
+        vp = protocols.pp_permute_batched(
+            ShareTensor(v_cache.s0.transpose(0, 2, 1, 3),
+                        v_cache.s1.transpose(0, 2, 1, 3)), pi1, axis=-2)
+    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None], (B, hk, g, L, dh)),
+                     jnp.broadcast_to(vp.s1[:, :, None], (B, hk, g, L, dh)))
+    with comm.tag("linear"):
+        o3 = beaver.matmul(o2p, vp, pm.dealer)        # (B,hk,g,S,dh)
+    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
+    with comm.tag("linear"):
+        return _linear(pm, p["wo"], o3), new_cache
+
+
+def _c_slot_layer(pm: PrivateModel, p, x: ShareTensor, cache: dict, pos):
+    """One centaur transformer layer over a slot batch (serving hot
+    path, also traced into the jitted tick: never exposes)."""
+    return _c_block(pm, p, x, _NO_EXPOSE,
+                    lambda h: _c_attention_slotted(pm, p["attn"], h,
+                                                   cache, pos))
 
 
 def _centaur_logits(pm: PrivateModel, x_last: ShareTensor):
@@ -1185,18 +1277,120 @@ def _centaur_logits(pm: PrivateModel, x_last: ShareTensor):
     return permute.apply_inv_perm(yv, pm.perms["v"], -1)
 
 
-def centaur_prefill(pm: PrivateModel, tokens):
+def _c_prefill_layer(pm: PrivateModel, p, x: ShareTensor):
+    """One centaur transformer layer at prompt length, returning the
+    K/V shares for the slot cache (serving hot path: never exposes)."""
+    return _c_block(pm, p, x, _NO_EXPOSE,
+                    lambda h: _c_attention_prefill(pm, p["attn"], h))
+
+
+def centaur_prefill(pm: PrivateModel, tokens, max_len: int | None = None,
+                    jit: bool = False):
     """Private prefill: returns (last-token logits, per-layer K/V share
-    caches held by the compute parties)."""
+    caches padded to `max_len`), ready for `centaur_decode_step` or to
+    be spliced into a slot of a stacked serving cache.  Attention runs
+    at prompt length (comm ∝ S^2, as the sequential protocol bills);
+    only the returned cache is padded — padding shares are zeros.
+    jit=True compiles the layer stack per (B, S) like the decode path."""
     assert pm.cfg.family == "dense" and not pm.cfg.use_mla
-    x, caches = _centaur_hidden_cached(pm, tokens, 0, None)
+    cfg = pm.cfg
+    B, S = tokens.shape
+    if max_len is None:
+        max_len = S + 1
+    assert max_len >= S, (max_len, S)
+    if jit:
+        def body(sh, p, tok):
+            xoh = encrypt_tokens(sh, tok)
+            x = _c_embed(sh, xoh, jnp.arange(S))
+            ks_, vs_ = [], []
+            for i in range(cfg.num_layers):
+                x, nc = _c_prefill_layer(sh, p[i], x)
+                ks_.append(_pad_cache_to(nc["k"], max_len))
+                vs_.append(_pad_cache_to(nc["v"], max_len))
+            return _centaur_logits(sh, x[:, -1:, :]), ks_, vs_
+
+        # max_len shapes the padded outputs but not the traced inputs,
+        # so it must be part of the program cache key
+        jl = _jit_layer_for(pm, f"centaur_prefill:{max_len}", body,
+                            pm.wp["layers"], tokens)
+        pool = pm.triple_pool()
+        pool.prefetch(jl.specs)
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        logits, ks_, vs_ = jl.fn(pm.wp["layers"], tokens, pm.ks(),
+                                 triples)
+        return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
+
+    xoh = encrypt_tokens(pm, tokens)
+    x = _c_embed(pm, xoh, jnp.arange(S))
+    caches = []
+    for i in range(cfg.num_layers):
+        x, nc = _c_prefill_layer(pm, pm.wp["layers"][i], x)
+        caches.append({"k": _pad_cache_to(nc["k"], max_len),
+                       "v": _pad_cache_to(nc["v"], max_len)})
     return _centaur_logits(pm, x[:, -1:, :]), caches
 
 
-def centaur_decode_step(pm: PrivateModel, caches, token, pos: int):
-    """One private decode step against the share-state KV cache."""
-    x, caches = _centaur_hidden_cached(pm, token, pos, caches)
-    return _centaur_logits(pm, x[:, -1:, :]), caches
+def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,
+                         lookahead: int = 4):
+    """ONE jitted batched decode step: embedding, the whole layer
+    stack against the slot caches, and the adaptation head compile
+    into a single program per (batch, max_len) shape — a tick is one
+    dispatch plus pool takes.  The shapes are padding-static, so one
+    eval_shape trace under comm.capture() prices every future tick
+    (replayed per tick, ledger bit-exact vs eager), and the triple
+    demand is the same multiset every tick: TriplePool.reserve keeps
+    `lookahead` ticks in stock with one constant-size vectorized
+    generator per spec (DESIGN.md §7)."""
+    nl = pm.cfg.num_layers
+
+    def body(sh, p, state):
+        tok, ps, cks, cvs = state
+        xoh = encrypt_tokens(sh, tok)
+        x = _c_embed(sh, xoh, ps[:, None])
+        ks_, vs_ = [], []
+        for i in range(nl):
+            x, nc = _c_slot_layer(sh, p[i], x,
+                                  {"k": cks[i], "v": cvs[i]}, ps)
+            ks_.append(nc["k"])
+            vs_.append(nc["v"])
+        return _centaur_logits(sh, x), ks_, vs_
+
+    state0 = (token, pos, [c["k"] for c in caches],
+              [c["v"] for c in caches])
+    jl = _jit_layer_for(pm, "centaur_decode_tick", body,
+                        pm.wp["layers"], state0)
+    pool = pm.triple_pool()
+    pool.reserve(jl.specs, steps=lookahead)
+    triples = [pool.take(s) for s in jl.specs]
+    comm.replay(jl.events, online_only=True)
+    logits, ks_, vs_ = jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
+    return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
+
+
+def centaur_decode_step(pm: PrivateModel, caches, token, pos,
+                        jit: bool = False, lookahead: int = 4):
+    """One batched private decode step: token (B,1) next-token ids for B
+    independent slots, pos int or (B,) per-slot absolute positions,
+    caches as returned by centaur_prefill / init_slot_caches (padded,
+    slot-stacked).  Returns (logits (B,1,V), updated caches)."""
+    B, S = token.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    L = int(caches[0]["k"].shape[1])
+    # dynamic_update_slice would silently clamp an out-of-range write
+    # onto the previous token's K/V row — fail loudly instead
+    assert int(jnp.max(pos)) + S <= L, \
+        f"decode past padded cache: pos={pos}, S={S}, max_len={L}"
+    if jit:
+        return _run_jit_decode_step(pm, caches, token, pos,
+                                    lookahead=lookahead)
+    xoh = encrypt_tokens(pm, token)
+    x = _c_embed(pm, xoh, pos[:, None])
+    new_caches = []
+    for i in range(pm.cfg.num_layers):
+        x, nc = _c_slot_layer(pm, pm.wp["layers"][i], x, caches[i], pos)
+        new_caches.append(nc)
+    return _centaur_logits(pm, x), new_caches
 
 
 # =============================================================================
@@ -1266,9 +1460,9 @@ def whisper_private_forward(pm: PrivateModel, embeds, tokens):
         x = x + wp["enc_pos"][:Se][None]
     for p in wp["enc_layers"]:
         hx = _c_norm(pm, p["ln1"], x)
-        x = x + _c_attention(pm, p["attn"], hx, 1, causal=False)
+        x = x + _c_attention(pm, p["attn"], hx, _NO_EXPOSE, causal=False)
         hx = _c_norm(pm, p["ln2"], x)
-        x = x + _c_ffn(pm, p["ffn"], hx, 1)
+        x = x + _c_ffn(pm, p["ffn"], hx, _NO_EXPOSE)
     enc = _c_norm(pm, wp["enc_norm"], x)
 
     # decoder
@@ -1279,11 +1473,11 @@ def whisper_private_forward(pm: PrivateModel, embeds, tokens):
         y = y + wp["dec_pos"][:Sd][None]
     for p in wp["dec_layers"]:
         hy = _c_norm(pm, p["ln1"], y)
-        y = y + _c_attention(pm, p["attn"], hy, 1, causal=True)
+        y = y + _c_attention(pm, p["attn"], hy, _NO_EXPOSE, causal=True)
         hy = _c_norm(pm, p["lnx"], y)
-        y = y + _c_attention(pm, p["xattn"], hy, 1, kv=enc, causal=False)
+        y = y + _c_attention(pm, p["xattn"], hy, _NO_EXPOSE, kv=enc, causal=False)
         hy = _c_norm(pm, p["ln2"], y)
-        y = y + _c_ffn(pm, p["ffn"], hy, 1)
+        y = y + _c_ffn(pm, p["ffn"], hy, _NO_EXPOSE)
     y = _c_norm(pm, wp["dec_norm"], y)
     with comm.tag("adaptation"):
         logits_p = protocols.linear(wp["head"]["w"], None, y)

@@ -60,6 +60,29 @@ def pp_permute(x: ShareTensor, p, axis: int = -1) -> ShareTensor:
                        permute.apply_perm(x.s1, p, axis))
 
 
+def pp_permute_batched(x: ShareTensor, perms, axis: int = -1
+                       ) -> ShareTensor:
+    """Pi_PPP with an INDEPENDENT permutation per leading-axis element.
+
+    Continuous-batching decode permutes every serving slot's attention
+    scores with its own fresh π1 (perms: (B, n)); a shared permutation
+    would let P1 align revealed score columns across tenants.  Billed
+    at the Pi_MatMul price per slot: 1 round,
+    2*(numel(X) + B n^2)*64 bits — for B == 1 exactly the sequential
+    pp_permute cost."""
+    B, n = perms.shape
+    assert int(x.shape[0]) == B and int(x.shape[axis]) == n, \
+        (x.shape, perms.shape, axis)
+    bits = 2 * (comm.numel(x.shape) + B * n * n) * comm.RING_BITS
+    comm.record("ppp", rounds=1, bits=bits)
+    ax = axis % x.ndim
+    idx_shape = [1] * x.ndim
+    idx_shape[0], idx_shape[ax] = B, n
+    idx = perms.reshape(idx_shape)
+    return ShareTensor(jnp.take_along_axis(x.s0, idx, axis=ax),
+                       jnp.take_along_axis(x.s1, idx, axis=ax))
+
+
 def pp_permute_exact(x: ShareTensor, p_shared: ShareTensor,
                      dealer) -> ShareTensor:
     """Reference Pi_PPP (paper Algorithm 6): Beaver matmul against the

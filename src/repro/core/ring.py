@@ -105,8 +105,18 @@ def _f64_digit_eligible(a, b) -> bool:
     if a.ndim < 2 or b.ndim < 2:
         return False
     k = a.shape[-1]
+    # total MACs include broadcast batch dims: batched attention GEMMs
+    # (many heads/slots x tiny per-head trailing dims) are exactly the
+    # shapes XLA's scalar int64 loop handles worst
+    ba, bb = a.shape[:-2], b.shape[:-2]
+    if len(bb) > len(ba):
+        ba, bb = bb, ba
+    bb = (1,) * (len(ba) - len(bb)) + tuple(bb)
+    batch = 1
+    for da, db in zip(ba, bb):
+        batch *= max(da, db)
     return (k <= _F64_MAX_K
-            and a.shape[-2] * k * b.shape[-1] >= _F64_MIN_MACS)
+            and batch * a.shape[-2] * k * b.shape[-1] >= _F64_MIN_MACS)
 
 
 def _f64_digit_matmul(a, b):

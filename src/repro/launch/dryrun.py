@@ -149,6 +149,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, reduced: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # older jax: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     chips = 1
     for s in mesh.shape.values():

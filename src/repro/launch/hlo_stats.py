@@ -45,7 +45,10 @@ _COLLECTIVE = re.compile(
     r"collective-permute)(?:-start)?\(")
 _GROUPS_NEW = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_OLD = re.compile(r"replica_groups=\{\{([\d,]+)\}")
-_DOT_OPS = re.compile(r"\bdot\(\s*%([\w.\-]+)")
+# operands may carry their type in scheduled/fused dumps:
+#   dot(f32[4,16]{1,0} %lhs, f32[16,16]{1,0} %rhs)
+_DOT_OPS = re.compile(r"\bdot\(\s*(?:\w+\[[\d,]*\](?:\{[^}]*\})?\s+)?"
+                      r"%([\w.\-]+)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _CONV = re.compile(r"\bconvolution\(")
 _OPCODE = re.compile(r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*[^ ]+\s+"

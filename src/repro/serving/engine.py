@@ -32,7 +32,12 @@ class Request:
 
 
 class RequestQueue:
-    """Shared request-admission plumbing for the serving engines."""
+    """Shared slot-scheduler plumbing for the serving engines.
+
+    Subclasses provide `slots`, `pos`, `max_len` and `_prefill_into`;
+    admission and eviction live here so the plaintext and private
+    engines can never drift apart on the rules that keep them
+    token-identical (same admit order, same length-cap truncation)."""
 
     def __init__(self):
         self.queue: list[Request] = []
@@ -43,6 +48,20 @@ class RequestQueue:
         rid = next(self._rid)
         self.queue.append(Request(rid, list(prompt), max_new_tokens))
         return rid
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(i, req)
+                self.slots[i] = req
+
+    def _evict(self):
+        for i, s in enumerate(self.slots):
+            if s is not None and (s.done
+                                  or self.pos[i] >= self.max_len - 1):
+                self.finished.append(s)
+                self.slots[i] = None
 
 
 class ServingEngine(RequestQueue):
@@ -70,13 +89,6 @@ class ServingEngine(RequestQueue):
         return {r.rid: r.out for r in self.finished}
 
     # ---- scheduler ----------------------------------------------------------
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill_into(i, req)
-                self.slots[i] = req
-
     def _prefill_into(self, slot: int, req: Request):
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, cache1, pos = self.api.prefill(
@@ -92,9 +104,12 @@ class ServingEngine(RequestQueue):
     def step(self) -> bool:
         """One scheduler tick: admit, decode the active batch, evict."""
         self._admit()
+        # prefill emits a token and may already satisfy the request
+        # (max_new_tokens=1) — never decode a finished slot
+        self._evict()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return False
+            return bool(self.queue)
         # uniform position decode (slots padded to max position): we
         # decode each slot at its own pos via per-slot loop when they
         # diverge, batched when aligned
@@ -116,61 +131,123 @@ class ServingEngine(RequestQueue):
                     self.cache, sub)
                 self.slots[i].out.append(int(jnp.argmax(logits[j])))
                 self.pos[i] = pos + 1
-        for i in list(active):
-            if self.slots[i].done or self.pos[i] >= self.max_len - 1:
-                self.finished.append(self.slots[i])
-                self.slots[i] = None
+        self._evict()
         return True
 
 
 class PrivateServingEngine(RequestQueue):
-    """Greedy-decoding server behind the Centaur protocol.
+    """Continuous-batching greedy server behind the Centaur protocol.
 
-    Each request runs private prefill then share-state KV-cache decode
-    steps (core.private_model).  The model's dealer is a TriplePool
-    (one-shot decode shapes generate on demand; recurring shapes are
-    batched offline), and the online phase uses the fused block-stacked
-    GEMM combine.  Comm is tracked per request so callers can report
-    per-token cost like the paper's Fig. 8."""
+    The slot engine above, moved into the share domain: requests are
+    admitted into free slots (private prefill writes that slot's padded
+    share-cache rows), every tick decodes the whole active slot batch
+    through ONE jitted batched private step per layer depth
+    (core.private_model.centaur_decode_step with slot-stacked padded KV
+    share caches and per-slot position/validity masks), finished
+    requests are evicted and their slots reused.  `max_slots=1` is the
+    sequential baseline: same code path, batch of one.
+
+    One batched step bills the ambient ledger once for all slots, so
+    each tick's events are split across the active requests with
+    comm.attribute — exact and sum-conserving, so per-request stats add
+    up to the global ledger and a single-slot run bills identically to
+    sequential serving.  Prefill runs per request and is billed to that
+    request directly.  The model's TriplePool stocks `lookahead` ticks
+    of the recurring batched decode shapes ahead of time (one
+    vectorized offline dispatch per spec)."""
 
     def __init__(self, cfg: ModelConfig, params, key, *,
-                 max_len: int = 256):
+                 max_slots: int = 4, max_len: int = 256,
+                 decode_jit: bool = True, lookahead: int = 4):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
         assert cfg.family == "dense" and not cfg.use_mla, \
             "private serving covers the dense KV-cache decode path"
         super().__init__()
         self.cfg = cfg
+        self.max_slots = max_slots
         self.max_len = max_len
+        self.decode_jit = decode_jit
+        self.lookahead = lookahead
         self._comm = _comm
         self._pmod = _pm
         self.pm = _pm.build_private_model(cfg, params, key,
                                           mode="centaur", use_pool=True)
+        self.slots: list[Request | None] = [None] * max_slots
+        self.pos = np.zeros(max_slots, np.int32)
+        self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
         self.stats: dict[int, dict] = {}
 
-    def _serve_one(self, req: Request) -> dict:
-        pmod = self._pmod
+    # ---- per-request comm accounting ---------------------------------------
+    def _accumulate(self, req: Request, led):
+        st = self.stats.setdefault(req.rid, {"rounds": 0,
+                                             "online_bits": 0,
+                                             "offline_bits": 0,
+                                             "tokens": 0})
+        st["rounds"] += led.total_rounds()
+        st["online_bits"] += led.total_bits()
+        st["offline_bits"] += led.total_bits(False) - led.total_bits()
+        st["tokens"] = len(req.out)
+
+    # ---- scheduler ----------------------------------------------------------
+    def _prefill_into(self, slot: int, req: Request):
+        assert len(req.prompt) < self.max_len, "prompt fills the slot"
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         with self._comm.ledger() as led:
-            logits, caches = pmod.centaur_prefill(self.pm, toks)
-            req.out.append(int(np.argmax(np.asarray(logits)[0])))
-            while not req.done and \
-                    len(req.prompt) + len(req.out) < self.max_len:
-                pos = len(req.prompt) + len(req.out) - 1
-                logits, caches = pmod.centaur_decode_step(
-                    self.pm, caches,
-                    jnp.asarray([[req.out[-1]]], jnp.int32), pos)
-                req.out.append(int(np.argmax(np.asarray(logits)[0])))
-        return {"rounds": led.total_rounds(),
-                "online_bits": led.total_bits(),
-                "offline_bits": led.total_bits(False) - led.total_bits(),
-                "tokens": len(req.out)}
+            logits, c1 = self._pmod.centaur_prefill(
+                self.pm, toks, max_len=self.max_len,
+                jit=self.decode_jit)
+        # splice the request's padded share-cache rows into its slot
+        self.caches = [
+            jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
+                         full_l, one_l)
+            for full_l, one_l in zip(self.caches, c1)]
+        self.pos[slot] = len(req.prompt)
+        req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        self._accumulate(req, led)
 
-    def run_to_completion(self) -> tuple[dict, dict]:
+    def step(self) -> bool:
+        """One tick: admit, decode the active slot batch, evict."""
+        self._admit()
+        # prefill emits a token and may already satisfy the request
+        # (max_new_tokens=1) — never decode a finished slot
+        self._evict()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return bool(self.queue)
+        idxs = jnp.asarray(active)
+        toks = jnp.asarray([[self.slots[i].out[-1]] for i in active],
+                           jnp.int32)
+        pos = jnp.asarray(self.pos[active], jnp.int32)
+        full_batch = len(active) == self.max_slots  # gather = identity
+        sub = self.caches if full_batch else \
+            [jax.tree.map(lambda a: a.take(idxs, axis=0), layer)
+             for layer in self.caches]
+        with self._comm.ledger() as tick:
+            logits, sub = self._pmod.centaur_decode_step(
+                self.pm, sub, toks, pos, jit=self.decode_jit,
+                lookahead=self.lookahead)
+        self.caches = sub if full_batch else [
+            jax.tree.map(lambda full, part: full.at[idxs].set(part),
+                         full_l, sub_l)
+            for full_l, sub_l in zip(self.caches, sub)]
+        lg = np.asarray(logits)
+        for j, i in enumerate(active):
+            self.slots[i].out.append(int(lg[j, 0].argmax()))
+            self.pos[i] += 1
+        # exact per-request attribution of the batched step's comm
+        per = self._comm.attribute(tick.events,
+                                   [self.slots[i].rid for i in active])
+        for i in active:
+            self._accumulate(self.slots[i], per[self.slots[i].rid])
+        self._evict()
+        return True
+
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> tuple[dict, dict]:
         """Serve the queue; returns (outputs, per-request comm stats),
         both cumulative over every request this engine has finished."""
-        while self.queue:
-            req = self.queue.pop(0)
-            self.stats[req.rid] = self._serve_one(req)
-            self.finished.append(req)
+        for _ in range(max_steps):
+            if not self.step():
+                break
         return {r.rid: r.out for r in self.finished}, self.stats

@@ -20,6 +20,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# jax.shard_map landed in 0.6; fall back to the experimental home on the
+# pinned 0.4.x CPU toolchain.  pvary (explicit-sharding replication) does
+# not exist there and is a no-op under the older rep-rule checker.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def ring_allgather_matmul(a_local, b_local, axis_name: str):
     """Per-shard body: a_local (m_loc, k) row-shard of A; b_local (k, n_loc)
@@ -40,7 +48,7 @@ def ring_allgather_matmul(a_local, b_local, axis_name: str):
         chunk = jax.lax.ppermute(chunk, axis_name, perm)
         return (chunk, acc), None
 
-    acc0 = jax.lax.pvary(
+    acc0 = _pvary(
         jnp.zeros((n_dev * m_loc, b_local.shape[1]), jnp.float32),
         (axis_name,))
     (chunk, acc), _ = jax.lax.scan(step, (a_local, acc0),
@@ -51,7 +59,7 @@ def ring_allgather_matmul(a_local, b_local, axis_name: str):
 def tp_matmul_overlapped(a, b, mesh, axis: str = "model"):
     """Global entry: A (m, k) row-sharded over `axis`, B (k, n)
     column-sharded over `axis` -> A @ B column-sharded over `axis`."""
-    fn = jax.shard_map(
+    fn = _shard_map(
         partial(ring_allgather_matmul, axis_name=axis),
         mesh=mesh,
         in_specs=(P(axis, None), P(None, axis)),

@@ -66,6 +66,7 @@ def test_hlo_stats_trip_counts():
     hlo = jax.jit(f).lower(ws, x).compile().as_text()
     st = analyze_hlo(hlo)
     assert L in st["trips"].values()
+    assert st["flops"] > 0, "analyze_hlo missed every dot"
     # 7 iterations x (2 * 4 * 16 * 16) flops
     assert abs(st["flops"] - L * 2 * 4 * 16 * 16) / st["flops"] < 0.01
 

@@ -1,0 +1,91 @@
+"""Hypothesis property tests for core/permute.py — the index-vector
+algebra every Centaur protocol rests on (inverse composition, arbitrary
+-axis roundtrips, and equivalence with the paper's dense-matrix form).
+
+Exactness note: dot-product checks use small integer-valued operands so
+float reassociation cannot blur the comparison — the claims are
+algebraic, not approximate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import permute  # noqa: E402
+
+dims = st.integers(min_value=1, max_value=48)
+seeds = st.integers(min_value=0, max_value=2 ** 30)
+
+
+def _int_arr(seed, shape, lo=-8, hi=8):
+    """Integer-valued float32 array: exact under matmul/permutation."""
+    return jax.random.randint(jax.random.key(seed), shape, lo,
+                              hi).astype(jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, seeds)
+def test_inv_perm_composes_to_identity(n, seed):
+    p = np.asarray(permute.gen_perm(jax.random.key(seed), n))
+    inv = np.asarray(permute.inv_perm(jnp.asarray(p)))
+    np.testing.assert_array_equal(p[inv], np.arange(n))
+    np.testing.assert_array_equal(inv[p], np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, seeds, st.integers(min_value=0, max_value=2),
+       st.booleans())
+def test_apply_perm_roundtrip_on_arbitrary_axis(n, seed, axis,
+                                                inv_first):
+    shape = [3, 4, 5]
+    shape[axis] = n
+    x = _int_arr(seed, tuple(shape))
+    p = permute.gen_perm(jax.random.key(seed + 1), n)
+    if inv_first:
+        y = permute.apply_perm(permute.apply_inv_perm(x, p, axis), p,
+                               axis)
+    else:
+        y = permute.apply_inv_perm(permute.apply_perm(x, p, axis), p,
+                                   axis)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, seeds)
+def test_perm_matrix_matches_gather(n, seed):
+    """X @ Pi == apply_perm(X, p, -1) — the dense 0/1 matrix of the
+    paper and the O(n) gather are the same linear map."""
+    p = permute.gen_perm(jax.random.key(seed), n)
+    x = _int_arr(seed + 1, (4, n))
+    pi = permute.perm_matrix(p, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(x @ pi),
+        np.asarray(permute.apply_perm(x, p, axis=-1)))
+    # a permutation matrix is orthogonal: Pi @ Pi^T = I
+    np.testing.assert_array_equal(np.asarray(pi @ pi.T), np.eye(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims, dims, seeds)
+def test_permute_linear_equals_matrix_form(n_in, n_out, seed):
+    """permute_linear's gathered W' reproduces the permuted linear map:
+    apply_perm(x W^T + b, p_out) == apply_perm(x, p_in) W'^T + b'."""
+    k = jax.random.key(seed)
+    w = _int_arr(seed, (n_out, n_in))
+    b = _int_arr(seed + 1, (n_out,))
+    p_in = permute.gen_perm(jax.random.fold_in(k, 0), n_in)
+    p_out = permute.gen_perm(jax.random.fold_in(k, 1), n_out)
+    x = _int_arr(seed + 2, (2, n_in))
+
+    wp, bp = permute.permute_linear(w, b, p_in, p_out)
+    lhs = permute.apply_perm(x, p_in, -1) @ wp.T + bp
+    rhs = permute.apply_perm(x @ w.T + b, p_out, -1)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+    # bias-free layers permute the same way
+    wp2, bp2 = permute.permute_linear(w, None, p_in, p_out)
+    assert bp2 is None
+    np.testing.assert_array_equal(np.asarray(wp2), np.asarray(wp))
