@@ -3,11 +3,18 @@
 Serves the same request set through the slot-based PrivateServingEngine
 at slots ∈ {1, 2, 4} on the tiny dense config and reports warm
 tokens/sec — slots=1 is the sequential baseline (same code path, batch
-of one).  Each engine serves a warm-up round first so jit compiles and
-triple-generator programs are excluded from the timed round; token
-outputs are cross-checked against the sequential run on every setting.
+of one).  With the protocol-suite executor every servable PPTI mode
+runs the identical serving loop, so `--mode centaur,smpc` (the default)
+also measures the paper's headline end-to-end: the centaur-vs-smpc
+tokens/sec ratio under identical continuous-batching conditions.
 
-    PYTHONPATH=src python benchmarks/private_serving_bench.py [--smoke]
+Each engine serves a warm-up round first so jit compiles and
+triple-generator programs are excluded from the timed round; token
+outputs are cross-checked against the *same-mode* sequential run on
+every slot count.
+
+    PYTHONPATH=src python benchmarks/private_serving_bench.py \
+        [--smoke] [--mode centaur,smpc]
 
 Writes BENCH_private_serving.json next to the repo root.
 """
@@ -23,32 +30,42 @@ import jax
 OUT = os.path.join(os.path.dirname(__file__), "..",
                    "BENCH_private_serving.json")
 
+MODES = ("centaur", "smpc")
 
-def _prompts(n_requests: int):
-    # deterministic mixed lengths (2..5) — staggered admissions at
-    # every slot count
-    return [[(3 * i + j) % 300 + 1 for j in range(2 + i % 4)]
+
+def _prompts(n_requests: int, length: int = 3):
+    # deterministic varied content at a UNIFORM length: every engine
+    # compiles exactly one prefill and one decode program, so the
+    # timed warm round measures serving, not jit churn (mixed-length /
+    # staggered-admission correctness is pinned by the tests)
+    return [[(3 * i + j) % 300 + 1 for j in range(length)]
             for i in range(n_requests)]
 
 
-def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
-        max_len: int = 24, rounds: int = 2, out: str | None = OUT,
-        smoke: bool = False):
-    from repro.configs.paper_models import GPT2_TINY as CFG
-    from repro.models.registry import get_api
+def _speedup_ratio(per_mode: dict) -> float | None:
+    """centaur/smpc warm tokens-per-sec ratio at the best slot count
+    (None when either mode is missing or degenerate — smoke runs)."""
+    try:
+        cent = max(r["tokens_per_sec"]
+                   for r in per_mode["centaur"]["slots"].values())
+        smpc = max(r["tokens_per_sec"]
+                   for r in per_mode["smpc"]["slots"].values())
+    except KeyError:
+        return None
+    if smpc <= 0:
+        return None
+    return round(cent / smpc, 3)
+
+
+def run_mode(mode: str, cfg, params, prompts, slot_counts, n_new: int,
+             max_len: int, rounds: int):
     from repro.serving.engine import PrivateServingEngine
 
-    if smoke:
-        n_requests, n_new, rounds = 4, 3, 2
-    key = jax.random.key(0)
-    params = get_api(CFG).init_params(CFG, key)
-    prompts = _prompts(n_requests)
-
-    results = {"config": CFG.name, "n_requests": n_requests,
-               "n_new": n_new, "max_len": max_len, "slots": {}}
+    results = {"slots": {}}
     baseline_tokens = None
     for slots in slot_counts:
-        eng = PrivateServingEngine(CFG, params, key, max_slots=slots,
+        eng = PrivateServingEngine(cfg, params, jax.random.key(0),
+                                   mode=mode, max_slots=slots,
                                    max_len=max_len)
         for _ in range(rounds):            # last round is the warm one
             rids = [eng.submit(p, max_new_tokens=n_new)
@@ -60,7 +77,7 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
         if baseline_tokens is None:
             baseline_tokens = tokens
         assert tokens == baseline_tokens, \
-            f"slots={slots} changed the decoded tokens"
+            f"{mode} slots={slots} changed the decoded tokens"
         total = sum(len(t) for t in tokens)
         per_req = [stats[r] for r in rids]
         results["slots"][str(slots)] = {
@@ -70,17 +87,45 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
             "online_bits_total": sum(s["online_bits"] for s in per_req),
             "rounds_total": sum(s["rounds"] for s in per_req),
         }
-        print(f"[private-serving] slots={slots}: "
+        print(f"[private-serving] {mode} slots={slots}: "
               f"{total / dt:.2f} tok/s warm ({total} tokens, {dt:.2f}s)")
 
     seq = results["slots"].get("1")
-    if seq:
+    if seq and seq["tokens_per_sec"] > 0:
         for slots, r in results["slots"].items():
             r["speedup_vs_sequential"] = round(
                 r["tokens_per_sec"] / seq["tokens_per_sec"], 3)
         best = max(r["speedup_vs_sequential"]
                    for r in results["slots"].values())
-        print(f"[private-serving] best speedup vs sequential: {best}x")
+        print(f"[private-serving] {mode} best speedup vs sequential: "
+              f"{best}x")
+    return results
+
+
+def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
+        max_len: int = 24, rounds: int = 2, out: str | None = OUT,
+        smoke: bool = False, modes=MODES):
+    from repro.configs.paper_models import GPT2_TINY as CFG
+    from repro.models.registry import get_api
+
+    if smoke:
+        n_requests, n_new, rounds = 4, 3, 2
+        slot_counts = (1, 4)
+    key = jax.random.key(0)
+    params = get_api(CFG).init_params(CFG, key)
+    prompts = _prompts(n_requests)
+
+    results = {"config": CFG.name, "n_requests": n_requests,
+               "n_new": n_new, "max_len": max_len, "modes": {}}
+    for mode in modes:
+        results["modes"][mode] = run_mode(
+            mode, CFG, params, prompts, slot_counts=slot_counts,
+            n_new=n_new, max_len=max_len, rounds=rounds)
+    ratio = _speedup_ratio(results["modes"])
+    if ratio is not None:
+        results["centaur_vs_smpc_tokens_per_sec"] = ratio
+        print(f"[private-serving] centaur vs smpc (identical serving "
+              f"conditions): {ratio}x tokens/sec")
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=1)
@@ -92,9 +137,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run; skips writing the json")
+    ap.add_argument("--mode", default=",".join(MODES),
+                    help="comma-separated PPTI modes to serve "
+                         "(default: centaur,smpc)")
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args(argv)
-    run(out=None if args.smoke else args.out, smoke=args.smoke)
+    modes = tuple(m.strip() for m in args.mode.split(",") if m.strip())
+    run(out=None if args.smoke else args.out, smoke=args.smoke,
+        modes=modes)
 
 
 if __name__ == "__main__":

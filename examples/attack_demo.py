@@ -11,7 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import jax
 import numpy as np
 
-from benchmarks.privacy_attack import (distance_correlation,
+from benchmarks.privacy_attack import (_reference_rows,
+                                       distance_correlation,
                                        nn_inversion_rate)
 from repro.configs.paper_models import BERT_TINY as CFG
 from repro.core.permute import log2_brute_force_space
@@ -36,7 +37,9 @@ def main():
     pm_cent = build_private_model(CFG, params, key, mode="centaur")
     private_forward(pm_cent, tokens)
 
-    table = np.asarray(params["embed"]["tok"], np.float32)
+    # per-position candidate rows (the attacker scores every vocab row,
+    # plus the positional term, against every observed position)
+    ref_rows = _reference_rows(CFG, params, B, S)
     flat = np.asarray(emb, np.float32).reshape(B * S, -1)
 
     print(f"{'observed by cloud':28s}{'NN token recovery':>20s}"
@@ -47,7 +50,7 @@ def main():
         ("random matrix", np.asarray(jax.random.normal(
             key, pm_cent.exposed["O4"].shape))),
     ]:
-        r = nn_inversion_rate(obs, table, tokens)
+        r = nn_inversion_rate(obs, ref_rows, tokens)
         d = distance_correlation(flat, obs.reshape(B * S, -1))
         print(f"{name:28s}{r:20.3f}{d:20.3f}")
 

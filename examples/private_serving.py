@@ -92,6 +92,35 @@ def main():
     assert [ref[r] for r in rids2] == [outs_p[r] for r in rids_p]
     print("  private generation == plaintext greedy decoding ✓")
 
+    # ---- 3. the impossible trinity, end-to-end: SMPC baseline serving ----
+    # Same engine, same slots, same executor — only the protocol suite
+    # differs (mode="smpc").  The tokens/sec gap is the paper's headline
+    # measured under identical continuous-batching conditions: both
+    # engines serve the SAME request subset (two EQUAL-LENGTH prompts,
+    # so the baseline compiles one prefill + one decode program; the
+    # full measurement lives in benchmarks/private_serving_bench.py).
+    duel_prompts = [PROMPTS[0], PROMPTS[4]]       # both length 3
+    per_mode = {}
+    for mode in ("centaur", "smpc"):
+        eng3 = PrivateServingEngine(CFG, params, key, mode=mode,
+                                    max_slots=4, max_len=MAX_LEN)
+        for p in duel_prompts:              # warm-up round: jit compiles
+            eng3.submit(p, max_new_tokens=N_NEW)
+        eng3.run_to_completion()
+        rids_m = [eng3.submit(p, max_new_tokens=N_NEW)
+                  for p in duel_prompts]
+        with comm.ledger() as led_m:
+            t0 = time.monotonic()
+            outs_m, _ = eng3.run_to_completion()
+            dt_m = time.monotonic() - t0
+        tok_m = sum(len(outs_m[r]) for r in rids_m)
+        per_mode[mode] = tok_m / dt_m
+        print(f"[{mode}] identical workload: {len(rids_m)} requests, "
+              f"{tok_m} tokens in {dt_m:.2f}s ({tok_m / dt_m:.1f} tok/s,"
+              f" {led_m.total_bytes() / 1e6:.1f} MB online)")
+    print(f"  centaur vs smpc under identical serving: "
+          f"{per_mode['centaur'] / per_mode['smpc']:.1f}x tokens/sec")
+
 
 if __name__ == "__main__":
     main()

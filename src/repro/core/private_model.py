@@ -1,6 +1,8 @@
 """End-to-end private transformer inference (paper §5).
 
-Four execution modes over the *same* plaintext parameters:
+Five execution modes over the *same* plaintext parameters, each a
+``ProtocolSuite`` (core/suites/) driven by ONE shared layer/block
+executor (core/suites/executor.py):
 
   centaur   — the paper: permuted-plaintext weights (Pi_ScalMul linears),
               secret-shared activations, share<->permuted-state conversion
@@ -10,6 +12,7 @@ Four execution modes over the *same* plaintext parameters:
               via iterative fixed-point approximations (core.smpc_nl).
   mpcformer — MPCFormer baseline: smpc linears + Quad/2Quad substitution
               (reproduces the accuracy drop of paper Table 3).
+  secformer — 2Quad softmax with exact-structure GeLU/SiLU approximation.
   permute   — Yuan et al. (STI) baseline: plaintext compute on permuted
               weights/data; exposes O1 = QK^T etc. (the paper's Fig. 4
               privacy failure, reproduced by benchmarks/privacy_attack).
@@ -20,97 +23,34 @@ Families: encoder (BERT incl. pooler adaptation), dense decoders
 (Pi_PPSSD).  The engine mirrors models/* exactly so Centaur's output can
 be compared bit-for-bit (up to fixed-point) against plaintext.
 
-`exposed` records what the cloud P1 actually observes per mode — the
-attack surface evaluated by benchmarks/privacy_attack.py.
+This module is the assembly + compatibility surface: it prepares a
+`PrivateModel` for a mode and keeps the historical entry points
+(`centaur_forward`, `smpc_forward`, `private_forward`, prefill/decode)
+as thin wrappers over the suite executor.  `pm.exposed` records what
+the cloud P1 actually observes per mode — the attack surface evaluated
+by benchmarks/privacy_attack.py.
 """
 from __future__ import annotations
-
-from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from . import beaver, comm, nonlinear, permute, protocols, ring, smpc_nl
-from .sharing import ShareTensor, reconstruct, share
+from . import beaver, comm, permute, protocols, ring
+from .sharing import reconstruct, share
+from .suites import (KeyStream, PrivateModel, encrypt_tokens,  # noqa: F401
+                     get_suite)
+from .suites import centaur as _centaur
+from .suites import executor as _exec
+from .suites import smpc as _smpc
+from .suites.centaur import rope_on_shares  # noqa: F401  (compat)
+from .suites.executor import init_slot_caches  # noqa: F401  (compat)
 
 P32 = jnp.float32
 
 
 # =============================================================================
-# key stream
+# model assembly (initialization phase, paper §5.1)
 # =============================================================================
-
-class KeyStream:
-    def __init__(self, key):
-        self._key = key
-
-    def __call__(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
-
-# =============================================================================
-# parameter preparation (initialization phase, paper §5.1)
-# =============================================================================
-
-def _enc_linear(w, b, p_in, p_out):
-    """Permute then ring-encode a linear layer (weights (out, in))."""
-    wp, bp = permute.permute_linear(jnp.asarray(w, P32),
-                                    None if b is None else jnp.asarray(
-                                        b, P32), p_in, p_out)
-    return {"w": ring.encode(wp),
-            "b": None if bp is None else ring.encode(bp)}
-
-
-def _share_linear(w, b, ks):
-    out = {"w": share(ks(), ring.encode(jnp.asarray(w, P32)))}
-    out["b"] = None if b is None else share(ks(), ring.encode(
-        jnp.asarray(b, P32)))
-    return out
-
-
-@dataclass
-class PrivateModel:
-    cfg: Any
-    mode: str
-    perms: dict                      # named index-permutations
-    wp: dict                         # prepared parameters
-    ks: KeyStream
-    dealer: Any                      # TripleDealer or TriplePool
-    exposed: dict = field(default_factory=dict)
-    pool: Any = None                 # lazily-built beaver.TriplePool
-    jit_cache: dict = field(default_factory=dict)
-
-    def expose(self, name, value):
-        """Record an intermediate as seen by the cloud platform P1."""
-        if name not in self.exposed:
-            self.exposed[name] = value
-
-    def triple_pool(self):
-        if self.pool is None:
-            # a pool built with use_pool=True is the model's dealer;
-            # reuse it so jitted paths and eager paths draw from (and
-            # bill) one offline phase
-            self.pool = (self.dealer
-                         if isinstance(self.dealer, beaver.TriplePool)
-                         else beaver.TriplePool(self.ks()))
-        return self.pool
-
-
-def _mamba_channel_perms(cfg, ks):
-    """Structured permutations for Pi_PPSSD: heads x headdim x state."""
-    H, Pd, N, G = (cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state,
-                   cfg.ssm_ngroups)
-    pH = permute.gen_perm(ks(), H)
-    pP = permute.gen_perm(ks(), Pd)
-    pN = permute.gen_perm(ks(), N)
-    # channel perm for the x part (H x P flattened)
-    pXP = (pH[:, None] * Pd + pP[None, :]).reshape(-1)
-    # B/C parts (G x N flattened); groups left in place (G is tiny/public)
-    pGN = (jnp.arange(G)[:, None] * N + pN[None, :]).reshape(-1)
-    return {"H": pH, "P": pP, "N": pN, "XP": pXP, "GN": pGN}
-
 
 def build_private_model(cfg, params, key, mode: str = "centaur",
                         use_pool: bool = False) -> PrivateModel:
@@ -119,8 +59,6 @@ def build_private_model(cfg, params, key, mode: str = "centaur",
               else beaver.TripleDealer(ks()))
     d = cfg.d_model
     perms = {"d": permute.gen_perm(ks(), d)}
-    if mode == "permute" or mode == "centaur":
-        pass
     if cfg.family in ("dense", "encoder", "moe"):
         ffd = cfg.moe_d_ff if cfg.family == "moe" else cfg.d_ff
         perms["ff"] = permute.gen_perm(ks(), ffd)
@@ -132,1265 +70,74 @@ def build_private_model(cfg, params, key, mode: str = "centaur",
             perms["shared_ff"] = permute.gen_perm(
                 ks(), cfg.n_shared_experts * cfg.moe_d_ff)
     if cfg.family in ("ssm", "hybrid"):
-        perms.update(_mamba_channel_perms(cfg, ks))
+        perms.update(_centaur.mamba_channel_perms(cfg, ks))
     if cfg.family == "hybrid":
         perms["ff"] = permute.gen_perm(ks(), cfg.d_ff)
     perms["v"] = permute.gen_perm(ks(), cfg.vocab_size)
 
     pm = PrivateModel(cfg, mode, perms, {}, ks, dealer)
     if mode in ("centaur", "permute"):
-        pm.wp = _prepare_permuted(cfg, params, perms)
+        pm.wp = _centaur.prepare_permuted(cfg, params, perms)
     elif mode in ("smpc", "mpcformer", "secformer"):
-        pm.wp = _prepare_shared(cfg, params, ks)
+        pm.wp = _smpc.prepare_shared(cfg, params, ks)
     else:
         raise ValueError(mode)
     return pm
 
 
-def _norm_perm(p_norm, p):
-    out = {"g": permute.apply_perm(jnp.asarray(p_norm["g"], P32), p)}
-    if "b" in p_norm:
-        out["b"] = permute.apply_perm(jnp.asarray(p_norm["b"], P32), p)
-    return out
-
-
-def _prepare_permuted(cfg, params, perms):
-    """Theta' = permuted parameters (centaur: ring-encoded for ScalMul;
-    permute-mode uses the same permuted floats)."""
-    pd, ident = perms["d"], None
-    if cfg.family == "hybrid":
-        return _prepare_hybrid_permuted(cfg, params, perms)
-    wp = {"layers": []}
-    emb = jnp.asarray(params["embed"]["tok"], P32)
-    wp["embed"] = {"tok": ring.encode(permute.apply_perm(emb, pd, 1))}
-    if "pos" in params["embed"]:
-        wp["embed"]["pos"] = ring.encode(permute.apply_perm(
-            jnp.asarray(params["embed"]["pos"], P32), pd, 1))
-    if "embed_norm" in params:
-        wp["embed_norm"] = _norm_perm(params["embed_norm"], pd)
-
-    nl = cfg.num_layers
-    for i in range(nl):
-        p_l = jax.tree.map(lambda a: a[i], params["layers"]) \
-            if cfg.family != "ssm" else jax.tree.map(
-                lambda a: a[i], params["layers"])
-        wp["layers"].append(_prepare_layer_permuted(cfg, p_l, perms))
-
-    wp["final_norm"] = _norm_perm(params["final_norm"], pd)
-    if cfg.family == "encoder":
-        wp["pooler"] = _enc_linear(params["pooler"]["w"],
-                                   params["pooler"]["b"], pd, pd)
-        wp["classifier"] = _enc_linear(params["classifier"]["w"],
-                                       params["classifier"]["b"], pd,
-                                       jnp.arange(2))
-    else:
-        head_w = (params["embed"]["tok"] if cfg.tie_embeddings
-                  else params["head"]["w"])
-        wp["head"] = _enc_linear(head_w, None, pd, perms["v"])
-    return wp
-
-
-def _prepare_hybrid_permuted(cfg, params, perms):
-    """Zamba2: per-layer Pi_PPSSD mamba blocks + ONE shared attention
-    block (permuted once, applied every attn_every layers)."""
-    pd = perms["d"]
-    wp = {"layers": [], "embed": {"tok": ring.encode(permute.apply_perm(
-        jnp.asarray(params["embed"]["tok"], P32), pd, 1))}}
-    for i in range(cfg.num_layers):
-        p_l = jax.tree.map(lambda a: a[i], params["mamba_layers"])
-        wp["layers"].append({
-            "ln1": _norm_perm(p_l["ln"], pd),
-            "mamba": _prepare_mamba_permuted(cfg, p_l["mamba"], perms),
-        })
-    sh = params["shared"]
-    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
-    pf = perms["ff"]
-    wp["shared"] = {
-        "ln1": _norm_perm(sh["ln1"], pd),
-        "ln2": _norm_perm(sh["ln2"], pd),
-        "attn": {
-            "wq": _enc_linear(sh["attn"]["wq"], None, pd,
-                              jnp.arange(h * dh)),
-            "wk": _enc_linear(sh["attn"]["wk"], None, pd,
-                              jnp.arange(hk * dh)),
-            "wv": _enc_linear(sh["attn"]["wv"], None, pd,
-                              jnp.arange(hk * dh)),
-            "wo": _enc_linear(sh["attn"]["wo"], None,
-                              jnp.arange(h * dh), pd),
-        },
-        "ffn": {
-            "w_gate": _enc_linear(sh["ffn"]["w_gate"], None, pd, pf),
-            "w_up": _enc_linear(sh["ffn"]["w_up"], None, pd, pf),
-            "w_down": _enc_linear(sh["ffn"]["w_down"], None, pf, pd),
-        },
-    }
-    wp["final_norm"] = _norm_perm(params["final_norm"], pd)
-    wp["head"] = _enc_linear(params["head"]["w"], None, pd, perms["v"])
-    return wp
-
-
-def _prepare_layer_permuted(cfg, p_l, perms):
-    pd = perms["d"]
-    ident_d = jnp.arange(cfg.d_model)
-    out = {"ln1": _norm_perm(p_l["ln"] if cfg.family == "ssm"
-                             else p_l["ln1"], pd)}
-    if cfg.family == "ssm":
-        out["mamba"] = _prepare_mamba_permuted(cfg, p_l["mamba"], perms)
-        return out
-    out["ln2"] = _norm_perm(p_l["ln2"], pd)
-    a = p_l["attn"]
-    if cfg.use_mla:
-        # MLA: latent projections get their own perms; per-head Q/K/V
-        # stay unpermuted (share-state through Pi_MatMul); the k_pe rows
-        # of wkv_a stay unpermuted so RoPE can act on shares.
-        pq, pkv = perms["q_lora"], perms["kv_lora"]
-        h = cfg.num_heads
-        qn, qr, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
-                      cfg.v_head_dim)
-        kv_rows = jnp.concatenate([pkv, cfg.kv_lora_rank
-                                   + jnp.arange(qr)])
-        out["attn"] = {
-            "wq_a": _enc_linear(a["wq_a"], None, pd, pq),
-            "q_norm": _norm_perm(a["q_norm"], pq),
-            "wq_b": _enc_linear(a["wq_b"], None, pq,
-                                jnp.arange(h * (qn + qr))),
-            "wkv_a": _enc_linear(a["wkv_a"], None, pd, kv_rows),
-            "kv_norm": _norm_perm(a["kv_norm"], pkv),
-            "wkv_b": _enc_linear(a["wkv_b"], None, pkv,
-                                 jnp.arange(h * (qn + vd))),
-            "wo": _enc_linear(a["wo"], None, jnp.arange(h * vd), pd),
-        }
-    else:
-        h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.dh
-        ident_q = jnp.arange(h * dh)
-        ident_kv = jnp.arange(hk * dh)
-        out["attn"] = {
-            "wq": _enc_linear(a["wq"], None, pd, ident_q),
-            "wk": _enc_linear(a["wk"], None, pd, ident_kv),
-            "wv": _enc_linear(a["wv"], None, pd, ident_kv),
-            "wo": _enc_linear(a["wo"], None, ident_q, pd),
-        }
-    f = p_l["ffn"]
-    pf = perms["ff"]
-    if cfg.family == "moe":
-        pe = perms["e"]
-        out["ffn"] = {
-            # router: feature-permuted in, expert-permuted out
-            "router": _enc_linear(f["router"], None, pd, pe),
-            # per-expert weights: stored in permuted-expert order
-            "w_gate": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_gate"], P32), pe, 0),
-                pd, 1), pf, 2)),
-            "w_up": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_up"], P32), pe, 0),
-                pd, 1), pf, 2)),
-            "w_down": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_down"], P32), pe, 0),
-                pf, 1), pd, 2)),
-        }
-        if cfg.n_shared_experts:
-            psf = perms["shared_ff"]
-            out["ffn"]["shared"] = {
-                "w_gate": _enc_linear(f["shared"]["w_gate"], None, pd, psf),
-                "w_up": _enc_linear(f["shared"]["w_up"], None, pd, psf),
-                "w_down": _enc_linear(f["shared"]["w_down"], None, psf, pd),
-            }
-    elif cfg.ffn_type == "swiglu":
-        out["ffn"] = {
-            "w_gate": _enc_linear(f["w_gate"], None, pd, pf),
-            "w_up": _enc_linear(f["w_up"], None, pd, pf),
-            "w_down": _enc_linear(f["w_down"], None, pf, pd),
-        }
-    else:
-        out["ffn"] = {
-            "up": _enc_linear(f["w_up"], f["b_up"], pd, pf),
-            "down": _enc_linear(f["w_down"], f["b_down"], pf, pd),
-        }
-    return out
-
-
-def _prepare_mamba_permuted(cfg, m, perms):
-    """Permute a Mamba2 block for Pi_PPSSD: in_proj output channels get
-    the structured perm [z:XP | x:XP | B,C:GN | dt:H]; conv is depthwise
-    so its channel axis permutes identically; P1 holds the mid-block
-    weights in *plaintext permuted* form (it evaluates conv+SSD+gate in
-    the clear on permuted data)."""
-    pd = perms["d"]
-    di = cfg.d_inner
-    gn = cfg.ssm_ngroups * cfg.ssm_state
-    pXP, pGN, pH = perms["XP"], perms["GN"], perms["H"]
-    # output-channel permutation of in_proj rows
-    rows = jnp.concatenate([
-        pXP,                                   # z
-        di + pXP,                              # x (conv part)
-        2 * di + pGN,                          # B
-        2 * di + gn + pGN,                     # C
-        2 * di + 2 * gn + pH,                  # dt
-    ])
-    w_in = jnp.take(jnp.take(jnp.asarray(m["in_proj"], P32), rows, 0),
-                    pd, 1)
-    conv_rows = jnp.concatenate([pXP, di + pGN, di + gn + pGN])
-    return {
-        "in_proj": {"w": ring.encode(w_in), "b": None},
-        # P1-side plaintext (permuted) mid-block weights
-        "conv_w": jnp.take(jnp.asarray(m["conv_w"], P32), conv_rows, 0),
-        "conv_b": jnp.take(jnp.asarray(m["conv_b"], P32), conv_rows, 0),
-        "A_log": jnp.take(jnp.asarray(m["A_log"], P32), pH, 0),
-        "D": jnp.take(jnp.asarray(m["D"], P32), pH, 0),
-        "dt_bias": jnp.take(jnp.asarray(m["dt_bias"], P32), pH, 0),
-        "gate_norm": _norm_perm(m["gate_norm"], pXP),
-        "out_proj": _enc_linear(m["out_proj"], None, pXP, pd),
-    }
-
-
-def _prepare_shared(cfg, params, ks):
-    """smpc baseline: every parameter secret-shared."""
-    def enc_share(a):
-        return share(ks(), ring.encode(jnp.asarray(a, P32)))
-    return jax.tree.map(enc_share, params)
-
-
 # =============================================================================
-# shared-state helpers
+# forward passes — thin wrappers over the suite executor
 # =============================================================================
 
-def rope_on_shares(x: ShareTensor, cos, sin):
-    """Public per-position rotation applied locally to each share."""
-    half = x.shape[-1] // 2
-    c = ring.encode(cos)[..., None, :]
-    s = ring.encode(sin)[..., None, :]
-
-    def rot(t):
-        t1, t2 = t[..., :half], t[..., half:]
-        r1 = ring.truncate(t1 * c - t2 * s)
-        r2 = ring.truncate(t2 * c + t1 * s)
-        return jnp.concatenate([r1, r2], -1)
-
-    return ShareTensor(rot(x.s0), rot(x.s1))
-
-
-def _pp_apply2(pm: PrivateModel, fn, x: ShareTensor, y: ShareTensor,
-               protocol: str):
-    """Joint reveal of two permuted-state tensors, plaintext combine at
-    P1, single reshare (beyond-paper: cheaper than a Beaver product for
-    SwiGLU's silu(g) * u)."""
-    xv = ring.decode(reconstruct(x), dtype=P32)
-    yv = ring.decode(reconstruct(y), dtype=P32)
-    out = fn(xv, yv)
-    comm.record(protocol, rounds=2,
-                bits=(comm.numel(x.shape) + comm.numel(y.shape)
-                      + comm.numel(out.shape)) * comm.RING_BITS)
-    return share(pm.ks(), ring.encode(out))
-
-
-# =============================================================================
-# private layers — centaur mode
-# =============================================================================
-
-def _linear(pm, wdict, x: ShareTensor):
-    return protocols.linear(wdict["w"], wdict["b"], x)
-
-
-def _c_attention(pm: PrivateModel, p, x: ShareTensor, layer_idx: int,
-                 kv: ShareTensor | None = None,
-                 causal: bool | None = None):
-    """Paper §5.2.1 attention: ScalMul projections -> Pi_MatMul QK^T ->
-    Pi_PPP -> Pi_PPSM -> Pi_MatMul with pi1-permuted V -> ScalMul out.
-    `kv`: cross-attention source (encoder output shares) — K/V are
-    ScalMul'd from it instead of x."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    kv_in = x if kv is None else kv
-    T = kv_in.shape[1]
-    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
-    with comm.tag("linear"):
-        q = _linear(pm, p["wq"], x)          # unpermuted feature dim
-        k = _linear(pm, p["wk"], kv_in)
-        v = _linear(pm, p["wv"], kv_in)
-    q = q.reshape(B, S, h, dh)
-    k = k.reshape(B, T, hk, dh)
-    v = v.reshape(B, T, hk, dh)
-
-    if cfg.pos_embed == "rope":
-        pos = jnp.arange(S)[None, :].repeat(B, 0)
-        from repro.models.layers import rope_freqs
-        cos, sin = rope_freqs(cfg, pos, dh)
-        q = rope_on_shares(q, cos, sin)
-        k = rope_on_shares(k, cos, sin)
-
-    # heads to batch: (B,hk,g,S,dh) x (B,hk,S,dh)
-    q = q.reshape(B, S, hk, g, dh).transpose(0, 2, 3, 1, 4)
-    k = k.transpose(0, 2, 1, 3)
-    v = v.transpose(0, 2, 1, 3)
-    kt = ShareTensor(jnp.swapaxes(k.s0, -1, -2), jnp.swapaxes(k.s1, -1, -2))
-    kt = ShareTensor(jnp.broadcast_to(kt.s0[:, :, None], (B, hk, g, dh, T)),
-                     jnp.broadcast_to(kt.s1[:, :, None], (B, hk, g, dh, T)))
-    with comm.tag("linear"):
-        o1 = beaver.matmul(q, kt, pm.dealer)     # (B,hk,g,S,T)
-    o1 = o1.mul_public(ring.encode(dh ** -0.5))
-    if cfg.causal if causal is None else causal:
-        mask = jnp.tril(jnp.ones((S, T))) - 1.0  # 0 / -1
-        o1 = o1 + ring.encode(mask * 1e4)
-
-    # Pi_PPP with a fresh per-request sequence permutation pi1
-    pi1 = permute.gen_perm(pm.ks(), T)
-    with comm.tag("softmax"):
-        o1p = protocols.pp_permute(o1, pi1, axis=-1)
-        if layer_idx == 0:
-            pm.expose("O1", ring.decode(reconstruct(o1p), dtype=P32))
-        o2p = nonlinear.pp_softmax(o1p, pm.ks())
-    with comm.tag("softmax"):
-        vp = protocols.pp_permute(v, pi1, axis=-2)  # rows permuted by pi1
-    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None],
-                                      (B, hk, g, T, dh)),
-                     jnp.broadcast_to(vp.s1[:, :, None],
-                                      (B, hk, g, T, dh)))
-    with comm.tag("linear"):
-        o3 = beaver.matmul(o2p, vp, pm.dealer)   # (B,hk,g,S,dh)
-    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
-    with comm.tag("linear"):
-        return _linear(pm, p["wo"], o3)          # output permuted by pi_d
-
-
-def _c_mla_attention(pm: PrivateModel, p, x: ShareTensor,
-                     layer_idx: int):
-    """Private MLA (deepseek-v2): latent down-projections are ScalMuls
-    with latent-dim permutations + Pi_PPLN on the permuted latents;
-    per-head scores follow the paper's Pi_MatMul -> Pi_PPP -> Pi_PPSM
-    flow with [q_nope|q_pe] / [k_nope|k_pe] concatenated heads."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    h = cfg.num_heads
-    qn, qr, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
-                  cfg.v_head_dim)
-    with comm.tag("linear"):
-        q_lat = _linear(pm, p["wq_a"], x)
-    q_lat = _c_norm(pm, p["q_norm"], q_lat)
-    with comm.tag("linear"):
-        q = _linear(pm, p["wq_b"], q_lat).reshape(B, S, h, qn + qr)
-        kv_a = _linear(pm, p["wkv_a"], x)
-    ckv = kv_a[..., :cfg.kv_lora_rank]
-    k_pe = kv_a[..., cfg.kv_lora_rank:]
-    ckv = _c_norm(pm, p["kv_norm"], ckv)
-    with comm.tag("linear"):
-        kv = _linear(pm, p["wkv_b"], ckv).reshape(B, S, h, qn + vd)
-
-    from repro.models.layers import rope_freqs
-    pos = jnp.arange(S)[None, :].repeat(B, 0)
-    cos, sin = rope_freqs(cfg, pos, qr)
-    q_pe = rope_on_shares(q[..., qn:], cos, sin)
-    k_pe = rope_on_shares(k_pe.reshape(B, S, 1, qr), cos, sin)
-
-    # concat heads: q_cat (B,h,S,qn+qr); k_cat (B,h,qn+qr,T)
-    q_cat = ShareTensor(
-        jnp.concatenate([q.s0[..., :qn], q_pe.s0], -1),
-        jnp.concatenate([q.s1[..., :qn], q_pe.s1], -1)).transpose(
-            0, 2, 1, 3)
-    k_pe_b = ShareTensor(
-        jnp.broadcast_to(k_pe.s0, (B, S, h, qr)),
-        jnp.broadcast_to(k_pe.s1, (B, S, h, qr)))
-    k_cat = ShareTensor(
-        jnp.concatenate([kv.s0[..., :qn], k_pe_b.s0], -1),
-        jnp.concatenate([kv.s1[..., :qn], k_pe_b.s1], -1)).transpose(
-            0, 2, 3, 1)
-    v = kv[..., qn:].transpose(0, 2, 1, 3)         # (B,h,S,vd)
-
-    with comm.tag("linear"):
-        o1 = beaver.matmul(q_cat, k_cat, pm.dealer)
-    o1 = o1.mul_public(ring.encode((qn + qr) ** -0.5))
-    mask = jnp.tril(jnp.ones((S, S))) - 1.0
-    o1 = o1 + ring.encode(mask * 1e4)
-    pi1 = permute.gen_perm(pm.ks(), S)
-    with comm.tag("softmax"):
-        o1p = protocols.pp_permute(o1, pi1, axis=-1)
-        if layer_idx == 0:
-            pm.expose("O1", ring.decode(reconstruct(o1p), dtype=P32))
-        o2p = nonlinear.pp_softmax(o1p, pm.ks())
-        vp = protocols.pp_permute(v, pi1, axis=-2)
-    with comm.tag("linear"):
-        o3 = beaver.matmul(o2p, vp, pm.dealer)     # (B,h,S,vd)
-    o3 = o3.transpose(0, 2, 1, 3).reshape(B, S, h * vd)
-    with comm.tag("linear"):
-        return _linear(pm, p["wo"], o3)
-
-
-def _act_fn(cfg):
-    if cfg.act == "silu":
-        return jax.nn.silu
-    if cfg.act == "relu2":
-        return lambda v: jnp.square(jax.nn.relu(v))
-    return lambda v: jax.nn.gelu(v, approximate=False)
-
-
-def _c_ffn(pm: PrivateModel, p, x: ShareTensor, layer_idx: int):
-    cfg = pm.cfg
-    if cfg.family == "moe":
-        return _c_moe(pm, p, x, layer_idx)
-    if cfg.ffn_type == "swiglu":
-        act = _act_fn(cfg)
-        with comm.tag("linear"):
-            gt = _linear(pm, p["w_gate"], x)
-            up = _linear(pm, p["w_up"], x)
-        with comm.tag("gelu"):
-            if layer_idx == 0:
-                pm.expose("O5", ring.decode(reconstruct(gt), dtype=P32))
-            hidden = _pp_apply2(pm, lambda a, b: act(a) * b,
-                                gt, up, "ppsilu")
-        with comm.tag("linear"):
-            return _linear(pm, p["w_down"], hidden)
-    with comm.tag("linear"):
-        o5 = _linear(pm, p["up"], x)
-    with comm.tag("gelu"):
-        if layer_idx == 0:
-            pm.expose("O5", ring.decode(reconstruct(o5), dtype=P32))
-        act = (nonlinear.pp_gelu if cfg.act == "gelu"
-               else nonlinear.pp_silu)(o5, pm.ks())
-    with comm.tag("linear"):
-        return _linear(pm, p["down"], act)
-
-
-def _c_moe(pm: PrivateModel, p, x: ShareTensor, layer_idx: int):
-    """Beyond-paper MoE: expert-permuted router reveal + dispatch of
-    *shares* by plaintext assignments; per-expert ScalMul FFNs.
-
-    Simulation computes all experts on all tokens (tiny test configs)
-    but bills communication for the dispatched tokens only."""
-    cfg = pm.cfg
-    B, S, d = x.shape
-    T = B * S
-    E, K = cfg.n_routed_experts, cfg.top_k
-    xf = x.reshape(T, d)
-    with comm.tag("linear"):
-        logits = protocols.scal_mul(p["router"]["w"], xf)
-    with comm.tag("softmax"):
-        gates, idx = nonlinear.pp_topk_router(logits, K)
-
-    f = cfg.moe_d_ff
-    with comm.muted():
-        # (E, T, f) gate/up for all tokens — simulation-only shortcut
-        def expert_out(e):
-            # stacked expert weights are (E, in, out): transpose for
-            # the (out, in) ScalMul convention
-            we_g = {"w": jnp.swapaxes(p["w_gate"][e], 0, 1), "b": None}
-            we_u = {"w": jnp.swapaxes(p["w_up"][e], 0, 1), "b": None}
-            we_d = {"w": jnp.swapaxes(p["w_down"][e], 0, 1), "b": None}
-            g_ = _linear(pm, we_g, xf)
-            u_ = _linear(pm, we_u, xf)
-            hidden = _pp_apply2(pm, lambda a, b: _act_fn(cfg)(a) * b,
-                                g_, u_, "ppsilu")
-            return _linear(pm, we_d, hidden)
-
-        outs = [expert_out(e) for e in range(E)]
-    # true cost: dispatched rows = T*K through one expert FFN each
-    comm.record("ppsilu", rounds=2,
-                bits=(3 * T * K * f) * comm.RING_BITS)
-
-    y0 = jnp.zeros((T, d), ring.RING_DTYPE)
-    y = ShareTensor(y0, y0)
-    for j in range(K):
-        gate_j = ring.encode(gates[:, j:j + 1])
-        sel = idx[:, j]
-        s0 = jnp.stack([o.s0 for o in outs])[sel, jnp.arange(T)]
-        s1 = jnp.stack([o.s1 for o in outs])[sel, jnp.arange(T)]
-        y = y + ShareTensor(s0, s1).mul_public(gate_j)
-    if cfg.n_shared_experts:
-        sh = p["shared"]
-        with comm.tag("linear"):
-            g_ = _linear(pm, sh["w_gate"], xf)
-            u_ = _linear(pm, sh["w_up"], xf)
-        with comm.tag("gelu"):
-            hidden = _pp_apply2(pm, lambda a, b: _act_fn(cfg)(a) * b,
-                                g_, u_, "ppsilu")
-        with comm.tag("linear"):
-            y = y + _linear(pm, sh["w_down"], hidden)
-    return y.reshape(B, S, d)
-
-
-def _c_norm(pm: PrivateModel, p_norm, x: ShareTensor, tag="layernorm",
-            expose_as=None):
-    cfg = pm.cfg
-    with comm.tag(tag):
-        if expose_as:
-            pm.expose(expose_as, ring.decode(reconstruct(x), dtype=P32))
-        if cfg.norm_type == "layernorm":
-            return nonlinear.pp_layernorm(x, p_norm["g"], p_norm["b"],
-                                          pm.ks(), eps=cfg.norm_eps)
-        return nonlinear.pp_rmsnorm(x, p_norm["g"], pm.ks(),
-                                    eps=cfg.norm_eps)
-
-
-def _c_mamba_block(pm: PrivateModel, p, x: ShareTensor, layer_idx: int):
-    """Pi_PPSSD: ScalMul in_proj -> reveal permuted zxbcdt -> P1 runs
-    conv+SiLU+SSD+gated-norm in plaintext (channel-permuted weights) ->
-    reshare -> ScalMul out_proj."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    with comm.tag("linear"):
-        zxbcdt = _linear(pm, p["in_proj"], x)
-
-    from repro.models import mamba2 as m2
-
-    def p1_block(v):
-        import repro.models.mamba2 as mm
-        z, xBC, dt_raw = mm._split_proj(cfg, v)
-        dt = jax.nn.softplus(dt_raw + p["dt_bias"])
-        xBC = jax.nn.silu(mm.causal_conv(p["conv_w"], p["conv_b"], xBC))
-        xs, Bv, Cv = mm._split_xbc(cfg, xBC)
-        H, Pd = cfg.ssm_nheads, cfg.ssm_headdim
-        xs = xs.reshape(B, S, H, Pd)
-        Bv = Bv.reshape(B, S, cfg.ssm_ngroups, cfg.ssm_state)
-        Cv = Cv.reshape(B, S, cfg.ssm_ngroups, cfg.ssm_state)
-        A = -jnp.exp(p["A_log"])
-        y = mm.ssd_chunked(xs, dt, A, Bv, Cv, min(cfg.ssm_chunk, S))
-        y = y + p["D"][None, None, :, None] * xs
-        y = y.reshape(B, S, cfg.d_inner)
-        y = y * jax.nn.silu(z)
-        from repro.models.layers import rmsnorm
-        return rmsnorm(p["gate_norm"], y, cfg.norm_eps)
-
-    with comm.tag("ssm"):
-        if layer_idx == 0:
-            pm.expose("SSD_in", ring.decode(reconstruct(zxbcdt), dtype=P32))
-        y = nonlinear.pp_block(p1_block, zxbcdt, pm.ks(), "ppssd")
-    with comm.tag("linear"):
-        return _linear(pm, p["out_proj"], y)
-
-
-# layer index >= 1 disables the i == 0 exposure hooks (the jitted and
-# serving paths pass this so no traced intermediate escapes into
-# pm.exposed)
-_NO_EXPOSE = 1
-
-
-def _c_block(pm: PrivateModel, p, x: ShareTensor, i: int, attn_fn):
-    """The transformer residual skeleton shared by the full forward,
-    prefill and slotted decode (pre/post-norm handling, exposure hooks
-    only for i == 0).  attn_fn(h) -> (attn_out, extra); `extra` carries
-    a KV cache for the serving paths, None for the plain forward."""
-    cfg = pm.cfg
-    h = _c_norm(pm, p["ln1"], x) if cfg.prenorm else x
-    attn, extra = attn_fn(h)
-    x = x + attn
-    if not cfg.prenorm:
-        x = _c_norm(pm, p["ln1"], x,
-                    expose_as="O4" if i == 0 else None)
-    elif i == 0:
-        pm.expose("O4", ring.decode(reconstruct(x), dtype=P32))
-    h = _c_norm(pm, p["ln2"], x) if cfg.prenorm else x
-    f = _c_ffn(pm, p["ffn"], h, i)
-    x = x + f
-    if not cfg.prenorm:
-        x = _c_norm(pm, p["ln2"], x,
-                    expose_as="O6" if i == 0 else None)
-    elif i == 0:
-        pm.expose("O6", ring.decode(reconstruct(x), dtype=P32))
-    return x, extra
-
-
-def _c_layer(pm: PrivateModel, p, x: ShareTensor, i: int) -> ShareTensor:
-    """One centaur transformer layer (dense/encoder/moe families)."""
-    attn = _c_mla_attention if pm.cfg.use_mla else _c_attention
-    out, _ = _c_block(pm, p, x, i,
-                      lambda h: (attn(pm, p["attn"], h, i), None))
-    return out
-
-
-def _c_head(pm: PrivateModel, x: ShareTensor):
-    """Adaptation layer + de-permutation (shared by eager/jit paths)."""
-    cfg = pm.cfg
-    with comm.tag("adaptation"):
-        if cfg.family == "encoder":
-            pooled = protocols.linear(pm.wp["pooler"]["w"],
-                                      pm.wp["pooler"]["b"], x[:, 0, :])
-            t = nonlinear.pp_tanh(pooled, pm.ks())
-            out = protocols.linear(pm.wp["classifier"]["w"],
-                                   pm.wp["classifier"]["b"], t)
-            return ring.decode(reconstruct(out), dtype=P32)
-        x = _c_norm(pm, pm.wp["final_norm"], x, tag="adaptation")
-        logits_p = protocols.linear(pm.wp["head"]["w"], None, x)
-    yv = ring.decode(reconstruct(logits_p), dtype=P32)
-    return permute.apply_inv_perm(yv, pm.perms["v"], -1)
-
-
-# =============================================================================
-# forward passes
-# =============================================================================
-
-def _c_embed(pm: PrivateModel, x_shared_onehot: ShareTensor,
-             positions=None):
-    """Pi_PPEmbedding: one-hot ScalMul + (BERT) Pi_PPLN."""
-    cfg = pm.cfg
-    with comm.tag("embedding"):
-        x = protocols.scal_mul(jnp.swapaxes(pm.wp["embed"]["tok"], 0, 1),
-                               x_shared_onehot, rescale=False)
-        if "pos" in pm.wp["embed"] and positions is not None:
-            pos_emb = jnp.take(pm.wp["embed"]["pos"], positions, axis=0)
-            x = x + pos_emb
-        if "embed_norm" in pm.wp:
-            x = _c_norm(pm, pm.wp["embed_norm"], x, tag="embedding")
-    return x
-
-
-def encrypt_tokens(pm: PrivateModel, tokens):
-    """Client side: one-hot (raw ring ints, no scale) and share."""
-    onehot = jax.nn.one_hot(tokens, pm.cfg.vocab_size,
-                            dtype=ring.RING_DTYPE)
-    return share(pm.ks(), onehot)
+def private_forward(pm: PrivateModel, tokens, jit: bool = False):
+    """Full private forward in pm.mode; returns plaintext logits after
+    the client reconstructs the output (class logits for BERT)."""
+    return _exec.model_forward(pm, tokens, jit=jit)
 
 
 def centaur_forward(pm: PrivateModel, tokens):
-    """Full private forward; returns plaintext logits after the client
-    reconstructs [Y pi_v] and removes pi_v (or class logits for BERT)."""
-    cfg = pm.cfg
-    B, S = tokens.shape
-    xoh = encrypt_tokens(pm, tokens)
-    positions = jnp.arange(S)
-    x = _c_embed(pm, xoh, positions)
-    # first permuted-state reveal P1 observes (embedding output)
-    pm.expose("XM", ring.decode(reconstruct(x), dtype=P32))
-
-    for i in range(cfg.num_layers):
-        p = pm.wp["layers"][i]
-        if cfg.family == "hybrid":
-            # shared attention block every attn_every mamba layers
-            if i % cfg.attn_every == 0 and \
-                    i < (cfg.num_layers // cfg.attn_every) \
-                    * cfg.attn_every:
-                shp = pm.wp["shared"]
-                h = _c_norm(pm, shp["ln1"], x)
-                x = x + _c_attention(pm, shp["attn"], h, i)
-                h = _c_norm(pm, shp["ln2"], x)
-                x = x + _c_ffn(pm, shp["ffn"], h, i)
-            h = _c_norm(pm, p["ln1"], x)
-            x = x + _c_mamba_block(pm, p["mamba"], h, i)
-            continue
-        if cfg.family == "ssm":
-            h = _c_norm(pm, p["ln1"], x)
-            x = x + _c_mamba_block(pm, p["mamba"], h, i)
-            continue
-        x = _c_layer(pm, p, x, i)
-
-    return _c_head(pm, x)
-
-
-# =============================================================================
-# smpc / mpcformer baseline forward (weights shared; PUMA-like protocols)
-# =============================================================================
-
-def _s_linear(pm, w_sh: ShareTensor, b_sh, x: ShareTensor):
-    wt = ShareTensor(jnp.swapaxes(w_sh.s0, -1, -2),
-                     jnp.swapaxes(w_sh.s1, -1, -2))
-    y = beaver.matmul(x, wt, pm.dealer)
-    if b_sh is not None:
-        y = y + b_sh
-    return y
-
-
-def _s_norm(pm, p_norm, x: ShareTensor):
-    cfg = pm.cfg
-    with comm.tag("layernorm"):
-        if cfg.norm_type == "layernorm":
-            return smpc_nl.smpc_layernorm(x, p_norm["g"], p_norm["b"],
-                                          pm.dealer, eps=cfg.norm_eps)
-        # RMSNorm: reuse LN machinery without mean subtraction
-        sq = beaver.square(x, pm.dealer)
-        ms = ShareTensor(jnp.sum(sq.s0, -1, keepdims=True),
-                         jnp.sum(sq.s1, -1, keepdims=True)).mul_public(
-                             ring.encode(1.0 / x.shape[-1])) \
-            + ring.encode(cfg.norm_eps)
-        inv = smpc_nl.smpc_inv_sqrt(ms, pm.dealer)
-        invb = ShareTensor(jnp.broadcast_to(inv.s0, x.shape),
-                           jnp.broadcast_to(inv.s1, x.shape))
-        y = beaver.mul(x, invb, pm.dealer)
-        gb = ShareTensor(jnp.broadcast_to(p_norm["g"].s0, x.shape),
-                         jnp.broadcast_to(p_norm["g"].s1, x.shape))
-        return beaver.mul(y, gb, pm.dealer)
-
-
-def _s_softmax(pm, x: ShareTensor):
-    with comm.tag("softmax"):
-        if pm.mode in ("mpcformer", "secformer"):
-            return smpc_nl.quad_softmax(x, pm.dealer)
-        return smpc_nl.smpc_softmax(x, pm.dealer)
-
-
-def _s_act(pm, x: ShareTensor):
-    with comm.tag("gelu"):
-        if pm.mode == "mpcformer":
-            return smpc_nl.quad_gelu(x, pm.dealer)
-        return smpc_nl.smpc_gelu(x, pm.dealer)
-
-
-def _s_layer(pm: PrivateModel, p, x: ShareTensor) -> ShareTensor:
-    """One smpc-baseline transformer layer (shared weights)."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    h, dh = cfg.num_heads, cfg.dh
-    a = p["attn"]
-    hin = _s_norm(pm, p["ln1"], x) if cfg.prenorm else x
-    with comm.tag("linear"):
-        q = _s_linear(pm, a["wq"], None, hin).reshape(B, S, h, dh)
-        k = _s_linear(pm, a["wk"], None, hin).reshape(B, S, h, dh)
-        v = _s_linear(pm, a["wv"], None, hin).reshape(B, S, h, dh)
-    q = q.transpose(0, 2, 1, 3)
-    kt = ShareTensor(k.s0.transpose(0, 2, 3, 1), k.s1.transpose(0, 2, 3, 1))
-    with comm.tag("linear"):
-        o1 = beaver.matmul(q, kt, pm.dealer).mul_public(
-            ring.encode(dh ** -0.5))
-    if cfg.causal:
-        mask = jnp.tril(jnp.ones((S, S))) - 1.0
-        o1 = o1 + ring.encode(mask * 1e4)
-    o2 = _s_softmax(pm, o1)
-    vt = ShareTensor(v.s0.transpose(0, 2, 1, 3), v.s1.transpose(0, 2, 1, 3))
-    with comm.tag("linear"):
-        o3 = beaver.matmul(o2, vt, pm.dealer)
-    o3 = o3.transpose(0, 2, 1, 3).reshape(B, S, h * dh)
-    with comm.tag("linear"):
-        attn_out = _s_linear(pm, a["wo"], None, o3)
-    x = x + attn_out
-    if not cfg.prenorm:
-        x = _s_norm(pm, p["ln1"], x)
-    hin = _s_norm(pm, p["ln2"], x) if cfg.prenorm else x
-    f = p["ffn"]
-    with comm.tag("linear"):
-        o5 = _s_linear(pm, f["w_up"], f["b_up"], hin)
-    g = _s_act(pm, o5)
-    with comm.tag("linear"):
-        o6 = _s_linear(pm, f["w_down"], f["b_down"], g)
-    x = x + o6
-    if not cfg.prenorm:
-        x = _s_norm(pm, p["ln2"], x)
-    return x
-
-
-def _s_head(pm: PrivateModel, x: ShareTensor):
-    cfg = pm.cfg
-    with comm.tag("adaptation"):
-        if cfg.family == "encoder":
-            pooled = _s_linear(pm, pm.wp["pooler"]["w"],
-                               pm.wp["pooler"]["b"], x[:, 0, :])
-            t = smpc_nl.smpc_tanh(pooled, pm.dealer)
-            out = _s_linear(pm, pm.wp["classifier"]["w"],
-                            pm.wp["classifier"]["b"], t)
-            return ring.decode(reconstruct(out), dtype=P32)
-        x = _s_norm(pm, pm.wp["final_norm"], x)
-        head_w = (pm.wp["embed"]["tok"] if cfg.tie_embeddings
-                  else pm.wp["head"]["w"])
-        logits = beaver.matmul(x, ShareTensor(
-            jnp.swapaxes(head_w.s0, 0, 1), jnp.swapaxes(head_w.s1, 0, 1)),
-            pm.dealer)
-    return ring.decode(reconstruct(logits), dtype=P32)
-
-
-def _s_embed(pm: PrivateModel, tokens) -> ShareTensor:
-    cfg = pm.cfg
-    _, S = tokens.shape
-    onehot = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=ring.RING_DTYPE)
-    x_oh = share(pm.ks(), onehot)
-    with comm.tag("embedding"):
-        emb_t = pm.wp["embed"]["tok"]
-        y = beaver.matmul(x_oh, emb_t, pm.dealer, rescale=False)
-        if "pos" in pm.wp["embed"]:
-            pos = pm.wp["embed"]["pos"]
-            y = y + ShareTensor(pos.s0[:S][None], pos.s1[:S][None])
-        if "embed_norm" in pm.wp:
-            y = _s_norm(pm, pm.wp["embed_norm"], y)
-    return y
-
-
-def smpc_forward(pm: PrivateModel, tokens):
-    """PUMA/MPCFormer-style baseline (encoder/dense MLP families)."""
-    cfg = pm.cfg
-    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp", \
-        "smpc baseline implemented for the paper's BERT/GPT-2 shapes"
-    x = _s_embed(pm, tokens)
-    for i in range(cfg.num_layers):
-        p = jax.tree.map(lambda a: a[i], pm.wp["layers"])
-        x = _s_layer(pm, p, x)
-    return _s_head(pm, x)
-
-
-# =============================================================================
-# permute-only baseline (Yuan et al. STI): plaintext compute, O1 exposed
-# =============================================================================
-
-def permute_forward(pm: PrivateModel, tokens):
-    cfg = pm.cfg
-    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp"
-    B, S = tokens.shape
-    h, dh = cfg.num_heads, cfg.dh
-    dec = lambda t: ring.decode(t, dtype=P32)  # noqa: E731
-    wp = pm.wp
-    x = jnp.take(dec(wp["embed"]["tok"]), tokens, axis=0)
-    if "pos" in wp["embed"]:
-        x = x + dec(wp["embed"]["pos"])[:S][None]
-
-    def ln(p_norm, v):
-        mu = v.mean(-1, keepdims=True) if cfg.norm_type == "layernorm" \
-            else 0.0
-        var = ((v - mu) ** 2).mean(-1, keepdims=True)
-        y = (v - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
-        return p_norm["g"] * y + p_norm.get("b", 0.0)
-
-    pm.expose("XM", x)
-    if "embed_norm" in wp:
-        x = ln(wp["embed_norm"], x)
-
-    for i in range(cfg.num_layers):
-        p = wp["layers"][i]
-        hin = ln(p["ln1"], x) if cfg.prenorm else x
-        q = (hin @ dec(p["attn"]["wq"]["w"]).T).reshape(B, S, h, dh)
-        k = (hin @ dec(p["attn"]["wk"]["w"]).T).reshape(B, S, h, dh)
-        v = (hin @ dec(p["attn"]["wv"]["w"]).T).reshape(B, S, h, dh)
-        o1 = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(
-            jnp.asarray(dh, P32))
-        if cfg.causal:
-            mask = jnp.tril(jnp.ones((S, S), bool))
-            o1 = jnp.where(mask[None, None], o1, -1e4)
-        if i == 0:
-            # THE leak: pi cancels in QK^T (paper §3 Motivation 2)
-            pm.expose("O1", o1)
-        o2 = jax.nn.softmax(o1, -1)
-        if i == 0:
-            pm.expose("O2", o2)
-        o3 = jnp.einsum("bhst,bthd->bshd", o2, v).reshape(B, S, h * dh)
-        x = x + o3 @ dec(p["attn"]["wo"]["w"]).T
-        if not cfg.prenorm:
-            x = ln(p["ln1"], x)
-        if i == 0:
-            pm.expose("O4", x)
-        hin = ln(p["ln2"], x) if cfg.prenorm else x
-        o5 = hin @ dec(p["ffn"]["up"]["w"]).T + dec(p["ffn"]["up"]["b"])
-        if i == 0:
-            pm.expose("O5", o5)
-        g = jax.nn.gelu(o5, approximate=False)
-        x = x + g @ dec(p["ffn"]["down"]["w"]).T + dec(p["ffn"]["down"]["b"])
-        if not cfg.prenorm:
-            x = ln(p["ln2"], x)
-        if i == 0:
-            pm.expose("O6", x)
-
-    if cfg.family == "encoder":
-        pooled = jnp.tanh(x[:, 0, :] @ dec(wp["pooler"]["w"]).T
-                          + dec(wp["pooler"]["b"]))
-        return pooled @ dec(wp["classifier"]["w"]).T \
-            + dec(wp["classifier"]["b"])
-    x = ln(wp["final_norm"], x)
-    logits = x @ dec(wp["head"]["w"]).T
-    return permute.apply_inv_perm(logits, pm.perms["v"], -1)
-
-
-# =============================================================================
-# jitted per-layer forward (hot path: fused online phase + triple pool +
-# static comm schedule — see DESIGN.md §6)
-# =============================================================================
-
-@dataclass
-class _JitLayer:
-    fn: Any           # jitted (p, x, key, triples) -> x'
-    specs: list       # per-layer triple demand, in request order
-    events: list      # captured per-layer comm schedule (CommEvents)
-
-
-def _shadow(pm: PrivateModel, key, dealer) -> PrivateModel:
-    """pm clone with a traced key stream/dealer and inert exposure."""
-    return PrivateModel(pm.cfg, pm.mode, pm.perms, pm.wp,
-                        KeyStream(key), dealer)
-
-
-def _build_jit_layer(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
-    """Compile one layer into a jitted function plus its static cost
-    schedule and triple demand.
-
-    1. An abstract trace (jax.eval_shape — zero FLOPs) under a
-       `comm.capture()` discovers the layer's exact (rounds, bits)
-       schedule and, via a RecordingDealer, the ordered multiset of
-       Beaver triples it consumes.
-    2. The online function is jitted with triples as *inputs* (a
-       ReplayDealer hands them out in recorded order), so the offline
-       phase runs ahead of time through the vectorized TriplePool and
-       the jitted online program contains no dealer work.
-    3. `comm.record` is Python-side and would fire once at trace time
-       only; the traced body runs muted and the captured schedule is
-       `comm.replay`ed per call instead, keeping the ledger exact.
-    """
-    key = pm.ks()
-
-    recorders = []
-
-    def record_run(p_, x_, key_):
-        kd, ku = jax.random.split(key_)
-        rec = beaver.RecordingDealer(kd)
-        recorders.append(rec)
-        return body(_shadow(pm, ku, rec), p_, x_)
-
-    with comm.capture() as sched:
-        jax.eval_shape(record_run, p, x, key)
-    specs = recorders[-1].specs
-
-    def online_run(p_, x_, key_, triples):
-        _, ku = jax.random.split(key_)
-        with comm.muted():
-            return body(_shadow(pm, ku, beaver.ReplayDealer(triples)),
-                        p_, x_)
-
-    return _JitLayer(jax.jit(online_run), specs, list(sched.events))
-
-
-def _jit_layer_for(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
-    # x may be any pytree of arrays/ShareTensors (the slotted decode
-    # threads (x, k_cache, v_cache, pos) through one body)
-    cache_key = (name, jax.tree.structure((p, x)),
-                 tuple(jnp.shape(le) for le in jax.tree.leaves((p, x))))
-    if cache_key not in pm.jit_cache:
-        pm.jit_cache[cache_key] = _build_jit_layer(pm, name, body, p, x)
-    return pm.jit_cache[cache_key]
-
-
-def _run_jit_layers(pm: PrivateModel, layer_ps, body, name: str,
-                    x: ShareTensor) -> ShareTensor:
-    """Offline: prefetch every layer's triples in one vectorized batch
-    per spec.  Online: run the jitted layer per depth, replaying the
-    captured schedule (online events; offline was billed by the pool)."""
-    jl = _jit_layer_for(pm, name, body, layer_ps[0], x)
-    pool = pm.triple_pool()
-    pool.prefetch(jl.specs * len(layer_ps))
-    for p in layer_ps:
-        triples = [pool.take(s) for s in jl.specs]
-        comm.replay(jl.events, online_only=True)
-        x = jl.fn(p, x, pm.ks(), triples)
-    return x
-
-
-def _jittable(pm: PrivateModel) -> bool:
-    cfg = pm.cfg
-    if pm.mode == "centaur":
-        return cfg.family in ("dense", "encoder")
-    if pm.mode in ("smpc", "mpcformer", "secformer"):
-        return cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp"
-    return False
+    assert pm.mode == "centaur", pm.mode
+    return _exec.model_forward(pm, tokens)
 
 
 def centaur_forward_jit(pm: PrivateModel, tokens):
-    """Jit-compiled per-layer centaur forward.  Embedding and head run
-    eagerly (they bill normally); the layer stack runs as one compiled
-    program per depth with pool-fed triples.  Unlike the eager path it
-    does not populate pm.exposed (no intermediates leave the trace)."""
-    _, S = tokens.shape
-    xoh = encrypt_tokens(pm, tokens)
-    x = _c_embed(pm, xoh, jnp.arange(S))
-    x = _run_jit_layers(pm, pm.wp["layers"],
-                        lambda sh, p, xin: _c_layer(sh, p, xin, _NO_EXPOSE),
-                        "centaur_layer", x)
-    return _c_head(pm, x)
+    assert pm.mode == "centaur", pm.mode
+    return _exec.model_forward(pm, tokens, jit=True)
+
+
+def smpc_forward(pm: PrivateModel, tokens):
+    """PUMA/MPCFormer-style baseline (encoder/dense families)."""
+    return _exec.model_forward(pm, tokens)
 
 
 def smpc_forward_jit(pm: PrivateModel, tokens):
-    """Jit-compiled per-layer smpc/mpcformer baseline forward."""
-    cfg = pm.cfg
-    assert cfg.family in ("encoder", "dense") and cfg.ffn_type == "mlp", \
-        "smpc baseline implemented for the paper's BERT/GPT-2 shapes"
-    x = _s_embed(pm, tokens)
-    layer_ps = [jax.tree.map(lambda a: a[i], pm.wp["layers"])
-                for i in range(cfg.num_layers)]
-    x = _run_jit_layers(pm, layer_ps, _s_layer, "smpc_layer", x)
-    return _s_head(pm, x)
+    return _exec.model_forward(pm, tokens, jit=True)
 
 
-def private_forward(pm: PrivateModel, tokens, jit: bool = False):
-    if jit and _jittable(pm):
-        if pm.mode == "centaur":
-            return centaur_forward_jit(pm, tokens)
-        return smpc_forward_jit(pm, tokens)
-    if pm.mode == "centaur":
-        return centaur_forward(pm, tokens)
-    if pm.mode in ("smpc", "mpcformer", "secformer"):
-        return smpc_forward(pm, tokens)
-    if pm.mode == "permute":
-        return permute_forward(pm, tokens)
-    raise ValueError(pm.mode)
+def permute_forward(pm: PrivateModel, tokens):
+    assert pm.mode == "permute", pm.mode
+    return _exec.model_forward(pm, tokens)
 
 
 # =============================================================================
-# private serving: slot-stacked padded KV-cache decode (centaur mode,
-# dense family) — the continuous-batching hot path.  DESIGN.md §7.
+# private serving: slot-stacked padded KV-cache prefill/decode, any
+# servable suite (DESIGN.md §7).  The centaur_* names are kept from the
+# pre-suite API; they serve whatever mode pm was built with.
 # =============================================================================
 
-def init_slot_caches(pm: PrivateModel, n_slots: int, max_len: int):
-    """Zeroed slot-stacked share KV caches: per layer {"k","v"} of shape
-    (n_slots, max_len, hk, dh).  Zero shares reconstruct to zero, and
-    the additive validity mask keeps unwritten rows at exactly zero
-    softmax mass, so slots can be filled/evicted independently."""
-    cfg = pm.cfg
-    z = jnp.zeros((n_slots, max_len, cfg.num_kv_heads, cfg.dh),
-                  ring.RING_DTYPE)
-    return [{"k": ShareTensor(z, z), "v": ShareTensor(z, z)}
-            for _ in range(cfg.num_layers)]
-
-
-def _slot_write(cache: ShareTensor, new: ShareTensor, pos):
-    """Write new K/V rows (B,S,hk,dh) into the padded cache (B,L,hk,dh)
-    at per-slot offsets pos (B,) — applied to each share separately."""
-    def upd(c, nw):
-        return jax.vmap(lambda cb, nb, pb:
-                        jax.lax.dynamic_update_slice_in_dim(cb, nb, pb,
-                                                            axis=0)
-                        )(c, nw, pos)
-    return ShareTensor(upd(cache.s0, new.s0), upd(cache.s1, new.s1))
-
-
-def _pad_cache_to(c: ShareTensor, max_len: int) -> ShareTensor:
-    pad = [(0, 0)] * c.ndim
-    pad[1] = (0, max_len - c.shape[1])
-    return ShareTensor(jnp.pad(c.s0, pad), jnp.pad(c.s1, pad))
-
-
-def _c_attention_prefill(pm: PrivateModel, p, x: ShareTensor):
-    """Prefill attention: the paper's Pi_MatMul -> Pi_PPP -> Pi_PPSM flow
-    over the prompt; K/V shares are returned so the caller can splice
-    them into a padded slot cache (appending shares is free)."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
-    with comm.tag("linear"):
-        q = _linear(pm, p["wq"], x).reshape(B, S, hk, g, dh)
-        k = _linear(pm, p["wk"], x).reshape(B, S, hk, dh)
-        v = _linear(pm, p["wv"], x).reshape(B, S, hk, dh)
-    if cfg.pos_embed == "rope":
-        from repro.models.layers import rope_freqs
-        posv = jnp.arange(S)[None, :].repeat(B, 0)
-        cos, sin = rope_freqs(cfg, posv, dh)
-        q = rope_on_shares(q.reshape(B, S, hk * g, dh), cos, sin
-                           ).reshape(B, S, hk, g, dh)
-        k = rope_on_shares(k, cos, sin)
-    new_cache = {"k": k, "v": v}
-
-    qh = q.transpose(0, 2, 3, 1, 4)                   # (B,hk,g,S,dh)
-    kt = ShareTensor(k.s0.transpose(0, 2, 3, 1), k.s1.transpose(0, 2, 3, 1))
-    kt = ShareTensor(jnp.broadcast_to(kt.s0[:, :, None],
-                                      (B, hk, g, dh, S)),
-                     jnp.broadcast_to(kt.s1[:, :, None],
-                                      (B, hk, g, dh, S)))
-    with comm.tag("linear"):
-        o1 = beaver.matmul(qh, kt, pm.dealer)
-    o1 = o1.mul_public(ring.encode(dh ** -0.5))
-    mask = (jnp.arange(S)[None, :]
-            <= jnp.arange(S)[:, None]).astype(jnp.float64)
-    o1 = o1 + ring.encode((mask - 1.0) * 1e4)
-    pi1 = permute.gen_perm(pm.ks(), S)
-    with comm.tag("softmax"):
-        o1p = protocols.pp_permute(o1, pi1, axis=-1)
-        o2p = nonlinear.pp_softmax(o1p, pm.ks())
-        vp = protocols.pp_permute(
-            ShareTensor(v.s0.transpose(0, 2, 1, 3),
-                        v.s1.transpose(0, 2, 1, 3)), pi1, axis=-2)
-    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None], (B, hk, g, S, dh)),
-                     jnp.broadcast_to(vp.s1[:, :, None], (B, hk, g, S, dh)))
-    with comm.tag("linear"):
-        o3 = beaver.matmul(o2p, vp, pm.dealer)
-    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
-    with comm.tag("linear"):
-        return _linear(pm, p["wo"], o3), new_cache
-
-
-def _c_attention_slotted(pm: PrivateModel, p, x: ShareTensor,
-                         cache: dict, pos):
-    """Batched single-token private attention against padded slot caches.
-
-    x: (B,1,d) shares for B independent slots; cache {"k","v"}: padded
-    (B,L,hk,dh) share tensors; pos (B,): the row the new K/V shares land
-    in (== the token's absolute position).  Queries attend to the whole
-    padded axis with an additive validity mask applied *on shares*
-    (columns t > pos[b] get -1e4 before the softmax reveal): unwritten
-    rows hold zero shares, so their revealed scores are exactly -1e4
-    relative to any live score and exp underflows to exact float32 zero
-    — the batched softmax is the sequential softmax plus zero-mass
-    entries.  P1's reveal shows only *which* permuted columns are dead,
-    i.e. the slot's occupancy count, which the sequential protocol
-    reveals anyway through its growing shapes."""
-    cfg = pm.cfg
-    B, S, _ = x.shape
-    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
-    with comm.tag("linear"):
-        q = _linear(pm, p["wq"], x).reshape(B, S, hk, g, dh)
-        k = _linear(pm, p["wk"], x).reshape(B, S, hk, dh)
-        v = _linear(pm, p["wv"], x).reshape(B, S, hk, dh)
-    q_pos = pos[:, None] + jnp.arange(S)[None, :]     # (B,S)
-    if cfg.pos_embed == "rope":
-        from repro.models.layers import rope_freqs
-        cos, sin = rope_freqs(cfg, q_pos, dh)
-        q = rope_on_shares(q.reshape(B, S, hk * g, dh), cos, sin
-                           ).reshape(B, S, hk, g, dh)
-        k = rope_on_shares(k, cos, sin)
-    k_cache = _slot_write(cache["k"], k, pos)
-    v_cache = _slot_write(cache["v"], v, pos)
-    new_cache = {"k": k_cache, "v": v_cache}
-    L = k_cache.shape[1]
-
-    qh = q.transpose(0, 2, 3, 1, 4)                   # (B,hk,g,S,dh)
-    kt = ShareTensor(k_cache.s0.transpose(0, 2, 3, 1),
-                     k_cache.s1.transpose(0, 2, 3, 1))
-    kt = ShareTensor(jnp.broadcast_to(kt.s0[:, :, None],
-                                      (B, hk, g, dh, L)),
-                     jnp.broadcast_to(kt.s1[:, :, None],
-                                      (B, hk, g, dh, L)))
-    with comm.tag("linear"):
-        o1 = beaver.matmul(qh, kt, pm.dealer)         # (B,hk,g,S,L)
-    o1 = o1.mul_public(ring.encode(dh ** -0.5))
-    mask = (jnp.arange(L)[None, None, :]
-            <= q_pos[:, :, None]).astype(jnp.float64)  # (B,S,L)
-    o1 = o1 + ring.encode((mask - 1.0) * 1e4)[:, None, None]
-    # one INDEPENDENT fresh pi1 per slot: a shared permutation would
-    # let P1 align revealed score columns across tenants' requests
-    pi1 = jax.vmap(lambda k: permute.gen_perm(k, L))(
-        jax.random.split(pm.ks(), B))                  # (B,L)
-    with comm.tag("softmax"):
-        o1p = protocols.pp_permute_batched(o1, pi1, axis=-1)
-        o2p = nonlinear.pp_softmax(o1p, pm.ks())
-        vp = protocols.pp_permute_batched(
-            ShareTensor(v_cache.s0.transpose(0, 2, 1, 3),
-                        v_cache.s1.transpose(0, 2, 1, 3)), pi1, axis=-2)
-    vp = ShareTensor(jnp.broadcast_to(vp.s0[:, :, None], (B, hk, g, L, dh)),
-                     jnp.broadcast_to(vp.s1[:, :, None], (B, hk, g, L, dh)))
-    with comm.tag("linear"):
-        o3 = beaver.matmul(o2p, vp, pm.dealer)        # (B,hk,g,S,dh)
-    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
-    with comm.tag("linear"):
-        return _linear(pm, p["wo"], o3), new_cache
-
-
-def _c_slot_layer(pm: PrivateModel, p, x: ShareTensor, cache: dict, pos):
-    """One centaur transformer layer over a slot batch (serving hot
-    path, also traced into the jitted tick: never exposes)."""
-    return _c_block(pm, p, x, _NO_EXPOSE,
-                    lambda h: _c_attention_slotted(pm, p["attn"], h,
-                                                   cache, pos))
-
-
-def _centaur_logits(pm: PrivateModel, x_last: ShareTensor):
-    with comm.tag("adaptation"):
-        if pm.cfg.prenorm:
-            x_last = _c_norm(pm, pm.wp["final_norm"], x_last,
-                             tag="adaptation")
-        logits_p = protocols.linear(pm.wp["head"]["w"], None, x_last)
-    yv = ring.decode(reconstruct(logits_p), dtype=P32)
-    return permute.apply_inv_perm(yv, pm.perms["v"], -1)
-
-
-def _c_prefill_layer(pm: PrivateModel, p, x: ShareTensor):
-    """One centaur transformer layer at prompt length, returning the
-    K/V shares for the slot cache (serving hot path: never exposes)."""
-    return _c_block(pm, p, x, _NO_EXPOSE,
-                    lambda h: _c_attention_prefill(pm, p["attn"], h))
-
-
-def centaur_prefill(pm: PrivateModel, tokens, max_len: int | None = None,
+def private_prefill(pm: PrivateModel, tokens, max_len: int | None = None,
                     jit: bool = False):
-    """Private prefill: returns (last-token logits, per-layer K/V share
-    caches padded to `max_len`), ready for `centaur_decode_step` or to
-    be spliced into a slot of a stacked serving cache.  Attention runs
-    at prompt length (comm ∝ S^2, as the sequential protocol bills);
-    only the returned cache is padded — padding shares are zeros.
-    jit=True compiles the layer stack per (B, S) like the decode path."""
-    assert pm.cfg.family == "dense" and not pm.cfg.use_mla
-    cfg = pm.cfg
-    B, S = tokens.shape
-    if max_len is None:
-        max_len = S + 1
-    assert max_len >= S, (max_len, S)
-    if jit:
-        def body(sh, p, tok):
-            xoh = encrypt_tokens(sh, tok)
-            x = _c_embed(sh, xoh, jnp.arange(S))
-            ks_, vs_ = [], []
-            for i in range(cfg.num_layers):
-                x, nc = _c_prefill_layer(sh, p[i], x)
-                ks_.append(_pad_cache_to(nc["k"], max_len))
-                vs_.append(_pad_cache_to(nc["v"], max_len))
-            return _centaur_logits(sh, x[:, -1:, :]), ks_, vs_
-
-        # max_len shapes the padded outputs but not the traced inputs,
-        # so it must be part of the program cache key
-        jl = _jit_layer_for(pm, f"centaur_prefill:{max_len}", body,
-                            pm.wp["layers"], tokens)
-        pool = pm.triple_pool()
-        pool.prefetch(jl.specs)
-        triples = [pool.take(s) for s in jl.specs]
-        comm.replay(jl.events, online_only=True)
-        logits, ks_, vs_ = jl.fn(pm.wp["layers"], tokens, pm.ks(),
-                                 triples)
-        return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
-
-    xoh = encrypt_tokens(pm, tokens)
-    x = _c_embed(pm, xoh, jnp.arange(S))
-    caches = []
-    for i in range(cfg.num_layers):
-        x, nc = _c_prefill_layer(pm, pm.wp["layers"][i], x)
-        caches.append({"k": _pad_cache_to(nc["k"], max_len),
-                       "v": _pad_cache_to(nc["v"], max_len)})
-    return _centaur_logits(pm, x[:, -1:, :]), caches
+    return _exec.prefill(pm, tokens, max_len=max_len, jit=jit)
 
 
-def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,
-                         lookahead: int = 4):
-    """ONE jitted batched decode step: embedding, the whole layer
-    stack against the slot caches, and the adaptation head compile
-    into a single program per (batch, max_len) shape — a tick is one
-    dispatch plus pool takes.  The shapes are padding-static, so one
-    eval_shape trace under comm.capture() prices every future tick
-    (replayed per tick, ledger bit-exact vs eager), and the triple
-    demand is the same multiset every tick: TriplePool.reserve keeps
-    `lookahead` ticks in stock with one constant-size vectorized
-    generator per spec (DESIGN.md §7)."""
-    nl = pm.cfg.num_layers
-
-    def body(sh, p, state):
-        tok, ps, cks, cvs = state
-        xoh = encrypt_tokens(sh, tok)
-        x = _c_embed(sh, xoh, ps[:, None])
-        ks_, vs_ = [], []
-        for i in range(nl):
-            x, nc = _c_slot_layer(sh, p[i], x,
-                                  {"k": cks[i], "v": cvs[i]}, ps)
-            ks_.append(nc["k"])
-            vs_.append(nc["v"])
-        return _centaur_logits(sh, x), ks_, vs_
-
-    state0 = (token, pos, [c["k"] for c in caches],
-              [c["v"] for c in caches])
-    jl = _jit_layer_for(pm, "centaur_decode_tick", body,
-                        pm.wp["layers"], state0)
-    pool = pm.triple_pool()
-    pool.reserve(jl.specs, steps=lookahead)
-    triples = [pool.take(s) for s in jl.specs]
-    comm.replay(jl.events, online_only=True)
-    logits, ks_, vs_ = jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
-    return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
-
-
-def centaur_decode_step(pm: PrivateModel, caches, token, pos,
+def private_decode_step(pm: PrivateModel, caches, token, pos,
                         jit: bool = False, lookahead: int = 4):
-    """One batched private decode step: token (B,1) next-token ids for B
-    independent slots, pos int or (B,) per-slot absolute positions,
-    caches as returned by centaur_prefill / init_slot_caches (padded,
-    slot-stacked).  Returns (logits (B,1,V), updated caches)."""
-    B, S = token.shape
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-    L = int(caches[0]["k"].shape[1])
-    # dynamic_update_slice would silently clamp an out-of-range write
-    # onto the previous token's K/V row — fail loudly instead
-    assert int(jnp.max(pos)) + S <= L, \
-        f"decode past padded cache: pos={pos}, S={S}, max_len={L}"
-    if jit:
-        return _run_jit_decode_step(pm, caches, token, pos,
-                                    lookahead=lookahead)
-    xoh = encrypt_tokens(pm, token)
-    x = _c_embed(pm, xoh, pos[:, None])
-    new_caches = []
-    for i in range(pm.cfg.num_layers):
-        x, nc = _c_slot_layer(pm, pm.wp["layers"][i], x, caches[i], pos)
-        new_caches.append(nc)
-    return _centaur_logits(pm, x), new_caches
+    return _exec.decode_step(pm, caches, token, pos, jit=jit,
+                             lookahead=lookahead)
+
+
+centaur_prefill = private_prefill
+centaur_decode_step = private_decode_step
 
 
 # =============================================================================
@@ -1409,48 +156,51 @@ def prepare_whisper_private(cfg, params, key):
              "v": permute.gen_perm(ks(), cfg.vocab_size)}
     h, dh = cfg.num_heads, cfg.dh
     iq = jnp.arange(h * dh)
+    enc_linear, norm_perm = _centaur.enc_linear, _centaur.norm_perm
 
     def attn(a):
-        return {"wq": _enc_linear(a["wq"], None, pd, iq),
-                "wk": _enc_linear(a["wk"], None, pd, iq),
-                "wv": _enc_linear(a["wv"], None, pd, iq),
-                "wo": _enc_linear(a["wo"], None, iq, pd)}
+        return {"wq": enc_linear(a["wq"], None, pd, iq),
+                "wk": enc_linear(a["wk"], None, pd, iq),
+                "wv": enc_linear(a["wv"], None, pd, iq),
+                "wo": enc_linear(a["wo"], None, iq, pd)}
 
     def mlp(f):
-        return {"up": _enc_linear(f["w_up"], f["b_up"], pd, pf),
-                "down": _enc_linear(f["w_down"], f["b_down"], pf, pd)}
+        return {"up": enc_linear(f["w_up"], f["b_up"], pd, pf),
+                "down": enc_linear(f["w_down"], f["b_down"], pf, pd)}
 
     wp = {"enc_layers": [], "dec_layers": []}
     for i in range(cfg.encoder_layers):
         p_l = jax.tree.map(lambda a: a[i], params["enc_layers"])
         wp["enc_layers"].append({
-            "ln1": _norm_perm(p_l["ln1"], pd), "attn": attn(p_l["attn"]),
-            "ln2": _norm_perm(p_l["ln2"], pd), "ffn": mlp(p_l["ffn"])})
+            "ln1": norm_perm(p_l["ln1"], pd), "attn": attn(p_l["attn"]),
+            "ln2": norm_perm(p_l["ln2"], pd), "ffn": mlp(p_l["ffn"])})
     for i in range(cfg.num_layers):
         p_l = jax.tree.map(lambda a: a[i], params["dec_layers"])
         wp["dec_layers"].append({
-            "ln1": _norm_perm(p_l["ln1"], pd), "attn": attn(p_l["attn"]),
-            "lnx": _norm_perm(p_l["lnx"], pd),
+            "ln1": norm_perm(p_l["ln1"], pd), "attn": attn(p_l["attn"]),
+            "lnx": norm_perm(p_l["lnx"], pd),
             "xattn": attn(p_l["xattn"]),
-            "ln2": _norm_perm(p_l["ln2"], pd), "ffn": mlp(p_l["ffn"])})
+            "ln2": norm_perm(p_l["ln2"], pd), "ffn": mlp(p_l["ffn"])})
     wp["embed"] = {"tok": ring.encode(permute.apply_perm(
         jnp.asarray(params["embed"]["tok"], P32), pd, 1))}
     wp["enc_pos"] = ring.encode(permute.apply_perm(
         jnp.asarray(params["enc_pos"], P32), pd, 1))
     wp["dec_pos"] = ring.encode(permute.apply_perm(
         jnp.asarray(params["dec_pos"], P32), pd, 1))
-    wp["enc_norm"] = _norm_perm(params["enc_norm"], pd)
-    wp["dec_norm"] = _norm_perm(params["dec_norm"], pd)
-    wp["head"] = _enc_linear(params["embed"]["tok"], None, pd, perms["v"])
-    pm = PrivateModel(cfg, "centaur", perms, wp, ks, dealer)
-    return pm
+    wp["enc_norm"] = norm_perm(params["enc_norm"], pd)
+    wp["dec_norm"] = norm_perm(params["dec_norm"], pd)
+    wp["head"] = enc_linear(params["embed"]["tok"], None, pd, perms["v"])
+    return PrivateModel(cfg, "centaur", perms, wp, ks, dealer)
 
 
 def whisper_private_forward(pm: PrivateModel, embeds, tokens):
     """Private enc-dec inference: client shares frame embeddings and
-    decoder tokens; returns de-permuted decoder logits."""
+    decoder tokens; returns de-permuted decoder logits.  The encoder
+    and decoder stacks run on the shared executor (cross-attention is
+    the executor's `kv=` path)."""
     cfg = pm.cfg
-    B, Se, _ = embeds.shape
+    suite = get_suite(pm)
+    _, Se, _ = embeds.shape
     _, Sd = tokens.shape
     wp = pm.wp
     # encoder: client embeds -> shares -> Pi_PPP into pi-space
@@ -1459,11 +209,11 @@ def whisper_private_forward(pm: PrivateModel, embeds, tokens):
         x = protocols.pp_permute(x, pm.perms["d"], axis=-1)
         x = x + wp["enc_pos"][:Se][None]
     for p in wp["enc_layers"]:
-        hx = _c_norm(pm, p["ln1"], x)
-        x = x + _c_attention(pm, p["attn"], hx, _NO_EXPOSE, causal=False)
-        hx = _c_norm(pm, p["ln2"], x)
-        x = x + _c_ffn(pm, p["ffn"], hx, _NO_EXPOSE)
-    enc = _c_norm(pm, wp["enc_norm"], x)
+        hx = suite.norm(p["ln1"], x)
+        x = x + _exec.attention(suite, p["attn"], hx, causal=False)[0]
+        hx = suite.norm(p["ln2"], x)
+        x = x + _exec.ffn(suite, p["ffn"], hx)
+    enc = suite.norm(wp["enc_norm"], x)
 
     # decoder
     xoh = encrypt_tokens(pm, tokens)
@@ -1472,13 +222,14 @@ def whisper_private_forward(pm: PrivateModel, embeds, tokens):
                                xoh, rescale=False)
         y = y + wp["dec_pos"][:Sd][None]
     for p in wp["dec_layers"]:
-        hy = _c_norm(pm, p["ln1"], y)
-        y = y + _c_attention(pm, p["attn"], hy, _NO_EXPOSE, causal=True)
-        hy = _c_norm(pm, p["lnx"], y)
-        y = y + _c_attention(pm, p["xattn"], hy, _NO_EXPOSE, kv=enc, causal=False)
-        hy = _c_norm(pm, p["ln2"], y)
-        y = y + _c_ffn(pm, p["ffn"], hy, _NO_EXPOSE)
-    y = _c_norm(pm, wp["dec_norm"], y)
+        hy = suite.norm(p["ln1"], y)
+        y = y + _exec.attention(suite, p["attn"], hy, causal=True)[0]
+        hy = suite.norm(p["lnx"], y)
+        y = y + _exec.attention(suite, p["xattn"], hy, kv=enc,
+                                causal=False)[0]
+        hy = suite.norm(p["ln2"], y)
+        y = y + _exec.ffn(suite, p["ffn"], hy)
+    y = suite.norm(wp["dec_norm"], y)
     with comm.tag("adaptation"):
         logits_p = protocols.linear(wp["head"]["w"], None, y)
     yv = ring.decode(reconstruct(logits_p), dtype=P32)

@@ -128,6 +128,35 @@ def smpc_gelu(x: ShareTensor, dealer) -> ShareTensor:
                                                    ring.RING_DTYPE))
 
 
+def smpc_relu2(x: ShareTensor, dealer) -> ShareTensor:
+    """relu(x)^2 (squared-ReLU archs): one DReLU comparison selects x
+    or 0 (billed; selection via the documented oracle shortcut), then a
+    Beaver square."""
+    _bill_compare(comm.numel(x.shape), "relu_select")
+    sel = jnp.maximum(_oracle(x), 0.0)
+    r = ShareTensor(ring.encode(sel) - x.s1, x.s1)  # re-embed selected
+    return beaver.square(r, dealer)
+
+
+def smpc_silu(x: ShareTensor, dealer) -> ShareTensor:
+    """silu(x) = x * sigmoid(x); sigmoid via exp + NR reciprocal — the
+    CrypTen-style composition that gives SMPC baselines SwiGLU coverage
+    (llama-family shapes) with the baselines' true cost structure.
+
+    Domain: the NR reciprocal only converges for arguments < ~666, i.e.
+    exp(-x) + 1 needs x >= ~-6.5, so inputs are clamped to [-6, .)
+    first (one billed comparison, like smpc_exp's own clamp) and the
+    clamped value is used in the product too — silu saturates at
+    silu(-6) ~= -0.015 below the clamp, a bounded error where the
+    unclamped composition returns ring-overflow garbage."""
+    _bill_compare(comm.numel(x.shape), "silu_clamp")
+    xv = jnp.maximum(_oracle(x), -6.0)
+    xc = ShareTensor(ring.encode(xv) - x.s1, x.s1)  # re-embed clamped
+    e = smpc_exp(ShareTensor(-xc.s0, -xc.s1), dealer)
+    sig = smpc_reciprocal(e + ring.encode(1.0), dealer)
+    return beaver.mul(xc, sig, dealer)
+
+
 def smpc_layernorm(x: ShareTensor, gamma_sh: ShareTensor,
                    beta_sh: ShareTensor, dealer,
                    eps: float = 1e-5) -> ShareTensor:

@@ -1,0 +1,25 @@
+"""Protocol-suite package: per-mode PPTI protocols behind one executor.
+
+``base``      — ProtocolSuite interface, PrivateModel state, get_suite.
+``executor``  — the shared layer/block executor (residual skeleton,
+                attention shapes, masking, KV-cache serving, jit).
+``centaur``   — the paper's protocol (+ parameter preparation).
+``smpc``      — PUMA/CrypTen baselines (smpc / mpcformer / secformer).
+``permute_suite`` — the permutation-only STI baseline.
+``masking``   — the shared causal/slot mask constants and caches.
+"""
+from .base import (MODES, KeyStream, PrivateModel, ProtocolSuite,
+                   encrypt_tokens, get_suite)
+from .centaur import CentaurSuite
+from .executor import (attention, block, decode_step, ffn,
+                       init_slot_caches, mla_attention, model_forward,
+                       prefill)
+from .permute_suite import PermuteSuite
+from .smpc import SmpcSuite
+
+__all__ = [
+    "MODES", "KeyStream", "PrivateModel", "ProtocolSuite",
+    "encrypt_tokens", "get_suite", "CentaurSuite", "SmpcSuite",
+    "PermuteSuite", "attention", "block", "decode_step", "ffn",
+    "init_slot_caches", "mla_attention", "model_forward", "prefill",
+]

@@ -1,0 +1,235 @@
+"""ProtocolSuite: the per-mode protocol surface of private inference.
+
+A *suite* bundles everything that differs between the PPTI families the
+paper compares — how parameters are prepared, how a linear layer is
+evaluated, which softmax/activation/norm protocol runs, and what the
+cloud party P1 gets to observe — behind one small interface.  The
+*executor* (``core.suites.executor``) owns everything that is the same
+in every mode: the transformer residual skeleton, attention shapes
+(incl. GQA), causal masking, the slot-stacked padded KV-cache
+prefill/decode loop, and the jit/capture machinery.  A new protocol
+drops in as a new suite; it inherits batched jitted serving for free.
+
+Value domain: suites operate either on ``ShareTensor`` (centaur, smpc
+and its nonlinear variants) or on plain float arrays (the permute
+baseline).  The executor only manipulates values through reshape /
+transpose / ``+`` / suite methods, all of which both domains support.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import beaver, ring
+from ..sharing import ShareTensor, share
+from . import masking
+
+
+class KeyStream:
+    """Split-on-demand PRNG stream (one per PrivateModel)."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+@dataclass
+class PrivateModel:
+    """Prepared private model: config + per-mode parameters + randomness.
+
+    ``exposed`` records what the cloud platform P1 actually observes per
+    mode — the attack surface evaluated by benchmarks/privacy_attack.py.
+    """
+
+    cfg: Any
+    mode: str
+    perms: dict                      # named index-permutations
+    wp: dict                         # prepared parameters
+    ks: KeyStream
+    dealer: Any                      # TripleDealer or TriplePool
+    exposed: dict = field(default_factory=dict)
+    pool: Any = None                 # lazily-built beaver.TriplePool
+    jit_cache: dict = field(default_factory=dict)
+
+    def expose(self, name, value):
+        """Record an intermediate as seen by the cloud platform P1."""
+        if name not in self.exposed:
+            self.exposed[name] = value
+
+    def triple_pool(self):
+        if self.pool is None:
+            # a pool built with use_pool=True is the model's dealer;
+            # reuse it so jitted paths and eager paths draw from (and
+            # bill) one offline phase
+            self.pool = (self.dealer
+                         if isinstance(self.dealer, beaver.TriplePool)
+                         else beaver.TriplePool(self.ks()))
+        return self.pool
+
+    def suite(self) -> "ProtocolSuite":
+        return get_suite(self)
+
+
+def encrypt_tokens(pm: PrivateModel, tokens):
+    """Client side: one-hot (raw ring ints, no scale) and share."""
+    onehot = jax.nn.one_hot(tokens, pm.cfg.vocab_size,
+                            dtype=ring.RING_DTYPE)
+    return share(pm.ks(), onehot)
+
+
+class ProtocolSuite:
+    """Per-mode protocol operations, driven by the shared executor.
+
+    Implementations hold no state of their own beyond the PrivateModel
+    they wrap — a suite may capture only ``pm`` (params, key stream,
+    dealer, permutations); everything tensor-valued flows through the
+    method arguments so the executor can trace a suite body under
+    ``jax.eval_shape`` / ``jax.jit`` (DESIGN.md §8 executor contract).
+    """
+
+    mode: str = "?"
+    #: whether the eager path records P1-observable intermediates
+    exposes: bool = False
+    #: families this suite's prepared parameters / ops cover
+    families: tuple = ()
+    #: whether the executor may serve this suite's KV-cache decode path
+    serves: bool = False
+
+    def __init__(self, pm: PrivateModel):
+        self.pm = pm
+
+    # ---- convenience -------------------------------------------------------
+    @property
+    def cfg(self):
+        return self.pm.cfg
+
+    @property
+    def dealer(self):
+        return self.pm.dealer
+
+    def ks(self):
+        return self.pm.ks()
+
+    def jittable(self) -> bool:
+        """Uniform-layer stacks the §6 per-layer jit machinery covers."""
+        return False
+
+    def expose_value(self, name: str, x):
+        """Record a P1-observable residual-stream value (no-op for
+        suites whose protocol reveals nothing there)."""
+
+    # ---- protocol surface (implemented per suite) --------------------------
+    def embed(self, tokens, positions, expose: bool = False):
+        raise NotImplementedError
+
+    def linear(self, p, x):
+        """One linear layer from a prepared param dict {"w", "b"}."""
+        raise NotImplementedError
+
+    def matmul(self, a, b):
+        """Activation x activation product (attention scores / mixing)."""
+        raise NotImplementedError
+
+    def scale(self, x, c: float):
+        """Multiply by a public float constant."""
+        raise NotImplementedError
+
+    def mask(self, scores, valid):
+        """Kill invalid key columns ahead of the softmax (broadcasts)."""
+        raise NotImplementedError
+
+    def softmax_pair(self, scores, values, *, per_slot: bool,
+                     expose: bool = False):
+        """Mode softmax + the value-side permutation hook.
+
+        Returns ``(probs, values')`` where centaur applies its fresh
+        per-request (or per-slot, when ``per_slot``) sequence
+        permutation π1 to both the revealed scores and the value rows;
+        baseline suites return ``values`` untouched.
+        """
+        raise NotImplementedError
+
+    def act(self, x, expose: bool = False):
+        """The MLP activation (mode-approximated where applicable)."""
+        raise NotImplementedError
+
+    def glu(self, gate, up, expose: bool = False):
+        """SwiGLU combine act(gate) * up."""
+        raise NotImplementedError
+
+    def tanh(self, x):
+        raise NotImplementedError
+
+    def norm(self, p, x, tag: str = "layernorm", expose_as=None):
+        raise NotImplementedError
+
+    def rope(self, x, cos, sin):
+        """Public per-position rotation (share-local where shared)."""
+        raise NotImplementedError
+
+    def head(self, x):
+        """Adaptation head -> plaintext logits (client-side view)."""
+        raise NotImplementedError
+
+    # ---- family extensions (centaur-only today; see README mode matrix) ----
+    def moe_ffn(self, p, x, expose: bool = False):
+        raise NotImplementedError(
+            f"{self.mode} suite does not implement MoE FFNs")
+
+    def mamba_block(self, p, x, expose: bool = False):
+        raise NotImplementedError(
+            f"{self.mode} suite does not implement Mamba blocks")
+
+
+def rope_on_shares(x: ShareTensor, cos, sin):
+    """Public per-position rotation applied locally to each share."""
+    half = x.shape[-1] // 2
+    c = ring.encode(cos)[..., None, :]
+    s = ring.encode(sin)[..., None, :]
+
+    def rot(t):
+        t1, t2 = t[..., :half], t[..., half:]
+        r1 = ring.truncate(t1 * c - t2 * s)
+        r2 = ring.truncate(t2 * c + t1 * s)
+        return jnp.concatenate([r1, r2], -1)
+
+    return ShareTensor(rot(x.s0), rot(x.s1))
+
+
+class ShareSuite(ProtocolSuite):
+    """Common share-domain operations (centaur and the smpc family):
+    Beaver products, public-constant scaling, additive ring masking,
+    and share-local RoPE are protocol-identical across these suites."""
+
+    def matmul(self, a, b):
+        return beaver.matmul(a, b, self.dealer)
+
+    def scale(self, x, c: float):
+        return x.mul_public(ring.encode(c))
+
+    def mask(self, scores, valid):
+        return scores + masking.ring_mask(valid)
+
+    def rope(self, x, cos, sin):
+        return rope_on_shares(x, cos, sin)
+
+
+def get_suite(pm: PrivateModel) -> ProtocolSuite:
+    """Suite for pm.mode (smpc/mpcformer/secformer share one suite)."""
+    from . import centaur, permute_suite, smpc
+    if pm.mode == "centaur":
+        return centaur.CentaurSuite(pm)
+    if pm.mode in ("smpc", "mpcformer", "secformer"):
+        return smpc.SmpcSuite(pm)
+    if pm.mode == "permute":
+        return permute_suite.PermuteSuite(pm)
+    raise ValueError(f"unknown PPTI mode: {pm.mode!r}")
+
+
+MODES = ("centaur", "smpc", "mpcformer", "secformer", "permute")

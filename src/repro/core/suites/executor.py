@@ -1,0 +1,551 @@
+"""The shared layer/block executor every PPTI suite runs on.
+
+ONE implementation of everything that is protocol-independent:
+
+* the transformer residual skeleton (pre/post-norm, exposure points),
+* attention shapes incl. GQA head grouping and MLA latent projections,
+* causal masking and padded-slot validity masking (core.suites.masking),
+* the full-sequence forward for every model family,
+* the slot-stacked padded KV-cache prefill/decode loop (DESIGN.md §7),
+* the `_JitLayer`/`comm.capture` machinery of DESIGN.md §6 and the
+  `TriplePool` offline phases.
+
+Because the executor only touches values through suite methods and
+shape-preserving ops both value domains support (reshape / transpose /
+`+`), a suite written against ``core.suites.base.ProtocolSuite`` gains
+the jitted, continuous-batched serving path for free — this is what
+makes the SMPC baselines servable under the identical conditions the
+paper's speedup claim requires.
+
+Executor contract (DESIGN.md §8): a suite may capture only its
+PrivateModel; every call the executor makes must be traceable under
+``jax.eval_shape`` (billing is Python-side and captured/replayed), and
+the eager and jitted paths must bill identical ledgers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import beaver, comm, ring
+from ..sharing import ShareTensor
+from . import masking
+from .base import KeyStream, PrivateModel, get_suite
+
+
+# =============================================================================
+# value-domain-generic tensor helpers (ShareTensor | plain array)
+# =============================================================================
+
+def bcast(x, shape):
+    if isinstance(x, ShareTensor):
+        return ShareTensor(jnp.broadcast_to(x.s0, shape),
+                           jnp.broadcast_to(x.s1, shape))
+    return jnp.broadcast_to(x, shape)
+
+
+def swap(x, a: int, b: int):
+    if isinstance(x, ShareTensor):
+        return ShareTensor(jnp.swapaxes(x.s0, a, b),
+                           jnp.swapaxes(x.s1, a, b))
+    return jnp.swapaxes(x, a, b)
+
+
+def concat(xs, axis: int):
+    if isinstance(xs[0], ShareTensor):
+        return ShareTensor(jnp.concatenate([x.s0 for x in xs], axis),
+                           jnp.concatenate([x.s1 for x in xs], axis))
+    return jnp.concatenate(xs, axis)
+
+
+def slot_write(cache, new, pos):
+    """Write new K/V rows (B,S,...) into the padded cache (B,L,...) at
+    per-slot offsets pos (B,) — applied to each share separately."""
+    def upd(c, nw):
+        return jax.vmap(lambda cb, nb, pb:
+                        jax.lax.dynamic_update_slice_in_dim(cb, nb, pb,
+                                                            axis=0)
+                        )(c, nw, pos)
+    if isinstance(cache, ShareTensor):
+        return ShareTensor(upd(cache.s0, new.s0), upd(cache.s1, new.s1))
+    return upd(cache, new)
+
+
+def pad_cache_to(c, max_len: int):
+    pad = [(0, 0)] * c.ndim
+    pad[1] = (0, max_len - c.shape[1])
+    if isinstance(c, ShareTensor):
+        return ShareTensor(jnp.pad(c.s0, pad), jnp.pad(c.s1, pad))
+    return jnp.pad(c, pad)
+
+
+# =============================================================================
+# attention (standard multi-head incl. GQA; full / prefill / slot-decode)
+# =============================================================================
+
+def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
+              want_cache: bool = False, expose: bool = False):
+    """The paper's attention flow in any mode.
+
+    Three call shapes share this body:
+      * full sequence (``cache is None``): self- or cross-attention
+        (``kv`` = encoder output) over the whole prompt;
+      * prefill (``want_cache=True``): same, returning the K/V state for
+        the caller to pad into a slot cache;
+      * slot decode (``cache``+``pos``): new K/V rows are written at
+        per-slot offsets and queries attend over the whole padded axis
+        under the shared validity mask.
+    """
+    cfg = suite.cfg
+    B, S, _ = x.shape
+    kv_in = x if kv is None else kv
+    T = kv_in.shape[1]
+    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    causal = cfg.causal if causal is None else causal
+    with comm.tag("linear"):
+        q = suite.linear(p["wq"], x)
+        k = suite.linear(p["wk"], kv_in).reshape(B, T, hk, dh)
+        v = suite.linear(p["wv"], kv_in).reshape(B, T, hk, dh)
+    q_pos = (pos[:, None] + jnp.arange(S)[None, :]
+             if cache is not None else None)              # (B,S)
+    if cfg.pos_embed == "rope" and kv is None:
+        from repro.models.layers import rope_freqs
+        pv = (q_pos if q_pos is not None
+              else jnp.arange(S)[None, :].repeat(B, 0))
+        cos, sin = rope_freqs(cfg, pv, dh)
+        q = suite.rope(q.reshape(B, S, h, dh), cos, sin)
+        k = suite.rope(k, cos, sin)
+    q = q.reshape(B, S, hk, g, dh)
+
+    new_cache = None
+    if cache is not None:
+        k_all = slot_write(cache["k"], k, pos)
+        v_all = slot_write(cache["v"], v, pos)
+        new_cache = {"k": k_all, "v": v_all}
+    else:
+        k_all, v_all = k, v
+        if want_cache:
+            new_cache = {"k": k, "v": v}
+    L = k_all.shape[1]
+
+    qh = q.transpose(0, 2, 3, 1, 4)                       # (B,hk,g,S,dh)
+    kt = swap(k_all.transpose(0, 2, 1, 3), -1, -2)        # (B,hk,dh,L)
+    kt = bcast(kt[:, :, None], (B, hk, g, dh, L))
+    with comm.tag("linear"):
+        o1 = suite.matmul(qh, kt)                         # (B,hk,g,S,L)
+    o1 = suite.scale(o1, dh ** -0.5)
+    if cache is not None:
+        o1 = suite.mask(o1, masking.slot_valid(q_pos, L)[:, None, None])
+    elif causal:
+        o1 = suite.mask(o1, masking.causal_valid(S, L))
+    vt = v_all.transpose(0, 2, 1, 3)                      # (B,hk,L,dh)
+    with comm.tag("softmax"):
+        probs, vp = suite.softmax_pair(o1, vt,
+                                       per_slot=cache is not None,
+                                       expose=expose)
+    vp = bcast(vp[:, :, None], (B, hk, g, L, dh))
+    with comm.tag("linear"):
+        o3 = suite.matmul(probs, vp)                      # (B,hk,g,S,dh)
+    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
+    with comm.tag("linear"):
+        out = suite.linear(p["wo"], o3)
+    return out, new_cache
+
+
+def mla_attention(suite, p, x, expose: bool = False):
+    """MLA (deepseek-v2): latent down-projections with their own norms;
+    per-head scores follow the same Pi_MatMul -> softmax_pair flow with
+    [q_nope|q_pe] / [k_nope|k_pe] concatenated heads."""
+    cfg = suite.cfg
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qn, qr, vd = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                  cfg.v_head_dim)
+    with comm.tag("linear"):
+        q_lat = suite.linear(p["wq_a"], x)
+    q_lat = suite.norm(p["q_norm"], q_lat)
+    with comm.tag("linear"):
+        q = suite.linear(p["wq_b"], q_lat).reshape(B, S, h, qn + qr)
+        kv_a = suite.linear(p["wkv_a"], x)
+    ckv = kv_a[..., :cfg.kv_lora_rank]
+    k_pe = kv_a[..., cfg.kv_lora_rank:]
+    ckv = suite.norm(p["kv_norm"], ckv)
+    with comm.tag("linear"):
+        kv = suite.linear(p["wkv_b"], ckv).reshape(B, S, h, qn + vd)
+
+    from repro.models.layers import rope_freqs
+    pos = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = rope_freqs(cfg, pos, qr)
+    q_pe = suite.rope(q[..., qn:], cos, sin)
+    k_pe = suite.rope(k_pe.reshape(B, S, 1, qr), cos, sin)
+
+    # concat heads: q_cat (B,h,S,qn+qr); k_cat (B,h,qn+qr,S)
+    q_cat = concat([q[..., :qn], q_pe], -1).transpose(0, 2, 1, 3)
+    k_pe_b = bcast(k_pe, (B, S, h, qr))
+    k_cat = concat([kv[..., :qn], k_pe_b], -1).transpose(0, 2, 3, 1)
+    v = kv[..., qn:].transpose(0, 2, 1, 3)                # (B,h,S,vd)
+
+    with comm.tag("linear"):
+        o1 = suite.matmul(q_cat, k_cat)
+    o1 = suite.scale(o1, (qn + qr) ** -0.5)
+    o1 = suite.mask(o1, masking.causal_valid(S, S))
+    with comm.tag("softmax"):
+        o2p, vp = suite.softmax_pair(o1, v, per_slot=False,
+                                     expose=expose)
+    with comm.tag("linear"):
+        o3 = suite.matmul(o2p, vp)                        # (B,h,S,vd)
+    o3 = o3.transpose(0, 2, 1, 3).reshape(B, S, h * vd)
+    with comm.tag("linear"):
+        return suite.linear(p["wo"], o3)
+
+
+# =============================================================================
+# FFN + residual block
+# =============================================================================
+
+def ffn(suite, p, x, expose: bool = False):
+    cfg = suite.cfg
+    if cfg.family == "moe":
+        return suite.moe_ffn(p, x, expose=expose)
+    if cfg.ffn_type == "swiglu":
+        with comm.tag("linear"):
+            gt = suite.linear(p["w_gate"], x)
+            up = suite.linear(p["w_up"], x)
+        with comm.tag("gelu"):
+            hidden = suite.glu(gt, up, expose=expose)
+        with comm.tag("linear"):
+            return suite.linear(p["w_down"], hidden)
+    with comm.tag("linear"):
+        o5 = suite.linear(p["up"], x)
+    with comm.tag("gelu"):
+        a = suite.act(o5, expose=expose)
+    with comm.tag("linear"):
+        return suite.linear(p["down"], a)
+
+
+def block(suite, p, x, attn_fn, expose: bool = False):
+    """The transformer residual skeleton shared by the full forward,
+    prefill and slotted decode (pre/post-norm handling, exposure hooks
+    only for the eager layer 0).  attn_fn(h) -> (attn_out, extra);
+    `extra` carries a KV cache for the serving paths, None otherwise."""
+    cfg = suite.cfg
+    h = suite.norm(p["ln1"], x) if cfg.prenorm else x
+    attn, extra = attn_fn(h)
+    x = x + attn
+    if not cfg.prenorm:
+        x = suite.norm(p["ln1"], x,
+                       expose_as="O4" if expose else None)
+    elif expose:
+        suite.expose_value("O4", x)
+    h = suite.norm(p["ln2"], x) if cfg.prenorm else x
+    f = ffn(suite, p["ffn"], h, expose=expose)
+    x = x + f
+    if not cfg.prenorm:
+        x = suite.norm(p["ln2"], x,
+                       expose_as="O6" if expose else None)
+    elif expose:
+        suite.expose_value("O6", x)
+    return x, extra
+
+
+def _std_layer(suite, p, x, expose: bool = False):
+    """One standard transformer layer (dense/encoder/moe families)."""
+    if suite.cfg.use_mla:
+        def attn_fn(h):
+            return mla_attention(suite, p["attn"], h, expose=expose), None
+    else:
+        def attn_fn(h):
+            return attention(suite, p["attn"], h, expose=expose)[0], None
+    return block(suite, p, x, attn_fn, expose=expose)[0]
+
+
+def _family_layer(suite, i: int, x, expose: bool = False):
+    """Layer i of the full-sequence forward, any model family."""
+    cfg, pm = suite.cfg, suite.pm
+    p = pm.wp["layers"][i]
+    if cfg.family == "hybrid":
+        # shared attention block every attn_every mamba layers
+        ae = cfg.attn_every
+        if i % ae == 0 and i < (cfg.num_layers // ae) * ae:
+            shp = pm.wp["shared"]
+            h = suite.norm(shp["ln1"], x)
+            a, _ = attention(suite, shp["attn"], h, expose=expose)
+            x = x + a
+            h = suite.norm(shp["ln2"], x)
+            x = x + ffn(suite, shp["ffn"], h, expose=expose)
+        h = suite.norm(p["ln1"], x)
+        return x + suite.mamba_block(p["mamba"], h, expose=expose)
+    if cfg.family == "ssm":
+        h = suite.norm(p["ln1"], x)
+        return x + suite.mamba_block(p["mamba"], h, expose=expose)
+    return _std_layer(suite, p, x, expose=expose)
+
+
+# =============================================================================
+# jitted per-layer machinery (hot path: fused online phase + triple pool
+# + static comm schedule — DESIGN.md §6)
+# =============================================================================
+
+@dataclass
+class _JitLayer:
+    fn: Any           # jitted (p, x, key, triples) -> x'
+    specs: list       # per-layer triple demand, in request order
+    events: list      # captured per-layer comm schedule (CommEvents)
+
+
+def _shadow(pm: PrivateModel, key, dealer) -> PrivateModel:
+    """pm clone with a traced key stream/dealer and inert exposure."""
+    return PrivateModel(pm.cfg, pm.mode, pm.perms, pm.wp,
+                        KeyStream(key), dealer)
+
+
+def _build_jit_layer(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
+    """Compile one layer into a jitted function plus its static cost
+    schedule and triple demand.
+
+    1. An abstract trace (jax.eval_shape — zero FLOPs) under a
+       `comm.capture()` discovers the layer's exact (rounds, bits)
+       schedule and, via a RecordingDealer, the ordered multiset of
+       Beaver triples it consumes.
+    2. The online function is jitted with triples as *inputs* (a
+       ReplayDealer hands them out in recorded order), so the offline
+       phase runs ahead of time through the vectorized TriplePool and
+       the jitted online program contains no dealer work.
+    3. `comm.record` is Python-side and would fire once at trace time
+       only; the traced body runs muted and the captured schedule is
+       `comm.replay`ed per call instead, keeping the ledger exact.
+    """
+    key = pm.ks()
+
+    recorders = []
+
+    def record_run(p_, x_, key_):
+        kd, ku = jax.random.split(key_)
+        rec = beaver.RecordingDealer(kd)
+        recorders.append(rec)
+        return body(_shadow(pm, ku, rec), p_, x_)
+
+    with comm.capture() as sched:
+        jax.eval_shape(record_run, p, x, key)
+    specs = recorders[-1].specs
+
+    def online_run(p_, x_, key_, triples):
+        _, ku = jax.random.split(key_)
+        with comm.muted():
+            return body(_shadow(pm, ku, beaver.ReplayDealer(triples)),
+                        p_, x_)
+
+    return _JitLayer(jax.jit(online_run), specs, list(sched.events))
+
+
+def jit_layer_for(pm: PrivateModel, name: str, body, p, x) -> _JitLayer:
+    # x may be any pytree of arrays/ShareTensors (the slotted decode
+    # threads (x, k_cache, v_cache, pos) through one body)
+    cache_key = (name, jax.tree.structure((p, x)),
+                 tuple(jnp.shape(le) for le in jax.tree.leaves((p, x))))
+    if cache_key not in pm.jit_cache:
+        pm.jit_cache[cache_key] = _build_jit_layer(pm, name, body, p, x)
+    return pm.jit_cache[cache_key]
+
+
+def run_jit_layers(pm: PrivateModel, layer_ps, body, name: str, x):
+    """Offline: prefetch every layer's triples in one vectorized batch
+    per spec.  Online: run the jitted layer per depth, replaying the
+    captured schedule (online events; offline was billed by the pool)."""
+    jl = jit_layer_for(pm, name, body, layer_ps[0], x)
+    pool = pm.triple_pool()
+    pool.prefetch(jl.specs * len(layer_ps))
+    for p in layer_ps:
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        x = jl.fn(p, x, pm.ks(), triples)
+    return x
+
+
+# =============================================================================
+# full-sequence forward (all modes, all families)
+# =============================================================================
+
+def model_forward(pm: PrivateModel, tokens, jit: bool = False):
+    """Full private forward; returns plaintext logits after the client
+    reconstructs the output (and removes pi_v where the mode permutes
+    the vocab axis).  The jit path compiles the uniform layer stack per
+    depth and never populates pm.exposed (no traced intermediate
+    escapes); the eager path records the mode's P1-observable surface.
+    """
+    suite = get_suite(pm)
+    cfg = pm.cfg
+    assert cfg.family in suite.families, \
+        f"{pm.mode} does not cover family {cfg.family!r}"
+    if jit and suite.jittable():
+        S = tokens.shape[1]
+        x = suite.embed(tokens, jnp.arange(S))
+
+        def body(shadow, p, xin):
+            return _std_layer(get_suite(shadow), p, xin)
+
+        x = run_jit_layers(pm, pm.wp["layers"], body,
+                           f"{pm.mode}_layer", x)
+        return suite.head(x)
+
+    S = tokens.shape[1]
+    x = suite.embed(tokens, jnp.arange(S), expose=suite.exposes)
+    for i in range(cfg.num_layers):
+        x = _family_layer(suite, i, x,
+                          expose=suite.exposes and i == 0)
+    return suite.head(x)
+
+
+# =============================================================================
+# serving: slot-stacked padded KV-cache prefill/decode (DESIGN.md §7)
+# =============================================================================
+
+def _assert_servable(suite):
+    assert suite.serves, \
+        f"{suite.mode} mode has no share-domain KV-cache decode path"
+    assert suite.cfg.family == "dense" and not suite.cfg.use_mla, \
+        "private serving covers the dense KV-cache decode path"
+
+
+def init_slot_caches(pm: PrivateModel, n_slots: int, max_len: int):
+    """Zeroed slot-stacked share KV caches: per layer {"k","v"} of shape
+    (n_slots, max_len, hk, dh).  Zero shares reconstruct to zero, and
+    the additive validity mask keeps unwritten rows at exactly zero
+    softmax mass, so slots can be filled/evicted independently —
+    identical in every share-domain mode."""
+    cfg = pm.cfg
+    z = jnp.zeros((n_slots, max_len, cfg.num_kv_heads, cfg.dh),
+                  ring.RING_DTYPE)
+    return [{"k": ShareTensor(z, z), "v": ShareTensor(z, z)}
+            for _ in range(cfg.num_layers)]
+
+
+def _prefill_layer(suite, p, x):
+    """One transformer layer at prompt length, returning the K/V state
+    for the slot cache (serving hot path: never exposes)."""
+    return block(suite, p, x,
+                 lambda h: attention(suite, p["attn"], h, causal=True,
+                                     want_cache=True))
+
+
+def _decode_layer(suite, p, x, cache, pos):
+    """One transformer layer over a slot batch (serving hot path, also
+    traced into the jitted tick: never exposes)."""
+    return block(suite, p, x,
+                 lambda h: attention(suite, p["attn"], h, cache=cache,
+                                     pos=pos))
+
+
+def prefill(pm: PrivateModel, tokens, max_len: int | None = None,
+            jit: bool = False):
+    """Private prefill in any servable mode: returns (last-token logits,
+    per-layer K/V share caches padded to `max_len`), ready for
+    `decode_step` or to be spliced into a slot of a stacked serving
+    cache.  Attention runs at prompt length (comm ∝ S^2, as the
+    sequential protocol bills); only the returned cache is padded —
+    padding shares are zeros.  jit=True compiles the layer stack per
+    (B, S) like the decode path."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    cfg = pm.cfg
+    B, S = tokens.shape
+    if max_len is None:
+        max_len = S + 1
+    assert max_len >= S, (max_len, S)
+    if jit:
+        def body(shadow, p, tok):
+            sh = get_suite(shadow)
+            x = sh.embed(tok, jnp.arange(S))
+            ks_, vs_ = [], []
+            for i in range(cfg.num_layers):
+                x, nc = _prefill_layer(sh, p[i], x)
+                ks_.append(pad_cache_to(nc["k"], max_len))
+                vs_.append(pad_cache_to(nc["v"], max_len))
+            return sh.head(x[:, -1:, :]), ks_, vs_
+
+        # max_len shapes the padded outputs but not the traced inputs,
+        # so it must be part of the program cache key
+        jl = jit_layer_for(pm, f"{pm.mode}_prefill:{max_len}", body,
+                           pm.wp["layers"], tokens)
+        pool = pm.triple_pool()
+        pool.prefetch(jl.specs)
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        logits, ks_, vs_ = jl.fn(pm.wp["layers"], tokens, pm.ks(),
+                                 triples)
+        return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
+
+    x = suite.embed(tokens, jnp.arange(S))
+    caches = []
+    for i in range(cfg.num_layers):
+        x, nc = _prefill_layer(suite, pm.wp["layers"][i], x)
+        caches.append({"k": pad_cache_to(nc["k"], max_len),
+                       "v": pad_cache_to(nc["v"], max_len)})
+    return suite.head(x[:, -1:, :]), caches
+
+
+def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,
+                         lookahead: int = 4):
+    """ONE jitted batched decode step: embedding, the whole layer
+    stack against the slot caches, and the adaptation head compile
+    into a single program per (batch, max_len) shape — a tick is one
+    dispatch plus pool takes.  The shapes are padding-static, so one
+    eval_shape trace under comm.capture() prices every future tick
+    (replayed per tick, ledger bit-exact vs eager), and the triple
+    demand is the same multiset every tick: TriplePool.reserve keeps
+    `lookahead` ticks in stock with one constant-size vectorized
+    generator per spec (DESIGN.md §7)."""
+    nl = pm.cfg.num_layers
+
+    def body(shadow, p, state):
+        sh = get_suite(shadow)
+        tok, ps, cks, cvs = state
+        x = sh.embed(tok, ps[:, None])
+        ks_, vs_ = [], []
+        for i in range(nl):
+            x, nc = _decode_layer(sh, p[i], x,
+                                  {"k": cks[i], "v": cvs[i]}, ps)
+            ks_.append(nc["k"])
+            vs_.append(nc["v"])
+        return sh.head(x), ks_, vs_
+
+    state0 = (token, pos, [c["k"] for c in caches],
+              [c["v"] for c in caches])
+    jl = jit_layer_for(pm, f"{pm.mode}_decode_tick", body,
+                       pm.wp["layers"], state0)
+    pool = pm.triple_pool()
+    pool.reserve(jl.specs, steps=lookahead)
+    triples = [pool.take(s) for s in jl.specs]
+    comm.replay(jl.events, online_only=True)
+    logits, ks_, vs_ = jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
+    return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
+
+
+def decode_step(pm: PrivateModel, caches, token, pos,
+                jit: bool = False, lookahead: int = 4):
+    """One batched private decode step: token (B,1) next-token ids for B
+    independent slots, pos int or (B,) per-slot absolute positions,
+    caches as returned by `prefill` / `init_slot_caches` (padded,
+    slot-stacked).  Returns (logits (B,1,V), updated caches)."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    B, S = token.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    L = int(caches[0]["k"].shape[1])
+    # dynamic_update_slice would silently clamp an out-of-range write
+    # onto the previous token's K/V row — fail loudly instead
+    assert int(jnp.max(pos)) + S <= L, \
+        f"decode past padded cache: pos={pos}, S={S}, max_len={L}"
+    if jit:
+        return _run_jit_decode_step(pm, caches, token, pos,
+                                    lookahead=lookahead)
+    x = suite.embed(token, pos[:, None])
+    new_caches = []
+    for i in range(pm.cfg.num_layers):
+        x, nc = _decode_layer(suite, pm.wp["layers"][i], x, caches[i],
+                              pos)
+        new_caches.append(nc)
+    return suite.head(x), new_caches

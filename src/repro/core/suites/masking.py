@@ -1,0 +1,81 @@
+"""Shared attention masking for every PPTI suite (causal + slot padding).
+
+All suites agree on one mask contract: a dead key column (future token
+under the causal mask, or an unwritten row of a padded slot cache) is
+pushed ``MASK_MAGNITUDE`` below any live score *before* the softmax.
+That single constant is what makes dead columns carry exactly zero
+softmax mass in every mode:
+
+* centaur — the masked, π1-permuted scores are revealed to P1 and
+  softmaxed in float32; ``exp(-MASK_MAGNITUDE)`` underflows to exact
+  float32 zero relative to any live score.
+* smpc / mpcformer / secformer — the CrypTen limit-approx exp clamps its
+  input to ``-2^k + 1`` and ``(1/2^k)^{2^k}`` collapses to exact
+  fixed-point zero within two squarings, and 2Quad maps masked scores to
+  its ``-c`` zero point; dead columns contribute nothing to the sum.
+* permute — plaintext scores are substituted with ``-MASK_MAGNITUDE``
+  (the STI baseline masks in the clear).
+
+The helpers below are the only place the magnitude and the
+``jnp.tril``-style index math live; suites never rebuild per-layer mask
+tensors — the causal validity pattern and its ring encoding are each
+built once per shape and shared across layers and calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import ring
+
+#: Depth of the additive mask in logit units.  Must stay large enough
+#: that exp underflows (see module docstring) yet small enough that the
+#: fixed-point encoding ``MASK_MAGNITUDE * 2^FRAC_BITS`` stays far from
+#: the ring's wrap point.
+MASK_MAGNITUDE = 1e4
+
+
+@functools.lru_cache(maxsize=None)
+def causal_valid(S: int, T: int):
+    """(S, T) bool: query row i may attend key column j iff j <= i.
+
+    A *numpy* constant on purpose: the executor calls this inside
+    ``jax.eval_shape`` / ``jax.jit`` traces, and a cached jnp value
+    would be a leaked tracer on the next trace.  numpy constants fold
+    into any trace safely and the cache replaces the per-layer
+    ``jnp.tril`` rebuild of the old monolith.
+    """
+    return np.arange(T)[None, :] <= np.arange(S)[:, None]
+
+
+_STATIC_RING_MASKS: dict = {}
+
+
+def ring_mask(valid):
+    """Additive ring-encoded mask from a bool validity tensor.
+
+    numpy inputs (the cached static causal masks) are encoded with
+    numpy and memoized, so the result is a trace-safe constant built
+    once per (shape, contents); traced inputs (the per-slot decode
+    validity) go through the normal ring encode.
+    """
+    if isinstance(valid, np.ndarray):
+        key = (valid.shape, valid.tobytes())
+        if key not in _STATIC_RING_MASKS:
+            scaled = ((valid.astype(np.float64) - 1.0) * MASK_MAGNITUDE
+                      * (1 << ring.FRAC_BITS))
+            _STATIC_RING_MASKS[key] = np.round(scaled).astype(np.int64)
+        return _STATIC_RING_MASKS[key]
+    return ring.encode((valid.astype(jnp.float64) - 1.0) * MASK_MAGNITUDE)
+
+
+def slot_valid(q_pos, L: int):
+    """(B, S, L) validity for padded slot decode.
+
+    Key column t is live for the query of slot b at absolute position
+    ``q_pos[b, s]`` iff ``t <= q_pos[b, s]`` — unwritten cache rows
+    (t > pos) and rows past the slot's occupancy are dead.
+    """
+    return jnp.arange(L)[None, None, :] <= q_pos[:, :, None]

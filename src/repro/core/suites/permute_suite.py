@@ -1,0 +1,126 @@
+"""PermuteSuite: the permutation-only STI baseline (Yuan et al.).
+
+Plaintext compute on permuted weights and data — no shares, no Beaver
+triples, no communication.  The suite operates on plain float arrays;
+the executor drives it through the exact same skeleton as the share
+suites, which is what lets the privacy benchmarks compare *identical*
+computations that differ only in protocol.
+
+This mode exists to reproduce the paper's Fig. 4 privacy failure: the
+permutation cancels in QK^T, so O1 (and everything downstream) is
+exposed in the clear — recorded via the exposure hooks and attacked by
+benchmarks/privacy_attack.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import permute, ring
+from . import masking
+from .base import ProtocolSuite
+
+P32 = jnp.float32
+
+
+def _dec(t):
+    return ring.decode(t, dtype=P32)
+
+
+class PermuteSuite(ProtocolSuite):
+    mode = "permute"
+    exposes = True
+    families = ("dense", "encoder")
+    serves = False
+
+    def expose_value(self, name, x):
+        self.pm.expose(name, x)
+
+    # ---- protocol surface --------------------------------------------------
+    def embed(self, tokens, positions, expose: bool = False):
+        pm = self.pm
+        x = jnp.take(_dec(pm.wp["embed"]["tok"]), tokens, axis=0)
+        if "pos" in pm.wp["embed"] and positions is not None:
+            x = x + jnp.take(_dec(pm.wp["embed"]["pos"]), positions,
+                             axis=0)
+        if expose:
+            pm.expose("XM", x)
+        if "embed_norm" in pm.wp:
+            x = self.norm(pm.wp["embed_norm"], x)
+        return x
+
+    def linear(self, p, x):
+        y = x @ _dec(p["w"]).swapaxes(-1, -2)
+        if p.get("b") is not None:
+            y = y + _dec(p["b"])
+        return y
+
+    def matmul(self, a, b):
+        return jnp.matmul(a, b)
+
+    def scale(self, x, c: float):
+        return x * c
+
+    def mask(self, scores, valid):
+        return jnp.where(valid, scores, -masking.MASK_MAGNITUDE)
+
+    def softmax_pair(self, scores, values, *, per_slot: bool,
+                     expose: bool = False):
+        if expose:
+            B = scores.shape[0]
+            S, T = scores.shape[-2], scores.shape[-1]
+            # THE leak: pi cancels in QK^T (paper §3 Motivation 2)
+            self.pm.expose("O1", scores.reshape(B, -1, S, T))
+        probs = jax.nn.softmax(scores, -1)
+        if expose:
+            B = probs.shape[0]
+            S, T = probs.shape[-2], probs.shape[-1]
+            self.pm.expose("O2", probs.reshape(B, -1, S, T))
+        return probs, values
+
+    def act(self, x, expose: bool = False):
+        if expose:
+            self.pm.expose("O5", x)
+        if self.cfg.act == "silu":
+            return jax.nn.silu(x)
+        return jax.nn.gelu(x, approximate=False)
+
+    def glu(self, gate, up, expose: bool = False):
+        if expose:
+            self.pm.expose("O5", gate)
+        return self.act(gate) * up
+
+    def tanh(self, x):
+        return jnp.tanh(x)
+
+    def norm(self, p, x, tag: str = "layernorm", expose_as=None):
+        cfg = self.cfg
+        mu = (x.mean(-1, keepdims=True)
+              if cfg.norm_type == "layernorm" else 0.0)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = p["g"] * y + p.get("b", 0.0)
+        if expose_as:
+            # the STI baseline computes in the clear: P1 sees the
+            # *normalized* residual stream (post-LN), unlike centaur
+            # where only the pre-norm permuted reveal crosses the wire
+            self.pm.expose(expose_as, y)
+        return y
+
+    def rope(self, x, cos, sin):
+        half = x.shape[-1] // 2
+        c = cos[..., None, :]
+        s = sin[..., None, :]
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1)
+
+    def head(self, x):
+        cfg, pm = self.cfg, self.pm
+        if cfg.family == "encoder":
+            pooled = jnp.tanh(x[:, 0, :] @ _dec(pm.wp["pooler"]["w"]).T
+                              + _dec(pm.wp["pooler"]["b"]))
+            return pooled @ _dec(pm.wp["classifier"]["w"]).T \
+                + _dec(pm.wp["classifier"]["b"])
+        x = self.norm(pm.wp["final_norm"], x)
+        logits = x @ _dec(pm.wp["head"]["w"]).T
+        return permute.apply_inv_perm(logits, pm.perms["v"], -1)

@@ -1,0 +1,177 @@
+"""SmpcSuite: PUMA/CrypTen-style SMPC baselines (smpc / mpcformer /
+secformer nonlinear variants).
+
+Weights AND activations are secret-shared; every linear is a Beaver
+Pi_MatMul and every nonlinearity an iterative fixed-point approximation
+(core.smpc_nl).  The mode string picks the nonlinear variant:
+
+  smpc       — CrypTen limit-approx exp/NR softmax + piecewise GeLU
+  mpcformer  — Quad GeLU + 2Quad softmax substitutions (paper Eq. 8)
+  secformer  — 2Quad softmax, exact-structure GeLU/SiLU approximations
+
+Parameter preparation shares the raw weights but reshapes them into the
+same canonical per-layer layout the centaur suite uses, so ONE executor
+drives both protocol families (and the SMPC baselines inherit the
+jitted, slot-batched KV-cache decode path the paper's protocol got in
+PRs 1–2 — the refactor that makes the centaur-vs-smpc serving ratio
+measurable end-to-end)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import beaver, comm, ring, smpc_nl
+from ..sharing import ShareTensor, reconstruct, share
+from .base import ShareSuite, encrypt_tokens
+
+P32 = jnp.float32
+
+
+def prepare_shared(cfg, params, ks):
+    """Secret-share every parameter, arranged in the executor's
+    canonical layout (same keys as the centaur preparation)."""
+    assert cfg.family in ("encoder", "dense") and not cfg.use_mla, \
+        "smpc baselines cover the paper's encoder/dense shapes"
+
+    def enc_share(a):
+        return share(ks(), ring.encode(jnp.asarray(a, P32)))
+
+    def share_tree(t):
+        return jax.tree.map(enc_share, t)
+
+    wp = {"embed": {"tok": enc_share(params["embed"]["tok"])}}
+    if "pos" in params["embed"]:
+        wp["embed"]["pos"] = enc_share(params["embed"]["pos"])
+    if "embed_norm" in params:
+        wp["embed_norm"] = share_tree(params["embed_norm"])
+
+    def lin(w, b=None):
+        return {"w": enc_share(w), "b": None if b is None
+                else enc_share(b)}
+
+    wp["layers"] = []
+    for i in range(cfg.num_layers):
+        p_l = jax.tree.map(lambda a: a[i], params["layers"])
+        a = p_l["attn"]
+        f = p_l["ffn"]
+        if cfg.ffn_type == "swiglu":
+            ffn = {"w_gate": lin(f["w_gate"]), "w_up": lin(f["w_up"]),
+                   "w_down": lin(f["w_down"])}
+        else:
+            ffn = {"up": lin(f["w_up"], f["b_up"]),
+                   "down": lin(f["w_down"], f["b_down"])}
+        wp["layers"].append({
+            "ln1": share_tree(p_l["ln1"]),
+            "ln2": share_tree(p_l["ln2"]),
+            "attn": {k: lin(a[k]) for k in ("wq", "wk", "wv", "wo")},
+            "ffn": ffn,
+        })
+
+    wp["final_norm"] = share_tree(params["final_norm"])
+    if cfg.family == "encoder":
+        wp["pooler"] = lin(params["pooler"]["w"], params["pooler"]["b"])
+        wp["classifier"] = lin(params["classifier"]["w"],
+                               params["classifier"]["b"])
+    else:
+        # tied embeddings reuse the very same share tensors (one offline
+        # sharing, exactly like the plaintext model reuses the table)
+        wp["head"] = ({"w": wp["embed"]["tok"], "b": None}
+                      if cfg.tie_embeddings
+                      else lin(params["head"]["w"]))
+    return wp
+
+
+class SmpcSuite(ShareSuite):
+    exposes = False
+    families = ("dense", "encoder")
+    serves = True
+
+    def __init__(self, pm):
+        super().__init__(pm)
+        self.mode = pm.mode
+
+    def jittable(self) -> bool:
+        return self.cfg.family in ("dense", "encoder")
+
+    # ---- protocol surface --------------------------------------------------
+    def embed(self, tokens, positions, expose: bool = False):
+        pm = self.pm
+        x_oh = encrypt_tokens(pm, tokens)
+        with comm.tag("embedding"):
+            y = beaver.matmul(x_oh, pm.wp["embed"]["tok"], self.dealer,
+                              rescale=False)
+            if "pos" in pm.wp["embed"] and positions is not None:
+                pos = pm.wp["embed"]["pos"]
+                y = y + ShareTensor(jnp.take(pos.s0, positions, axis=0),
+                                    jnp.take(pos.s1, positions, axis=0))
+            if "embed_norm" in pm.wp:
+                y = self.norm(pm.wp["embed_norm"], y, tag="embedding")
+        return y
+
+    def linear(self, p, x):
+        w = p["w"]
+        wt = ShareTensor(jnp.swapaxes(w.s0, -1, -2),
+                         jnp.swapaxes(w.s1, -1, -2))
+        y = beaver.matmul(x, wt, self.dealer)
+        if p.get("b") is not None:
+            y = y + p["b"]
+        return y
+
+    def softmax_pair(self, scores, values, *, per_slot: bool,
+                     expose: bool = False):
+        if self.mode in ("mpcformer", "secformer"):
+            probs = smpc_nl.quad_softmax(scores, self.dealer)
+        else:
+            probs = smpc_nl.smpc_softmax(scores, self.dealer)
+        return probs, values
+
+    def act(self, x, expose: bool = False):
+        if self.mode == "mpcformer":
+            return smpc_nl.quad_gelu(x, self.dealer)
+        if self.cfg.act == "silu":
+            return smpc_nl.smpc_silu(x, self.dealer)
+        if self.cfg.act == "relu2":
+            return smpc_nl.smpc_relu2(x, self.dealer)
+        return smpc_nl.smpc_gelu(x, self.dealer)
+
+    def glu(self, gate, up, expose: bool = False):
+        return beaver.mul(self.act(gate), up, self.dealer)
+
+    def tanh(self, x):
+        return smpc_nl.smpc_tanh(x, self.dealer)
+
+    def norm(self, p, x, tag: str = "layernorm", expose_as=None):
+        cfg = self.cfg
+        with comm.tag(tag):
+            if cfg.norm_type == "layernorm":
+                return smpc_nl.smpc_layernorm(x, p["g"], p["b"],
+                                              self.dealer,
+                                              eps=cfg.norm_eps)
+            # RMSNorm: reuse LN machinery without mean subtraction
+            sq = beaver.square(x, self.dealer)
+            ms = ShareTensor(jnp.sum(sq.s0, -1, keepdims=True),
+                             jnp.sum(sq.s1, -1, keepdims=True)
+                             ).mul_public(
+                ring.encode(1.0 / x.shape[-1])) \
+                + ring.encode(cfg.norm_eps)
+            inv = smpc_nl.smpc_inv_sqrt(ms, self.dealer)
+            invb = ShareTensor(jnp.broadcast_to(inv.s0, x.shape),
+                               jnp.broadcast_to(inv.s1, x.shape))
+            y = beaver.mul(x, invb, self.dealer)
+            gb = ShareTensor(jnp.broadcast_to(p["g"].s0, x.shape),
+                             jnp.broadcast_to(p["g"].s1, x.shape))
+            return beaver.mul(y, gb, self.dealer)
+
+    def head(self, x):
+        cfg, pm = self.cfg, self.pm
+        with comm.tag("adaptation"):
+            if cfg.family == "encoder":
+                pooled = self.linear(pm.wp["pooler"], x[:, 0, :])
+                t = self.tanh(pooled)
+                out = self.linear(pm.wp["classifier"], t)
+                return ring.decode(reconstruct(out), dtype=P32)
+            # final_norm applies unconditionally for decoders, exactly
+            # like the plaintext reference (models/layers.lm_head path)
+            x = self.norm(pm.wp["final_norm"], x, tag="adaptation")
+            logits = self.linear(pm.wp["head"], x)
+        return ring.decode(reconstruct(logits), dtype=P32)

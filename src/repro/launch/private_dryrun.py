@@ -35,7 +35,7 @@ from repro.models.registry import get_api
 
 
 def run(model: str, multi_pod: bool, batch: int, seq: int,
-        out_dir: str | None):
+        out_dir: str | None, mode: str = "centaur"):
     cfg = get_config(model)
     api = get_api(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -43,7 +43,7 @@ def run(model: str, multi_pod: bool, batch: int, seq: int,
 
     def step(tokens):
         params = api.init_params(cfg, key)          # traced, no alloc
-        pm = build_private_model(cfg, params, key, mode="centaur")
+        pm = build_private_model(cfg, params, key, mode=mode)
         return private_forward(pm, tokens)
 
     tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
@@ -58,7 +58,8 @@ def run(model: str, multi_pod: bool, batch: int, seq: int,
     mem = mem_analysis(compiled)
     cost = compiled.cost_analysis() or {}
     res = {
-        "model": model, "mesh": "2x16x16" if multi_pod else "16x16",
+        "model": model, "mode": mode,
+        "mesh": "2x16x16" if multi_pod else "16x16",
         "batch": batch, "seq": seq, "compile_s": round(dt, 1),
         "protocol_bytes": led.total_bytes(),
         "protocol_rounds": led.total_rounds(),
@@ -71,7 +72,8 @@ def run(model: str, multi_pod: bool, batch: int, seq: int,
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(
-                out_dir, f"private_{model}_{res['mesh']}.json"),
+                out_dir,
+                f"private_{mode}_{model}_{res['mesh']}.json"),
                 "w") as f:
             json.dump(res, f, indent=1)
     return res
@@ -80,12 +82,19 @@ def run(model: str, multi_pod: bool, batch: int, seq: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="gpt2-base")
+    ap.add_argument("--mode", default="centaur",
+                    choices=["centaur", "smpc", "mpcformer",
+                             "secformer"],
+                    help="PPTI mode to lower at pod scale (the suite "
+                         "executor makes every share mode one SPMD "
+                         "program)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args(argv)
-    run(args.model, args.multi_pod, args.batch, args.seq, args.out)
+    run(args.model, args.multi_pod, args.batch, args.seq,
+        args.out, mode=args.mode)
 
 
 if __name__ == "__main__":

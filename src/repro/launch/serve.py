@@ -1,10 +1,17 @@
-"""Serving launcher: plaintext continuous batching or Centaur private
-inference for any --arch.
+"""Serving launcher: plaintext continuous batching or private serving
+in any PPTI mode for any --arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --reduced --requests 6
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-tiny \
         --mode centaur
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-tiny \
+        --mode smpc --requests 2
+
+Servable modes (centaur/smpc/mpcformer/secformer) on dense archs run
+the slot-batched private engine; --mode permute (nothing is hidden, so
+there is nothing to serve) and non-dense families fall back to one
+private forward, jitted where the suite supports it.
 """
 from __future__ import annotations
 
@@ -12,7 +19,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -25,25 +31,33 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-tiny")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--mode", choices=["plain", "centaur"],
+    ap.add_argument("--mode", choices=["plain", "centaur", "smpc",
+                                       "mpcformer", "secformer",
+                                       "permute"],
                     default="plain")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=48)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(0))
 
-    if args.mode == "plain":
-        eng = ServingEngine(cfg, params, max_slots=4, max_len=128)
+    def random_prompts():
         key = jax.random.key(1)
-        rids = []
-        for i in range(args.requests):
+        prompts = []
+        for _ in range(args.requests):
             key, k = jax.random.split(key)
-            prompt = list(np.asarray(jax.random.randint(
-                k, (4,), 0, cfg.vocab_size)))
-            rids.append(eng.submit(prompt, max_new_tokens=args.max_new))
+            prompts.append(list(np.asarray(jax.random.randint(
+                k, (4,), 0, cfg.vocab_size))))
+        return prompts
+
+    if args.mode == "plain":
+        eng = ServingEngine(cfg, params, max_slots=4,
+                            max_len=args.max_len)
+        rids = [eng.submit(p, max_new_tokens=args.max_new)
+                for p in random_prompts()]
         t0 = time.monotonic()
         outs = eng.run_to_completion()
         dt = time.monotonic() - t0
@@ -54,17 +68,46 @@ def main(argv=None):
             print(f"  req {rid}: {outs[rid]}")
         return
 
-    from repro.core.private_model import (build_private_model,
-                                          private_forward)
-    pm = build_private_model(cfg, params, jax.random.key(2),
-                             mode="centaur")
-    tokens = jax.random.randint(jax.random.key(3), (1, 16), 0,
-                                cfg.vocab_size)
+    servable = (args.mode != "permute" and cfg.family == "dense"
+                and not cfg.use_mla)
+    if not servable:
+        # permute hides nothing (no engine), and non-dense families
+        # have no KV-cache serving path yet: run one private forward
+        # (suite.jittable() decides jit vs the eager fallback)
+        from repro.core.private_model import (build_private_model,
+                                              private_forward)
+        pm = build_private_model(cfg, params, jax.random.key(2),
+                                 mode=args.mode)
+        tokens = jax.random.randint(jax.random.key(3), (1, 16), 0,
+                                    cfg.vocab_size)
+        with comm.ledger() as led:
+            logits = private_forward(pm, tokens, jit=True)
+        print(f"[{args.mode}] private forward ok: logits "
+              f"{np.asarray(logits).shape}, comm "
+              f"{led.total_bytes() / 1e6:.1f} MB / "
+              f"{led.total_rounds()} rounds")
+        return
+
+    from repro.serving.engine import PrivateServingEngine
+    eng = PrivateServingEngine(cfg, params, jax.random.key(2),
+                               mode=args.mode, max_slots=4,
+                               max_len=args.max_len)
     with comm.ledger() as led:
-        logits = private_forward(pm, tokens, jit=True)
-    print(f"private forward ok: logits {np.asarray(logits).shape}, "
+        rids = [eng.submit(p, max_new_tokens=args.max_new)
+                for p in random_prompts()]
+        t0 = time.monotonic()
+        outs, stats = eng.run_to_completion()
+        dt = time.monotonic() - t0
+    tok = sum(len(v) for v in outs.values())
+    print(f"[{args.mode}] served {len(rids)} requests / {tok} tokens "
+          f"in {dt:.2f}s ({tok / dt:.1f} tok/s), "
           f"comm {led.total_bytes() / 1e6:.1f} MB / "
           f"{led.total_rounds()} rounds")
+    for rid in rids:
+        st = stats[rid]
+        print(f"  req {rid}: {outs[rid]} "
+              f"({st['online_bits'] / 8e6:.1f} MB online, "
+              f"{st['rounds']} rounds)")
 
 
 if __name__ == "__main__":

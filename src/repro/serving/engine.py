@@ -136,16 +136,22 @@ class ServingEngine(RequestQueue):
 
 
 class PrivateServingEngine(RequestQueue):
-    """Continuous-batching greedy server behind the Centaur protocol.
+    """Continuous-batching greedy server behind any servable PPTI mode.
 
     The slot engine above, moved into the share domain: requests are
     admitted into free slots (private prefill writes that slot's padded
     share-cache rows), every tick decodes the whole active slot batch
     through ONE jitted batched private step per layer depth
-    (core.private_model.centaur_decode_step with slot-stacked padded KV
+    (core.private_model.private_decode_step with slot-stacked padded KV
     share caches and per-slot position/validity masks), finished
     requests are evicted and their slots reused.  `max_slots=1` is the
     sequential baseline: same code path, batch of one.
+
+    `mode=` picks the protocol suite: "centaur" (the paper) or the
+    SMPC baselines ("smpc"/"mpcformer"/"secformer") — all served by the
+    same executor, which is what makes the paper's centaur-vs-SMPC
+    serving throughput ratio measurable under identical conditions
+    (benchmarks/private_serving_bench.py --mode).
 
     One batched step bills the ambient ledger once for all slots, so
     each tick's events are split across the active requests with
@@ -157,14 +163,18 @@ class PrivateServingEngine(RequestQueue):
     vectorized offline dispatch per spec)."""
 
     def __init__(self, cfg: ModelConfig, params, key, *,
-                 max_slots: int = 4, max_len: int = 256,
-                 decode_jit: bool = True, lookahead: int = 4):
+                 mode: str = "centaur", max_slots: int = 4,
+                 max_len: int = 256, decode_jit: bool = True,
+                 lookahead: int = 4):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
         assert cfg.family == "dense" and not cfg.use_mla, \
             "private serving covers the dense KV-cache decode path"
+        assert mode in ("centaur", "smpc", "mpcformer", "secformer"), \
+            f"no share-domain serving path for mode {mode!r}"
         super().__init__()
         self.cfg = cfg
+        self.mode = mode
         self.max_slots = max_slots
         self.max_len = max_len
         self.decode_jit = decode_jit
@@ -172,7 +182,7 @@ class PrivateServingEngine(RequestQueue):
         self._comm = _comm
         self._pmod = _pm
         self.pm = _pm.build_private_model(cfg, params, key,
-                                          mode="centaur", use_pool=True)
+                                          mode=mode, use_pool=True)
         self.slots: list[Request | None] = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int32)
         self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
@@ -194,7 +204,7 @@ class PrivateServingEngine(RequestQueue):
         assert len(req.prompt) < self.max_len, "prompt fills the slot"
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         with self._comm.ledger() as led:
-            logits, c1 = self._pmod.centaur_prefill(
+            logits, c1 = self._pmod.private_prefill(
                 self.pm, toks, max_len=self.max_len,
                 jit=self.decode_jit)
         # splice the request's padded share-cache rows into its slot
@@ -224,7 +234,7 @@ class PrivateServingEngine(RequestQueue):
             [jax.tree.map(lambda a: a.take(idxs, axis=0), layer)
              for layer in self.caches]
         with self._comm.ledger() as tick:
-            logits, sub = self._pmod.centaur_decode_step(
+            logits, sub = self._pmod.private_decode_step(
                 self.pm, sub, toks, pos, jit=self.decode_jit,
                 lookahead=self.lookahead)
         self.caches = sub if full_batch else [

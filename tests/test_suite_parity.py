@@ -1,0 +1,168 @@
+"""Protocol-suite parity (DESIGN.md §8).
+
+The shared executor must be a pure refactor of every mode's forward:
+greedy tokens decoded through the slot KV-cache path equal the mode's
+own full-sequence forward (and the plaintext reference where the mode
+computes the exact function), on plain MHA and GQA+SwiGLU+RoPE shapes,
+and eager vs jitted suite runs bill bit-identical ledgers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm
+from repro.core.private_model import (build_private_model,
+                                      private_decode_step,
+                                      private_forward, private_prefill)
+from repro.models.registry import get_api
+
+KEY = jax.random.key(11)
+PROMPT = [1, 2, 3]
+N_NEW = 2
+MAXLEN = 8
+SHARE_MODES = ("centaur", "smpc", "mpcformer", "secformer")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, KEY)
+
+
+def _decode_greedy(cfg, params, mode, prompt, n_new, jit=True):
+    """Greedy decode through the executor's prefill/decode path."""
+    pm = build_private_model(cfg, params, KEY, mode=mode, use_pool=jit)
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits, caches = private_prefill(pm, toks, max_len=MAXLEN, jit=jit)
+    out = [int(np.argmax(np.asarray(logits)[0]))]
+    for i in range(n_new - 1):
+        logits, caches = private_decode_step(
+            pm, caches, jnp.asarray([[out[-1]]], jnp.int32),
+            len(prompt) + i, jit=jit)
+        out.append(int(np.argmax(np.asarray(logits)[0])))
+    return out
+
+
+def _full_greedy(cfg, params, mode, prompt, n_new):
+    """Greedy decode by re-running the full-sequence forward (the
+    pre-executor 'legacy' serving strategy)."""
+    pm = build_private_model(cfg, params, KEY, mode=mode)
+    seq = list(prompt)
+    for _ in range(n_new):
+        full = private_forward(pm, jnp.asarray([seq], jnp.int32))
+        seq.append(int(np.argmax(np.asarray(full)[0, -1])))
+    return seq[len(prompt):]
+
+
+def _plain_greedy(cfg, params, prompt, n_new):
+    api = get_api(cfg)
+    from repro.models import layers as L
+    seq = list(prompt)
+    for _ in range(n_new):
+        hidden, _, _ = api.forward(
+            cfg, params, {"tokens": jnp.asarray([seq], jnp.int32)})
+        logits = L.lm_head(cfg, params.get("head", {}),
+                           params["embed"], hidden)
+        seq.append(int(np.argmax(np.asarray(logits)[0, -1])))
+    return seq[len(prompt):]
+
+
+@pytest.mark.parametrize("mode", SHARE_MODES)
+def test_decode_matches_full_forward(params, mode):
+    """Executor KV-cache greedy decode == the mode's full-sequence
+    forward; exact/near-exact modes also match plaintext greedy.
+
+    The smpc-family decode runs eagerly here (compiling the baselines'
+    NR-iteration stacks is minutes of XLA work; the jitted smpc decode
+    path is exercised end-to-end by the serving-engine test below,
+    and eager==jit billing by the ledger test)."""
+    jit = mode == "centaur"
+    dec = _decode_greedy(GPT2_TINY, params, mode, PROMPT, N_NEW,
+                         jit=jit)
+    full = _full_greedy(GPT2_TINY, params, mode, PROMPT, N_NEW)
+    assert dec == full, f"{mode}: decode diverged from full forward"
+    if mode in ("centaur", "smpc"):
+        # centaur computes the exact function; smpc's approximation
+        # stays argmax-faithful on this reference workload
+        assert dec == _plain_greedy(GPT2_TINY, params, PROMPT, N_NEW), \
+            f"{mode}: decode diverged from plaintext greedy"
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_gqa_swiglu_rope_decode_parity(mode):
+    """The executor owns GQA head grouping / SwiGLU / RoPE for every
+    suite: llama-style shapes decode the same tokens through the cache
+    path as through the full forward (centaur also == plaintext)."""
+    cfg = get_config("smollm-360m", reduced=True)
+    params = get_api(cfg).init_params(cfg, KEY)
+    # mixed prompt lengths for the exact mode; one length for the
+    # (much slower) approximate baseline
+    prompts = [[5, 6], [9, 8, 7]] if mode == "centaur" else [[9, 8, 7]]
+    for prompt in prompts:
+        dec = _decode_greedy(cfg, params, mode, prompt, N_NEW,
+                             jit=mode == "centaur")
+        assert dec == _full_greedy(cfg, params, mode, prompt, N_NEW), \
+            (mode, prompt)
+        if mode == "centaur":
+            assert dec == _plain_greedy(cfg, params, prompt, N_NEW), \
+                prompt
+
+
+def test_relu2_act_dispatch_centaur_exact():
+    """Squared-ReLU archs (minitron-4b) must run relu2 — not a silent
+    silu/gelu substitute — through the suite act dispatch; centaur
+    stays plaintext-exact.  (The smpc baseline runs its true relu2 too,
+    but its fixed-range inv-sqrt degrades on the resulting large
+    RMSNorm statistics — baseline-faithful, so not asserted.)"""
+    cfg = get_config("minitron-4b", reduced=True)
+    params = get_api(cfg).init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (1, 8), 0, cfg.vocab_size)
+    pm = build_private_model(cfg, params, KEY, mode="centaur")
+    out = np.asarray(private_forward(pm, tokens))[0, -1]
+    api = get_api(cfg)
+    from repro.models import layers as L
+    hidden, _, _ = api.forward(cfg, params, {"tokens": tokens})
+    plain = np.asarray(L.lm_head(cfg, params.get("head", {}),
+                                 params["embed"], hidden))[0, -1]
+    np.testing.assert_allclose(out, plain, atol=5e-2)
+    assert out.argmax(-1) == plain.argmax(-1)
+
+
+@pytest.mark.parametrize("mode", SHARE_MODES)
+def test_eager_vs_jit_ledger_bit_exact(params, mode):
+    """One executor, two execution strategies, one bill: the captured
+    static schedule must reproduce the eager ledger exactly."""
+    tokens = jax.random.randint(KEY, (1, 8), 0, GPT2_TINY.vocab_size)
+    pm_e = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    with comm.ledger() as led_e:
+        private_forward(pm_e, tokens)
+    pm_j = build_private_model(GPT2_TINY, params, KEY, mode=mode,
+                               use_pool=True)
+    with comm.ledger() as led_j:
+        private_forward(pm_j, tokens, jit=True)
+    assert led_e.total_bits() == led_j.total_bits()
+    assert led_e.total_rounds() == led_j.total_rounds()
+    # offline (dealer) traffic is intentionally NOT compared: the
+    # vectorized pool generates batches ahead of demand, so its
+    # generation-time billing legitimately differs from the lazy
+    # dealer's exact-demand billing (DESIGN.md §5)
+
+
+def test_smpc_engine_serves_plaintext_identical_tokens(params):
+    """The acceptance bar of the suite refactor: the SMPC baseline,
+    served through the SAME slot engine and executor as centaur,
+    produces tokens identical to the plaintext greedy reference."""
+    from repro.serving.engine import PrivateServingEngine, ServingEngine
+    prompts = [[1, 2, 3], [7, 8]]
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, mode="smpc",
+                               max_slots=2, max_len=MAXLEN + 4)
+    rids = [eng.submit(p, max_new_tokens=N_NEW) for p in prompts]
+    outs, stats = eng.run_to_completion()
+    peng = ServingEngine(GPT2_TINY, params, max_slots=2,
+                         max_len=MAXLEN + 4)
+    prids = [peng.submit(p, max_new_tokens=N_NEW) for p in prompts]
+    pouts = peng.run_to_completion()
+    assert [outs[r] for r in rids] == [pouts[r] for r in prids]
+    # attribution still sum-conserving under the smpc suite
+    assert all(s["online_bits"] > 0 for s in stats.values())
