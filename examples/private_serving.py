@@ -44,9 +44,12 @@ def main():
         print(f"  req {rid}: {outs[rid]}")
 
     # ---- 2. private continuous batching (Centaur slot engine) ------------
+    # buckets="pow2": mixed-length prompts compile at most len(buckets)
+    # prefill programs + 1 decode program (DESIGN.md §9) instead of one
+    # prefill program per distinct length
     from repro.serving.engine import PrivateServingEngine
     peng = PrivateServingEngine(CFG, params, key, max_slots=4,
-                                max_len=MAX_LEN)
+                                max_len=MAX_LEN, buckets="pow2")
     for p in PROMPTS:                       # warm-up round: jit compiles
         peng.submit(p, max_new_tokens=N_NEW)
     peng.run_to_completion()
@@ -56,8 +59,12 @@ def main():
         outs_p, stats = peng.run_to_completion()
         dt = time.monotonic() - t0
     total = sum(len(outs_p[r]) for r in rids_p)
+    cs = peng.compile_stats()
     print(f"[centaur] continuous batching: {len(PROMPTS)} requests, "
-          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s)")
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s; "
+          f"{len({len(p) for p in PROMPTS})} prompt lengths -> "
+          f"{cs['prefill_programs']}+{cs['decode_programs']} compiled "
+          f"programs via buckets {peng.buckets})")
     for rid in rids_p[:2]:
         st = stats[rid]
         print(f"  req {rid}: {outs_p[rid]}  "
@@ -73,7 +80,7 @@ def main():
 
     # sequential baseline: same engine, one slot — bit-identical tokens
     seng = PrivateServingEngine(CFG, params, key, max_slots=1,
-                                max_len=MAX_LEN)
+                                max_len=MAX_LEN, buckets="pow2")
     for p in PROMPTS:                       # warm-up round: jit compiles
         seng.submit(p, max_new_tokens=N_NEW)
     seng.run_to_completion()

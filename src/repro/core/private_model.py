@@ -126,8 +126,11 @@ def permute_forward(pm: PrivateModel, tokens):
 # =============================================================================
 
 def private_prefill(pm: PrivateModel, tokens, max_len: int | None = None,
-                    jit: bool = False):
-    return _exec.prefill(pm, tokens, max_len=max_len, jit=jit)
+                    jit: bool = False, lens=None):
+    """Private prefill; `lens` (B,) true prompt lengths switches on the
+    bucketed padded path (tokens pre-padded to a public bucket length,
+    logits gathered at the last real token) — see executor.prefill."""
+    return _exec.prefill(pm, tokens, max_len=max_len, jit=jit, lens=lens)
 
 
 def private_decode_step(pm: PrivateModel, caches, token, pos,

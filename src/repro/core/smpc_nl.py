@@ -64,8 +64,8 @@ def smpc_reciprocal(x: ShareTensor, dealer, iters: int = 10) -> ShareTensor:
     return y
 
 
-def smpc_inv_sqrt(x: ShareTensor, dealer, iters: int = 8) -> ShareTensor:
-    """1/sqrt(x) via NR: y <- y (3 - x y^2) / 2, exp-based init."""
+def _nr_inv_sqrt(x: ShareTensor, dealer, iters: int) -> ShareTensor:
+    """The bare NR ladder: y <- y (3 - x y^2) / 2, exp-based init."""
     e = smpc_exp(ShareTensor(-(x.s0 >> 1) - ring.encode(0.2),
                              -(x.s1 >> 1)), dealer)
     y = e.mul_public(ring.encode(2.2)) + ring.encode(0.2)
@@ -76,6 +76,49 @@ def smpc_inv_sqrt(x: ShareTensor, dealer, iters: int = 8) -> ShareTensor:
         y = beaver.mul(y, ShareTensor(three - xy2.s0, -xy2.s1),
                        dealer).mul_public(ring.encode(0.5))
     return y
+
+
+def smpc_inv_sqrt(x: ShareTensor, dealer, iters: int = 8,
+                  bound: float | None = None) -> ShareTensor:
+    """1/sqrt(x) via NR: y <- y (3 - x y^2) / 2, exp-based init.
+
+    The bare ladder (bound=None, CrypTen's fixed-range behavior)
+    converges only for x in roughly [1e-2, 64]: above ~100 the
+    exp-based init lands outside the NR basin and the iteration
+    diverges — the documented relu2-arch failure, where norm
+    statistics reach the thousands.
+
+    `bound`, a PUBLIC upper bound on x (per-config architecture
+    knowledge, not data), widens the domain with a power-of-two
+    pre-scale: inv_sqrt(2^{2k} x') = 2^{-k} inv_sqrt(x'), k chosen so
+    bound / 2^{2k} <= 64.  The scale and its inverse are local
+    arithmetic share shifts — no communication.  A single shifted
+    ladder cannot cover the whole range, though: the down-shift drops
+    the 2k low bits that small inputs live in (and re-running the NR
+    at a finer fixed point instead would put y^2 * 2^{2 frac} within
+    reach of 2^63, turning the +-1 LSB local-truncation error model
+    into catastrophic wrap failures at ~0.1% per element).  So both
+    ladders run — the bare one (exact where x < 64, more iterations to
+    reach large 1/sqrt outputs) and the pre-scaled one (valid on
+    [64, bound], where the dropped low bits are noise) — and ONE
+    billed comparison against the public threshold 64 selects per
+    element, the module's standard oracle-selection shortcut."""
+    if bound is None or bound <= 64.0:
+        return _nr_inv_sqrt(x, dealer, iters)
+    # the 2k-bit pre-shift eats fractional bits: past 2^16 the shifted
+    # ladder's lower edge (64 / 4^k) drops below the NR's convergent
+    # range / fixed-point resolution and outputs silently collapse
+    assert bound <= 65536.0, \
+        f"inv_sqrt pre-scale supports bounds up to 2^16, got {bound}"
+    k = int(np.ceil((np.log2(float(bound)) - 6.0) / 2.0))
+    lo = _nr_inv_sqrt(x, dealer, iters + 8)
+    hi = _nr_inv_sqrt(ShareTensor(x.s0 >> (2 * k), x.s1 >> (2 * k)),
+                      dealer, iters)
+    hi = ShareTensor(hi.s0 >> k, hi.s1 >> k)
+    _bill_compare(comm.numel(x.shape), "inv_sqrt_range")
+    small = _oracle(x) < 64.0
+    return ShareTensor(jnp.where(small, lo.s0, hi.s0),
+                       jnp.where(small, lo.s1, hi.s1))
 
 
 def smpc_max(x: ShareTensor, dealer, axis: int = -1) -> ShareTensor:
@@ -159,7 +202,8 @@ def smpc_silu(x: ShareTensor, dealer) -> ShareTensor:
 
 def smpc_layernorm(x: ShareTensor, gamma_sh: ShareTensor,
                    beta_sh: ShareTensor, dealer,
-                   eps: float = 1e-5) -> ShareTensor:
+                   eps: float = 1e-5,
+                   var_bound: float | None = None) -> ShareTensor:
     d = x.shape[-1]
     mu = ShareTensor(jnp.sum(x.s0, -1, keepdims=True),
                      jnp.sum(x.s1, -1, keepdims=True)).mul_public(
@@ -170,7 +214,7 @@ def smpc_layernorm(x: ShareTensor, gamma_sh: ShareTensor,
     var = ShareTensor(jnp.sum(sq.s0, -1, keepdims=True),
                       jnp.sum(sq.s1, -1, keepdims=True)).mul_public(
                           ring.encode(1.0 / d)) + ring.encode(eps)
-    inv = smpc_inv_sqrt(var, dealer)
+    inv = smpc_inv_sqrt(var, dealer, bound=var_bound)
     invb = ShareTensor(jnp.broadcast_to(inv.s0, x.shape),
                        jnp.broadcast_to(inv.s1, x.shape))
     y = beaver.mul(c, invb, dealer)

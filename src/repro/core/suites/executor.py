@@ -74,6 +74,20 @@ def slot_write(cache, new, pos):
     return upd(cache, new)
 
 
+def rows_at(x, idx):
+    """Gather one sequence row per batch element: x (B, S, ...) at
+    per-row positions idx (B,) -> (B, 1, ...).  Bucketed prefill uses
+    this to read the last-REAL-token hidden state at the true prompt
+    length instead of the padded position -1."""
+    ix = idx.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    def g(a):
+        return jnp.take_along_axis(a, ix, axis=1)
+    if isinstance(x, ShareTensor):
+        return ShareTensor(g(x.s0), g(x.s1))
+    return g(x)
+
+
 def pad_cache_to(c, max_len: int):
     pad = [(0, 0)] * c.ndim
     pad[1] = (0, max_len - c.shape[1])
@@ -87,14 +101,17 @@ def pad_cache_to(c, max_len: int):
 # =============================================================================
 
 def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
-              want_cache: bool = False, expose: bool = False):
+              want_cache: bool = False, expose: bool = False, valid=None):
     """The paper's attention flow in any mode.
 
     Three call shapes share this body:
       * full sequence (``cache is None``): self- or cross-attention
         (``kv`` = encoder output) over the whole prompt;
       * prefill (``want_cache=True``): same, returning the K/V state for
-        the caller to pad into a slot cache;
+        the caller to pad into a slot cache; a bucket-padded prefill
+        passes ``valid`` — an explicit (B, S, T) per-request validity
+        (``masking.prefill_valid``) that overrides the static causal
+        pattern so dead padded prompt columns get zero softmax mass;
       * slot decode (``cache``+``pos``): new K/V rows are written at
         per-slot offsets and queries attend over the whole padded axis
         under the shared validity mask.
@@ -139,6 +156,8 @@ def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
     o1 = suite.scale(o1, dh ** -0.5)
     if cache is not None:
         o1 = suite.mask(o1, masking.slot_valid(q_pos, L)[:, None, None])
+    elif valid is not None:
+        o1 = suite.mask(o1, valid[:, None, None])
     elif causal:
         o1 = suite.mask(o1, masking.causal_valid(S, L))
     vt = v_all.transpose(0, 2, 1, 3)                      # (B,hk,L,dh)
@@ -423,12 +442,12 @@ def init_slot_caches(pm: PrivateModel, n_slots: int, max_len: int):
             for _ in range(cfg.num_layers)]
 
 
-def _prefill_layer(suite, p, x):
+def _prefill_layer(suite, p, x, valid=None):
     """One transformer layer at prompt length, returning the K/V state
     for the slot cache (serving hot path: never exposes)."""
     return block(suite, p, x,
                  lambda h: attention(suite, p["attn"], h, causal=True,
-                                     want_cache=True))
+                                     want_cache=True, valid=valid))
 
 
 def _decode_layer(suite, p, x, cache, pos):
@@ -440,14 +459,28 @@ def _decode_layer(suite, p, x, cache, pos):
 
 
 def prefill(pm: PrivateModel, tokens, max_len: int | None = None,
-            jit: bool = False):
+            jit: bool = False, lens=None):
     """Private prefill in any servable mode: returns (last-token logits,
     per-layer K/V share caches padded to `max_len`), ready for
     `decode_step` or to be spliced into a slot of a stacked serving
-    cache.  Attention runs at prompt length (comm ∝ S^2, as the
-    sequential protocol bills); only the returned cache is padded —
-    padding shares are zeros.  jit=True compiles the layer stack per
-    (B, S) like the decode path."""
+    cache.
+
+    ``lens=None`` (exact-length): attention runs at prompt length
+    (comm ∝ S^2, as the sequential protocol bills) under the static
+    causal mask and the last-position logits are returned; jit=True
+    compiles one program per (B, S) like the decode path.
+
+    ``lens`` = (B,) true prompt lengths (bucketed padded prefill):
+    `tokens` is the bucket-padded batch, ``masking.prefill_valid``
+    kills padded prompt columns in every layer's attention, and logits
+    are gathered at the last REAL token (``lens - 1``).  `lens` is a
+    traced input, so ONE compiled program per (B, bucket, max_len)
+    serves every length mix inside the bucket — the comm bill is the
+    padded bucket's S^2 (the bucketing overhead the serving bench
+    reports).  Padded rows write garbage K/V above ``lens``; decode's
+    slot-validity mask keeps those rows dead until they are overwritten
+    at their true position.
+    """
     suite = get_suite(pm)
     _assert_servable(suite)
     cfg = pm.cfg
@@ -455,36 +488,41 @@ def prefill(pm: PrivateModel, tokens, max_len: int | None = None,
     if max_len is None:
         max_len = S + 1
     assert max_len >= S, (max_len, S)
+    if lens is not None:
+        lens = jnp.asarray(lens, jnp.int32)
+
+    def run_layers(sh, p, tok, ln):
+        x = sh.embed(tok, jnp.arange(S))
+        valid = None if ln is None else masking.prefill_valid(ln, S)
+        ks_, vs_ = [], []
+        for i in range(cfg.num_layers):
+            x, nc = _prefill_layer(sh, p[i], x, valid)
+            ks_.append(pad_cache_to(nc["k"], max_len))
+            vs_.append(pad_cache_to(nc["v"], max_len))
+        last = x[:, -1:, :] if ln is None else rows_at(x, ln - 1)
+        return sh.head(last), ks_, vs_
+
     if jit:
-        def body(shadow, p, tok):
-            sh = get_suite(shadow)
-            x = sh.embed(tok, jnp.arange(S))
-            ks_, vs_ = [], []
-            for i in range(cfg.num_layers):
-                x, nc = _prefill_layer(sh, p[i], x)
-                ks_.append(pad_cache_to(nc["k"], max_len))
-                vs_.append(pad_cache_to(nc["v"], max_len))
-            return sh.head(x[:, -1:, :]), ks_, vs_
+        def body(shadow, p, state):
+            tok, ln = state if lens is not None else (state, None)
+            return run_layers(get_suite(shadow), p, tok, ln)
 
         # max_len shapes the padded outputs but not the traced inputs,
-        # so it must be part of the program cache key
+        # so it must be part of the program cache key (the padded path
+        # differs from exact-length by its (tokens, lens) pytree)
+        state = tokens if lens is None else (tokens, lens)
         jl = jit_layer_for(pm, f"{pm.mode}_prefill:{max_len}", body,
-                           pm.wp["layers"], tokens)
+                           pm.wp["layers"], state)
         pool = pm.triple_pool()
         pool.prefetch(jl.specs)
         triples = [pool.take(s) for s in jl.specs]
         comm.replay(jl.events, online_only=True)
-        logits, ks_, vs_ = jl.fn(pm.wp["layers"], tokens, pm.ks(),
+        logits, ks_, vs_ = jl.fn(pm.wp["layers"], state, pm.ks(),
                                  triples)
         return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
 
-    x = suite.embed(tokens, jnp.arange(S))
-    caches = []
-    for i in range(cfg.num_layers):
-        x, nc = _prefill_layer(suite, pm.wp["layers"][i], x)
-        caches.append({"k": pad_cache_to(nc["k"], max_len),
-                       "v": pad_cache_to(nc["v"], max_len)})
-    return suite.head(x[:, -1:, :]), caches
+    logits, ks_, vs_ = run_layers(suite, pm.wp["layers"], tokens, lens)
+    return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
 
 
 def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,

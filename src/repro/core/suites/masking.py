@@ -79,3 +79,23 @@ def slot_valid(q_pos, L: int):
     (t > pos) and rows past the slot's occupancy are dead.
     """
     return jnp.arange(L)[None, None, :] <= q_pos[:, :, None]
+
+
+def prefill_valid(lens, S: int):
+    """(B, S, S) validity for bucket-padded prefill.
+
+    Key column t is live for query row s of request b iff it is causal
+    (``t <= s``) AND a real prompt token (``t < lens[b]``), so padded
+    prompt columns carry exactly zero softmax mass in every suite.
+    Padded *query* rows (s >= lens[b]) keep their live real columns:
+    their softmax stays well-defined (no all-dead row), and the garbage
+    K/V they write into cache rows >= lens[b] stays invisible — decode's
+    ``slot_valid`` masks t > pos until the row is overwritten by the
+    token actually decoded at that position.
+
+    ``lens`` is a traced (B,) input, NOT a static shape: one compiled
+    prefill program per bucket serves every real length inside it.
+    """
+    t = jnp.arange(S)
+    causal = t[None, None, :] <= t[None, :, None]
+    return causal & (t[None, None, :] < lens[:, None, None])

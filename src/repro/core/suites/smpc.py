@@ -27,6 +27,18 @@ from .base import ShareSuite, encrypt_tokens
 P32 = jnp.float32
 
 
+def norm_stat_bound(cfg) -> float | None:
+    """Public per-config upper bound on norm-input statistics
+    (variance / mean-squares) passed to smpc_inv_sqrt's power-of-two
+    pre-scale.  Architecture knowledge, not data: squared-ReLU MLPs
+    (nemotron/minitron) square the residual stream, pushing norm
+    statistics into the thousands where the bare fixed-range NR
+    diverges; every other activation family stays well inside the
+    default [1e-2, 64] window, so None keeps the baseline-faithful
+    unscaled iteration (and its exact historical ledger)."""
+    return 4096.0 if cfg.act == "relu2" else None
+
+
 def prepare_shared(cfg, params, ks):
     """Secret-share every parameter, arranged in the executor's
     canonical layout (same keys as the centaur preparation)."""
@@ -144,9 +156,9 @@ class SmpcSuite(ShareSuite):
         cfg = self.cfg
         with comm.tag(tag):
             if cfg.norm_type == "layernorm":
-                return smpc_nl.smpc_layernorm(x, p["g"], p["b"],
-                                              self.dealer,
-                                              eps=cfg.norm_eps)
+                return smpc_nl.smpc_layernorm(
+                    x, p["g"], p["b"], self.dealer, eps=cfg.norm_eps,
+                    var_bound=norm_stat_bound(cfg))
             # RMSNorm: reuse LN machinery without mean subtraction
             sq = beaver.square(x, self.dealer)
             ms = ShareTensor(jnp.sum(sq.s0, -1, keepdims=True),
@@ -154,7 +166,8 @@ class SmpcSuite(ShareSuite):
                              ).mul_public(
                 ring.encode(1.0 / x.shape[-1])) \
                 + ring.encode(cfg.norm_eps)
-            inv = smpc_nl.smpc_inv_sqrt(ms, self.dealer)
+            inv = smpc_nl.smpc_inv_sqrt(ms, self.dealer,
+                                        bound=norm_stat_bound(cfg))
             invb = ShareTensor(jnp.broadcast_to(inv.s0, x.shape),
                                jnp.broadcast_to(inv.s1, x.shape))
             y = beaver.mul(x, invb, self.dealer)

@@ -38,19 +38,30 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--buckets", default="pow2",
+                    help="prefill length buckets for the private engine:"
+                         " 'pow2' (default ladder), 'none' (exact-length"
+                         " prefill, one compile per distinct prompt"
+                         " length), or comma-separated lengths")
     args = ap.parse_args(argv)
+    buckets = (None if args.buckets == "none" else
+               "pow2" if args.buckets == "pow2" else
+               tuple(int(b) for b in args.buckets.split(",")))
 
     cfg = get_config(args.arch, reduced=args.reduced)
     api = get_api(cfg)
     params = api.init_params(cfg, jax.random.key(0))
 
     def random_prompts():
+        # mixed lengths on purpose: realistic traffic for the bucketed
+        # prefill path (exact-length engines compile per length)
         key = jax.random.key(1)
         prompts = []
-        for _ in range(args.requests):
+        for i in range(args.requests):
             key, k = jax.random.split(key)
+            n = min(3 + (5 * i) % 11, args.max_len - 1)
             prompts.append(list(np.asarray(jax.random.randint(
-                k, (4,), 0, cfg.vocab_size))))
+                k, (n,), 0, cfg.vocab_size))))
         return prompts
 
     if args.mode == "plain":
@@ -91,7 +102,7 @@ def main(argv=None):
     from repro.serving.engine import PrivateServingEngine
     eng = PrivateServingEngine(cfg, params, jax.random.key(2),
                                mode=args.mode, max_slots=4,
-                               max_len=args.max_len)
+                               max_len=args.max_len, buckets=buckets)
     with comm.ledger() as led:
         rids = [eng.submit(p, max_new_tokens=args.max_new)
                 for p in random_prompts()]
@@ -99,15 +110,22 @@ def main(argv=None):
         outs, stats = eng.run_to_completion()
         dt = time.monotonic() - t0
     tok = sum(len(v) for v in outs.values())
+    cs = eng.compile_stats()
     print(f"[{args.mode}] served {len(rids)} requests / {tok} tokens "
           f"in {dt:.2f}s ({tok / dt:.1f} tok/s), "
           f"comm {led.total_bytes() / 1e6:.1f} MB / "
-          f"{led.total_rounds()} rounds")
+          f"{led.total_rounds()} rounds, "
+          f"{cs['prefill_programs']}+{cs['decode_programs']} compiled "
+          f"prefill+decode programs over {cs['prefills']} prefills / "
+          f"{cs['decode_ticks']} ticks")
     for rid in rids:
         st = stats[rid]
+        flags = "".join([", truncated" if st["truncated"] else "",
+                         ", prompt-truncated"
+                         if st["prompt_truncated"] else ""])
         print(f"  req {rid}: {outs[rid]} "
               f"({st['online_bits'] / 8e6:.1f} MB online, "
-              f"{st['rounds']} rounds)")
+              f"{st['rounds']} rounds{flags})")
 
 
 if __name__ == "__main__":

@@ -25,19 +25,37 @@ class Request:
     prompt: list            # token ids
     max_new_tokens: int = 16
     out: list = field(default_factory=list)
+    #: output cut short by slot capacity: the request was evicted at
+    #: pos == max_len - 1 before reaching max_new_tokens
+    truncated: bool = False
+    #: prompt cut to the shared length cap (max_len - 1) at submit time
+    prompt_truncated: bool = False
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new_tokens
 
 
+def pow2_buckets(max_len: int, lo: int = 8) -> tuple:
+    """Power-of-two prefill length-bucket ladder capped at `max_len`:
+    (lo, 2*lo, ..., max_len).  Every admissible prompt (<= max_len - 1
+    after the shared cap) fits the last bucket."""
+    out, b = [], lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
 class RequestQueue:
     """Shared slot-scheduler plumbing for the serving engines.
 
     Subclasses provide `slots`, `pos`, `max_len` and `_prefill_into`;
-    admission and eviction live here so the plaintext and private
-    engines can never drift apart on the rules that keep them
-    token-identical (same admit order, same length-cap truncation)."""
+    admission, eviction and the length-cap policy live here so the
+    plaintext and private engines can never drift apart on the rules
+    that keep them token-identical (same admit order, same length-cap
+    truncation)."""
 
     def __init__(self):
         self.queue: list[Request] = []
@@ -45,8 +63,23 @@ class RequestQueue:
         self._rid = itertools.count()
 
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        """Queue a request.  ONE shared length-cap policy for every
+        engine: a prompt longer than max_len - 1 is truncated to its
+        first max_len - 1 tokens (prefill plus at least one generated
+        token must fit the slot), and the request is flagged
+        `prompt_truncated` instead of crashing one engine and silently
+        overrunning the other."""
+        prompt = list(prompt)
+        # an empty prompt has no last-real-token to decode from: the
+        # exact-length path would crash late and the bucketed path
+        # would silently serve a fully-masked garbage hidden state
+        assert prompt, "empty prompt"
         rid = next(self._rid)
-        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        cap = self.max_len - 1
+        truncated = len(prompt) > cap
+        req = Request(rid, prompt[:cap], max_new_tokens,
+                      prompt_truncated=truncated)
+        self.queue.append(req)
         return rid
 
     def _admit(self):
@@ -60,8 +93,17 @@ class RequestQueue:
         for i, s in enumerate(self.slots):
             if s is not None and (s.done
                                   or self.pos[i] >= self.max_len - 1):
+                # slot-capacity eviction before max_new_tokens is a
+                # truncated output — flag it instead of dropping the
+                # request silently
+                if not s.done:
+                    s.truncated = True
+                self._on_finish(s)
                 self.finished.append(s)
                 self.slots[i] = None
+
+    def _on_finish(self, req: Request):
+        """Hook: engines surface per-request outcomes (e.g. stats)."""
 
 
 class ServingEngine(RequestQueue):
@@ -156,16 +198,30 @@ class PrivateServingEngine(RequestQueue):
     One batched step bills the ambient ledger once for all slots, so
     each tick's events are split across the active requests with
     comm.attribute — exact and sum-conserving, so per-request stats add
-    up to the global ledger and a single-slot run bills identically to
-    sequential serving.  Prefill runs per request and is billed to that
-    request directly.  The model's TriplePool stocks `lookahead` ticks
+    up to the global ledger and a single-slot (max_slots=1) run bills
+    identically to sequential serving.  Note the tick is always the
+    FULL slot width (see `step`), so at partial occupancy the dummy
+    rows' very real protocol traffic is amortized over the active
+    requests — per-request bits are occupancy-dependent, exactly like
+    bucketed prefill bills the padded bucket's S^2: padding cost is
+    billed to whoever the padding serves, never dropped.  Prefill runs
+    per request and is billed to that request directly.  The model's TriplePool stocks `lookahead` ticks
     of the recurring batched decode shapes ahead of time (one
-    vectorized offline dispatch per spec)."""
+    vectorized offline dispatch per spec).
+
+    `buckets` keys the compiled-program budget under mixed-length
+    traffic: None (the exact-length escape hatch) prefills at true
+    prompt length — one compiled program and one S^2 comm bill per
+    distinct length; "pow2" or an explicit ladder pads each prompt to
+    the smallest bucket >= its length, so the engine compiles at most
+    len(buckets) prefill programs + 1 decode program no matter how
+    lengths mix (`compile_stats()` verifies), at the cost of billing
+    the padded bucket's S^2 attention comm."""
 
     def __init__(self, cfg: ModelConfig, params, key, *,
                  mode: str = "centaur", max_slots: int = 4,
                  max_len: int = 256, decode_jit: bool = True,
-                 lookahead: int = 4):
+                 lookahead: int = 4, buckets=None):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
         assert cfg.family == "dense" and not cfg.use_mla, \
@@ -179,6 +235,15 @@ class PrivateServingEngine(RequestQueue):
         self.max_len = max_len
         self.decode_jit = decode_jit
         self.lookahead = lookahead
+        if buckets == "pow2":
+            buckets = pow2_buckets(max_len)
+        if buckets is not None:
+            buckets = tuple(sorted(int(b) for b in buckets))
+            assert buckets and buckets[-1] <= max_len, \
+                f"buckets {buckets} exceed max_len {max_len}"
+            assert buckets[-1] >= max_len - 1, \
+                "largest bucket must admit every capped prompt"
+        self.buckets = buckets
         self._comm = _comm
         self._pmod = _pm
         self.pm = _pm.build_private_model(cfg, params, key,
@@ -187,37 +252,72 @@ class PrivateServingEngine(RequestQueue):
         self.pos = np.zeros(max_slots, np.int32)
         self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
         self.stats: dict[int, dict] = {}
+        self.prefills = 0
+        self.decode_ticks = 0
 
     # ---- per-request comm accounting ---------------------------------------
     def _accumulate(self, req: Request, led):
         st = self.stats.setdefault(req.rid, {"rounds": 0,
                                              "online_bits": 0,
                                              "offline_bits": 0,
-                                             "tokens": 0})
+                                             "tokens": 0,
+                                             "truncated": False,
+                                             "prompt_truncated":
+                                                 req.prompt_truncated})
         st["rounds"] += led.total_rounds()
         st["online_bits"] += led.total_bits()
         st["offline_bits"] += led.total_bits(False) - led.total_bits()
         st["tokens"] = len(req.out)
 
+    def _on_finish(self, req: Request):
+        if req.rid in self.stats:
+            self.stats[req.rid]["truncated"] = req.truncated
+            self.stats[req.rid]["tokens"] = len(req.out)
+
+    def compile_stats(self) -> dict:
+        """Compiled-program + dispatch telemetry.  Program counts read
+        the model's jit cache (0 when decode_jit=False); the bucketing
+        guarantee is prefill_programs <= len(buckets) and
+        decode_programs <= 1 regardless of how prompt lengths mix."""
+        names = [k[0] for k in self.pm.jit_cache]
+        pfx = f"{self.mode}_"
+        return {"prefill_programs":
+                sum(n.startswith(pfx + "prefill") for n in names),
+                "decode_programs":
+                sum(n.startswith(pfx + "decode") for n in names),
+                "prefills": self.prefills,
+                "decode_ticks": self.decode_ticks}
+
     # ---- scheduler ----------------------------------------------------------
+    def _bucket_for(self, length: int) -> int:
+        return next(b for b in self.buckets if b >= length)
+
     def _prefill_into(self, slot: int, req: Request):
-        assert len(req.prompt) < self.max_len, "prompt fills the slot"
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        S = len(req.prompt)
+        assert S < self.max_len, "prompt fills the slot"  # submit() caps
+        toks, lens = req.prompt, None
+        if self.buckets is not None:
+            # pad to the smallest bucket; the pad token id is irrelevant
+            # (padded columns are masked dead, padded rows overwritten)
+            toks = toks + [0] * (self._bucket_for(S) - S)
+            lens = jnp.asarray([S], jnp.int32)
+        toks = jnp.asarray(toks, jnp.int32)[None, :]
         with self._comm.ledger() as led:
             logits, c1 = self._pmod.private_prefill(
                 self.pm, toks, max_len=self.max_len,
-                jit=self.decode_jit)
+                jit=self.decode_jit, lens=lens)
         # splice the request's padded share-cache rows into its slot
         self.caches = [
             jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
                          full_l, one_l)
             for full_l, one_l in zip(self.caches, c1)]
-        self.pos[slot] = len(req.prompt)
+        self.pos[slot] = S
         req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        self.prefills += 1
         self._accumulate(req, led)
 
     def step(self) -> bool:
-        """One tick: admit, decode the active slot batch, evict."""
+        """One tick: admit, decode the full slot width, evict."""
         self._admit()
         # prefill emits a token and may already satisfy the request
         # (max_new_tokens=1) — never decode a finished slot
@@ -225,26 +325,26 @@ class PrivateServingEngine(RequestQueue):
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return bool(self.queue)
-        idxs = jnp.asarray(active)
-        toks = jnp.asarray([[self.slots[i].out[-1]] for i in active],
-                           jnp.int32)
-        pos = jnp.asarray(self.pos[active], jnp.int32)
-        full_batch = len(active) == self.max_slots  # gather = identity
-        sub = self.caches if full_batch else \
-            [jax.tree.map(lambda a: a.take(idxs, axis=0), layer)
-             for layer in self.caches]
+        # decode the FULL slot width every tick: an empty slot runs a
+        # dummy token at pos 0 (its logits are discarded and its cache
+        # rows are rewritten wholesale by the next admit's prefill
+        # splice), so ONE (max_slots,)-shaped program serves every tick
+        # regardless of occupancy — a partial-batch gather would compile
+        # one program per active-slot count and break the
+        # len(buckets) + 1 program budget
+        toks = jnp.asarray([[s.out[-1]] if s is not None else [0]
+                            for s in self.slots], jnp.int32)
+        pos = jnp.asarray([int(self.pos[i]) if s is not None else 0
+                           for i, s in enumerate(self.slots)], jnp.int32)
         with self._comm.ledger() as tick:
-            logits, sub = self._pmod.private_decode_step(
-                self.pm, sub, toks, pos, jit=self.decode_jit,
+            logits, self.caches = self._pmod.private_decode_step(
+                self.pm, self.caches, toks, pos, jit=self.decode_jit,
                 lookahead=self.lookahead)
-        self.caches = sub if full_batch else [
-            jax.tree.map(lambda full, part: full.at[idxs].set(part),
-                         full_l, sub_l)
-            for full_l, sub_l in zip(self.caches, sub)]
         lg = np.asarray(logits)
-        for j, i in enumerate(active):
-            self.slots[i].out.append(int(lg[j, 0].argmax()))
+        for i in active:
+            self.slots[i].out.append(int(lg[i, 0].argmax()))
             self.pos[i] += 1
+        self.decode_ticks += 1
         # exact per-request attribution of the batched step's comm
         per = self._comm.attribute(tick.events,
                                    [self.slots[i].rid for i in active])

@@ -1,0 +1,199 @@
+"""Length-bucketed padded prefill (DESIGN.md §9).
+
+Bucketing must be a pure compile-count transform: padding a prompt to
+its power-of-two bucket (masked dead columns, last-REAL-token logits)
+changes neither the decoded tokens in any servable mode nor the online
+ledger's eager/jit agreement — while capping the engine's compiled
+programs at len(buckets) prefill + 1 decode under arbitrary length
+mixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm
+from repro.core.private_model import build_private_model, private_prefill
+from repro.core.suites import masking
+from repro.models.registry import get_api
+from repro.serving.engine import (PrivateServingEngine, ServingEngine,
+                                  pow2_buckets)
+
+KEY = jax.random.key(3)
+# >= 4 distinct prompt lengths; more requests than slots -> staggered
+# admissions; the 11-length prompt exercises the second bucket
+PROMPTS = [[1, 2, 3], [7, 8], [9, 10, 11, 12], [3, 1],
+           [5, 4, 5, 4, 5, 4, 5], [2, 3, 5, 7, 11, 13, 17, 2, 3, 5, 7]]
+# the smpc serving check uses a slim staggered workload hitting both
+# buckets: its eager softmax stacks are CPU-heavy, and the full
+# mixed-length serving contract is already pinned in centaur mode
+# (the bucketed-cache/decode mechanics are share-domain identical)
+PROMPTS_LITE = [[1, 2, 3], [2, 3, 5, 7, 11, 13, 17, 2, 3, 5, 7]]
+NNEW, MAXLEN = 3, 20
+SERVABLE = ("centaur", "smpc", "mpcformer", "secformer")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, KEY)
+
+
+def _serve(params, mode, buckets, decode_jit, slots=3, prompts=PROMPTS,
+           n_new=NNEW):
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, mode=mode,
+                               max_slots=slots, max_len=MAXLEN,
+                               decode_jit=decode_jit, buckets=buckets)
+    rids = [eng.submit(p, max_new_tokens=n_new) for p in prompts]
+    outs, stats = eng.run_to_completion()
+    return [outs[r] for r in rids], stats, eng
+
+
+def test_pow2_bucket_ladder():
+    assert pow2_buckets(20) == (8, 16, 20)
+    assert pow2_buckets(64) == (8, 16, 32, 64)
+    assert pow2_buckets(8) == (8,)
+
+
+def test_prefill_valid_mask_contents():
+    """Causal AND real-token: padded prompt columns are dead for every
+    query row; padded query rows keep their live real columns (the
+    softmax must stay well-defined)."""
+    v = np.asarray(masking.prefill_valid(jnp.asarray([2, 4]), 4))
+    # request 0: length 2 of 4 — columns 2,3 dead everywhere
+    assert v[0].tolist() == [[1, 0, 0, 0], [1, 1, 0, 0],
+                             [1, 1, 0, 0], [1, 1, 0, 0]]
+    # request 1: full length — plain causal
+    assert v[1].tolist() == np.tril(np.ones((4, 4))).tolist()
+
+
+def test_bucketed_tokens_match_exact_and_plaintext_centaur(params):
+    """Exact-protocol serving: bucketed-padded prefill + decode ==
+    exact-length prefill + decode == plaintext greedy, token for token,
+    under a mixed-length (>= 4 distinct lengths) staggered workload,
+    within the len(buckets) + 1 compiled-program budget."""
+    toks_b, _, eng = _serve(params, "centaur", "pow2", decode_jit=True)
+    toks_e, _, _ = _serve(params, "centaur", None, decode_jit=True)
+    assert toks_b == toks_e, \
+        "centaur: bucketed prefill changed the decoded tokens"
+    cs = eng.compile_stats()
+    assert cs["prefill_programs"] <= len(eng.buckets), cs
+    assert cs["decode_programs"] == 1, cs
+    peng = ServingEngine(GPT2_TINY, params, max_slots=3,
+                         max_len=MAXLEN)
+    prids = [peng.submit(p, max_new_tokens=NNEW) for p in PROMPTS]
+    pouts = peng.run_to_completion()
+    assert toks_b == [pouts[r] for r in prids], \
+        "centaur: bucketed serving diverged from plaintext greedy"
+
+
+def test_bucketed_tokens_match_exact_smpc(params):
+    """The share-softmax baseline end-to-end: bucketed serving decodes
+    the same tokens as exact-length serving (plaintext identity is the
+    exact mode's contract only — the approximate baselines flip
+    argmaxes on near-ties of their own accord, bucketed or not).
+    Eager: compiling the baselines' NR stacks is minutes of XLA;
+    jit-vs-eager parity is pinned by the ledger tests."""
+    toks_b, _, _ = _serve(params, "smpc", "pow2", decode_jit=False,
+                          slots=1, prompts=PROMPTS_LITE, n_new=2)
+    toks_e, _, _ = _serve(params, "smpc", None, decode_jit=False,
+                          slots=1, prompts=PROMPTS_LITE, n_new=2)
+    assert toks_b == toks_e, \
+        "smpc: bucketed prefill changed the decoded tokens"
+
+
+@pytest.mark.parametrize("mode", ("smpc", "mpcformer", "secformer"))
+def test_bucketed_prefill_logits_close_per_softmax_variant(params,
+                                                           mode):
+    """The masking contract per softmax variant (CrypTen limit-approx
+    exp and 2Quad): padded prompt columns must carry exactly zero mass,
+    so bucketed and exact-length prefill logits agree up to the
+    protocols' own fixed-point noise (a masking bug shifts logits by
+    O(1): dead columns at -MASK_MAGNITUDE would dominate the sum)."""
+    prompt = [1, 2, 3]
+    pm_e = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    le, _ = private_prefill(pm_e, jnp.asarray([prompt], jnp.int32),
+                            max_len=MAXLEN)
+    pm_b = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    lb, _ = private_prefill(
+        pm_b, jnp.asarray([prompt + [0] * 5], jnp.int32),
+        max_len=MAXLEN, lens=jnp.asarray([len(prompt)], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lb), np.asarray(le),
+                               atol=0.05)
+
+
+def test_compile_budget_under_mixed_lengths(params):
+    """The acceptance bar: a mixed-length run (>= 4 distinct lengths)
+    compiles at most len(buckets) prefill programs + 1 decode program,
+    while the exact-length escape hatch compiles one prefill program
+    per distinct length."""
+    _, _, eng_b = _serve(params, "centaur", "pow2", decode_jit=True)
+    cs = eng_b.compile_stats()
+    n_lengths = len({len(p) for p in PROMPTS})
+    assert n_lengths >= 4
+    assert cs["prefill_programs"] == 2   # buckets 8 and 16 used
+    assert cs["decode_programs"] == 1
+    assert cs["prefills"] == len(PROMPTS)
+    _, _, eng_e = _serve(params, "centaur", None, decode_jit=True)
+    assert eng_e.compile_stats()["prefill_programs"] == n_lengths
+
+
+def _ledger_pair(params, mode, prompt, bucket):
+    toks = prompt + [0] * (bucket - len(prompt))
+    toks = jnp.asarray([toks], jnp.int32)
+    lens = jnp.asarray([len(prompt)], jnp.int32)
+    pm_e = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    with comm.ledger() as led_e:
+        le, _ = private_prefill(pm_e, toks, max_len=MAXLEN, jit=False,
+                                lens=lens)
+    pm_j = build_private_model(GPT2_TINY, params, KEY, mode=mode,
+                               use_pool=True)
+    with comm.ledger() as led_j:
+        lj, _ = private_prefill(pm_j, toks, max_len=MAXLEN, jit=True,
+                                lens=lens)
+    return led_e, led_j, np.asarray(le), np.asarray(lj)
+
+
+def test_bucketed_prefill_ledger_bit_exact_per_bucket_centaur(params):
+    """Per-bucket eager-vs-jit online-ledger bit-exactness: the padded
+    path must bill the padded S^2 cost identically under capture/replay
+    and eager execution (and centaur's exact protocol must produce the
+    same argmax)."""
+    for bucket in (4, 8):
+        led_e, led_j, le, lj = _ledger_pair(params, "centaur",
+                                            [1, 2, 3], bucket)
+        assert led_e.total_bits() == led_j.total_bits(), bucket
+        assert led_e.total_rounds() == led_j.total_rounds(), bucket
+        assert le[0].argmax() == lj[0].argmax(), bucket
+
+
+def test_bucketed_prefill_ledger_bit_exact_smpc(params):
+    """Same contract for the share-softmax family (one bucket: each
+    smpc prefill program is tens of seconds of XLA)."""
+    led_e, led_j, _, _ = _ledger_pair(params, "smpc", [1, 2, 3], 8)
+    assert led_e.total_bits() == led_j.total_bits()
+    assert led_e.total_rounds() == led_j.total_rounds()
+
+
+def test_bucketed_prefill_bills_padded_cost(params):
+    """Bucketing is not free: the padded bucket's S^2 attention comm is
+    billed (the serving bench reports the overhead), strictly above the
+    exact-length bill and growing with the bucket."""
+    pm = build_private_model(GPT2_TINY, params, KEY, mode="centaur")
+    toks = jnp.asarray([[1, 2, 3]], jnp.int32)
+    with comm.ledger() as led_exact:
+        private_prefill(pm, toks, max_len=MAXLEN)
+    bits = []
+    for bucket in (4, 8):
+        led_e, _, _, _ = _ledger_pair(params, "centaur", [1, 2, 3],
+                                      bucket)
+        bits.append(led_e.total_bits())
+    assert led_exact.total_bits() < bits[0] < bits[1]
+
+
+def test_bucket_validation():
+    with pytest.raises(AssertionError):
+        PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=16,
+                             buckets=(8, 32))      # bucket > max_len
+    with pytest.raises(AssertionError):
+        PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=16,
+                             buckets=(4, 8))       # cannot admit cap

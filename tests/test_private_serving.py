@@ -132,6 +132,66 @@ def test_single_token_requests_and_length_cap(params):
     assert outs[r2] == pouts[p2], "length-cap truncation diverged"
 
 
+def test_overlong_prompt_shared_cap_policy(params):
+    """One shared length-cap policy in RequestQueue.submit: a prompt
+    longer than max_len - 1 is truncated to its first max_len - 1
+    tokens and flagged, identically in the private and plaintext
+    engines (the private engine used to crash on an assert; the
+    plaintext engine used to overrun its cache silently)."""
+    long_prompt = list(range(1, 40))
+    outs = {}
+    for name, eng in (("private",
+                       PrivateServingEngine(GPT2_TINY, params, KEY,
+                                            max_slots=2,
+                                            max_len=MAXLEN)),
+                      ("plain",
+                       ServingEngine(GPT2_TINY, params, max_slots=2,
+                                     max_len=MAXLEN))):
+        rid = eng.submit(long_prompt, max_new_tokens=2)
+        res = eng.run_to_completion()
+        outs[name] = (res[0] if isinstance(res, tuple) else res)[rid]
+        req = eng.finished[0]
+        assert req.prompt == long_prompt[:MAXLEN - 1], name
+        assert req.prompt_truncated, name
+    assert outs["private"] == outs["plain"], \
+        "length-cap truncation diverged between engines"
+    # an in-cap prompt is never flagged
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, max_slots=1,
+                               max_len=MAXLEN)
+    eng.submit([1, 2, 3], max_new_tokens=1)
+    _, stats = eng.run_to_completion()
+    st = next(iter(stats.values()))
+    assert not st["prompt_truncated"] and not st["truncated"]
+    # an empty prompt is rejected up front (no last-real-token exists;
+    # the bucketed path would otherwise serve masked garbage silently)
+    with pytest.raises(AssertionError):
+        eng.submit([], max_new_tokens=1)
+
+
+def test_truncated_flag_on_slot_capacity_eviction(params):
+    """A request evicted at pos == max_len - 1 before reaching
+    max_new_tokens is flagged `truncated` (it used to be dropped with
+    no signal) and its per-request stats say so; a normally-finished
+    request is not flagged."""
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, max_slots=2,
+                               max_len=MAXLEN)
+    r_cut = eng.submit([4, 5], max_new_tokens=50)   # hits the cap
+    r_ok = eng.submit([1, 2, 3], max_new_tokens=2)
+    outs, stats = eng.run_to_completion()
+    assert len(outs[r_cut]) < 50
+    assert stats[r_cut]["truncated"]
+    assert not stats[r_cut]["prompt_truncated"]
+    assert stats[r_cut]["tokens"] == len(outs[r_cut])
+    assert not stats[r_ok]["truncated"]
+    # same signal on the plaintext engine's finished Request
+    peng = ServingEngine(GPT2_TINY, params, max_slots=2,
+                         max_len=MAXLEN)
+    p_cut = peng.submit([4, 5], max_new_tokens=50)
+    pouts = peng.run_to_completion()
+    assert pouts[p_cut] == outs[r_cut]
+    assert next(r for r in peng.finished if r.rid == p_cut).truncated
+
+
 def test_padded_decode_matches_unbatched_private_forward(params):
     """The padded masked decode path reproduces the full private forward
     (and therefore the paper's fixed-point-exactness claim) token by
