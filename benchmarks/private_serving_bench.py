@@ -18,10 +18,14 @@ lengths) through the bucketed prefill path — the first realistic-
 traffic number for the impossible-trinity ratio: warm tokens/sec,
 compiled-program counts (asserted <= len(buckets) prefill + 1 decode),
 and the padded-vs-exact-length online comm bits (bucketing bills the
-padded bucket's S^2 attention cost; the overhead is itself measured).
+padded bucket's S^2 attention cost; the overhead is itself measured) —
+and a long-prompt workload through the chunked prefill path
+(DESIGN.md §10): ONE compiled chunk program, exact-length token parity,
+and online bits below the bucket ladder's padded-S^2 bill.
 
     PYTHONPATH=src python benchmarks/private_serving_bench.py \
-        [--smoke] [--mode centaur,smpc] [--mixed-lengths]
+        [--smoke] [--mode centaur,smpc] [--mixed-lengths] \
+        [--long-prompts]
 
 Writes BENCH_private_serving.json next to the repo root.
 """
@@ -60,6 +64,20 @@ def _mixed_prompts(n_requests: int, max_len: int):
     return [[(5 * i + j) % 300 + 1
              for j in range(min(MIXED_LENGTHS[i % len(MIXED_LENGTHS)],
                                 max_len - 1))]
+            for i in range(n_requests)]
+
+
+LONG_FRACTIONS = (0.72, 0.95, 0.8, 0.88, 0.7, 0.92, 0.76, 0.84)
+
+
+def _long_prompts(n_requests: int, max_len: int):
+    # long-prompt traffic (lengths clustered near max_len): the regime
+    # where the bucket ladder's padded-S^2 bill dominates and chunked
+    # prefill exists — every prompt lands in the TOP bucket, while the
+    # chunk program bills ~S*max_len plus per-row protocol costs
+    return [[(7 * i + j) % 300 + 1
+             for j in range(min(int(LONG_FRACTIONS[i % len(LONG_FRACTIONS)]
+                                    * max_len), max_len - 1))]
             for i in range(n_requests)]
 
 
@@ -192,15 +210,88 @@ def run_mixed(mode: str, cfg, params, prompts, slots: int, n_new: int,
     return out
 
 
+def run_long(mode: str, cfg, params, prompts, slots: int, n_new: int,
+             max_len: int, rounds: int, chunk_size: int):
+    """Long-prompt serving, chunked vs bucketed (DESIGN.md §10): the
+    chunk engine must hold the 1 chunk + 1 decode program budget,
+    decode the exact-length tokens (centaur), and undercut the bucket
+    ladder's padded-S^2 online bill — the measured trade the chunked
+    prefill path exists for."""
+    from repro.serving.engine import PrivateServingEngine
+
+    eng = PrivateServingEngine(cfg, params, jax.random.key(0),
+                               mode=mode, max_slots=slots,
+                               max_len=max_len, chunk_size=chunk_size)
+    res_c, tokens_c = _timed_rounds(eng, prompts, n_new, rounds)
+    cs = eng.compile_stats()
+    assert cs["chunk_programs"] == 1, \
+        (f"{mode}: {cs['chunk_programs']} chunk programs — the chunked "
+         f"path must compile ONCE per (chunk_size, max_len)")
+    assert cs["prefill_programs"] == 1 and cs["decode_programs"] <= 1, cs
+
+    bng = PrivateServingEngine(cfg, params, jax.random.key(0),
+                               mode=mode, max_slots=slots,
+                               max_len=max_len, buckets="pow2")
+    res_b, tokens_b = _timed_rounds(bng, prompts, n_new, rounds)
+
+    # exact-length reference: eager (no compiles; eager and jit bill
+    # bit-identical online ledgers)
+    ref = PrivateServingEngine(cfg, params, jax.random.key(0),
+                               mode=mode, max_slots=slots,
+                               max_len=max_len, decode_jit=False)
+    rref = [ref.submit(p, max_new_tokens=n_new) for p in prompts]
+    routs, rstats = ref.run_to_completion()
+    tokens_match = [routs[r] for r in rref] == tokens_c
+    chunk_bits = res_c["online_bits_total"]
+    bucket_bits = res_b["online_bits_total"]
+    exact_bits = sum(rstats[r]["online_bits"] for r in rref)
+    if mode == "centaur":
+        assert tokens_match, \
+            "centaur: chunked prefill changed the decoded tokens"
+        assert tokens_b == tokens_c, \
+            "centaur: chunked and bucketed serving disagree"
+        assert chunk_bits < bucket_bits, \
+            (f"centaur long prompts: chunked online bits {chunk_bits} "
+             f"not below bucketed {bucket_bits}")
+
+    out = {
+        "tokens_match_exact_length": tokens_match,
+        "n_requests": len(prompts),
+        "chunk_size": chunk_size,
+        "lengths": sorted({len(p) for p in prompts}),
+        "chunk_programs": cs["chunk_programs"],
+        "decode_programs": cs["decode_programs"],
+        "chunk_ticks": cs["chunk_ticks"],
+        "tokens": res_c["tokens"],
+        "tokens_per_sec_chunked": res_c["tokens_per_sec"],
+        "tokens_per_sec_bucketed": res_b["tokens_per_sec"],
+        "online_bits_chunked": chunk_bits,
+        "online_bits_bucketed": bucket_bits,
+        "online_bits_exact_length": exact_bits,
+        "chunked_vs_bucketed_bits": round(chunk_bits / bucket_bits, 4),
+        "chunked_vs_exact_bits": round(chunk_bits / exact_bits, 4),
+    }
+    print(f"[private-serving] {mode} long-prompts (C={chunk_size}): "
+          f"{res_c['tokens_per_sec']:.2f} tok/s chunked vs "
+          f"{res_b['tokens_per_sec']:.2f} bucketed warm, "
+          f"{cs['chunk_programs']}+{cs['decode_programs']} programs, "
+          f"chunked comm {out['chunked_vs_bucketed_bits']}x of bucketed "
+          f"({out['chunked_vs_exact_bits']}x of exact-length)")
+    return out
+
+
 def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
         max_len: int = 24, rounds: int = 2, out: str | None = OUT,
         smoke: bool = False, modes=MODES, mixed: bool | None = None,
-        uniform: bool = True):
+        uniform: bool = True, long_prompts: bool | None = None,
+        chunk_size: int = 4):
     from repro.configs.paper_models import GPT2_TINY as CFG
     from repro.models.registry import get_api
 
     if mixed is None:
         mixed = not smoke   # full runs always measure realistic traffic
+    if long_prompts is None:
+        long_prompts = not smoke
     if smoke:
         n_requests, n_new, rounds = 4, 3, 2
         slot_counts = (1, 4)
@@ -236,6 +327,18 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
             results["centaur_vs_smpc_tokens_per_sec_mixed"] = r
             print(f"[private-serving] centaur vs smpc under "
                   f"mixed-length traffic: {r}x tokens/sec")
+    if long_prompts and "centaur" in modes:
+        # the paper-protocol engine only: an smpc chunk program stacks
+        # per-chunk NR softmax iterations into one XLA build (minutes
+        # of compile for a measurement the chunked path makes no claim
+        # about — without persistent weight masks the baselines' per-
+        # chunk weight-mask re-opens dominate; see DESIGN.md §10)
+        results["long_prompts"] = {
+            "centaur": run_long("centaur", CFG, params,
+                                _long_prompts(n_requests, max_len),
+                                slots=max(slot_counts), n_new=n_new,
+                                max_len=max_len, rounds=rounds,
+                                chunk_size=chunk_size)}
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=1)
@@ -256,16 +359,34 @@ def main(argv=None):
                          "bucketed prefill path (always on for full "
                          "runs; use with --smoke for the CI "
                          "recompile-regression check)")
+    wl.add_argument("--long-prompts", action="store_true",
+                    help="serve the long-prompt workload through the "
+                         "chunked prefill path vs the bucket ladder "
+                         "(always on for full runs; use with --smoke "
+                         "for the CI 1-chunk-program check)")
     wl.add_argument("--uniform-only", action="store_true",
-                    help="skip the mixed-length workload")
+                    help="skip the mixed-length/long-prompt workloads")
+    ap.add_argument("--chunk-size", type=int, default=4,
+                    help="chunk size for the long-prompt workload; "
+                         "must divide max_len, and the comm win over "
+                         "bucketing needs C << max_len (the tail chunk "
+                         "pads S up to ceil(S/C)*C rows)")
     ap.add_argument("--out", default=OUT)
     args = ap.parse_args(argv)
     modes = tuple(m.strip() for m in args.mode.split(",") if m.strip())
+    # a workload flag FOCUSES only under --smoke (the CI regression
+    # checks); full runs always measure every workload so the written
+    # BENCH json never silently drops a section
+    focused = args.smoke and (args.mixed_lengths or args.long_prompts)
     run(out=None if args.smoke else args.out, smoke=args.smoke,
         modes=modes,
-        mixed=(True if args.mixed_lengths
-               else False if args.uniform_only else None),
-        uniform=not (args.smoke and args.mixed_lengths))
+        mixed=(False if args.uniform_only
+               else True if args.mixed_lengths
+               else False if focused else None),
+        long_prompts=(False if args.uniform_only
+                      else True if args.long_prompts
+                      else False if focused else None),
+        uniform=not focused, chunk_size=args.chunk_size)
 
 
 if __name__ == "__main__":

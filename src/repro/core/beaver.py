@@ -92,6 +92,21 @@ class TripleDealer:
                     online=False)
         return share(ks1, a), share(ks2, c)
 
+    def mask_pair(self, shape):
+        """Shares of a fresh uniform mask A (no product attached).
+
+        The chunked-prefill attention (DESIGN.md §10) reuses a
+        *persistent* cache-side mask B across chunks, so per chunk the
+        dealer supplies only the fresh query-side mask A — the matching
+        C = A @ B is derived against the caller's persistent B inside
+        `matmul_masked_f` and billed there as dealer traffic."""
+        ka, ks1, _ = self._split()
+        a = ring.rand_ring(ka, shape)
+        comm.record("dealer_triple", rounds=1,
+                    bits=comm.numel(shape) * comm.RING_BITS * 2,
+                    online=False)
+        return share(ks1, a)
+
 
 # =============================================================================
 # triple pool: vectorized, jit-compiled offline phase (DESIGN.md §5)
@@ -120,8 +135,13 @@ def _gen_square_triple(key, shape):
     return share(ks1, a), share(ks2, a * a)
 
 
+def _gen_mask_pair(key, shape):
+    ka, ks1 = jax.random.split(key)
+    return share(ks1, ring.rand_ring(ka, shape))
+
+
 _GEN = {"matmul": _gen_matmul_triple, "mul": _gen_mul_triple,
-        "square": _gen_square_triple}
+        "square": _gen_square_triple, "mask": _gen_mask_pair}
 
 
 def _spec_offline_bits(spec) -> int:
@@ -134,7 +154,7 @@ def _spec_offline_bits(spec) -> int:
             jax.ShapeDtypeStruct(b_shape, ring.RING_DTYPE)).shape
         return _matmul_triple_bits(a_shape, b_shape, c_shape)
     n = comm.numel(spec[1])
-    return n * comm.RING_BITS * (6 if kind == "mul" else 4)
+    return n * comm.RING_BITS * {"mul": 6, "square": 4, "mask": 2}[kind]
 
 
 class TriplePool:
@@ -250,6 +270,9 @@ class TriplePool:
     def square_triple(self, shape):
         return self.take(("square", shape))
 
+    def mask_pair(self, shape):
+        return self.take(("mask", shape))
+
 
 def _canon_spec(spec) -> tuple:
     return tuple((spec[0],) + tuple(tuple(int(d) for d in s)
@@ -274,6 +297,9 @@ class ReplayDealer:
     def square_triple(self, shape):
         return next(self._triples)
 
+    def mask_pair(self, shape):
+        return next(self._triples)
+
 
 class RecordingDealer(TripleDealer):
     """TripleDealer that also logs the (kind, shapes) request sequence —
@@ -295,6 +321,10 @@ class RecordingDealer(TripleDealer):
     def square_triple(self, shape):
         self.specs.append(_canon_spec(("square", shape)))
         return super().square_triple(shape)
+
+    def mask_pair(self, shape):
+        self.specs.append(_canon_spec(("mask", shape)))
+        return super().mask_pair(shape)
 
 
 # =============================================================================
@@ -394,6 +424,47 @@ def matmul(x: ShareTensor, y: ShareTensor, dealer,
     comm.record(protocol, rounds=1, bits=0)  # E,F open concurrently: 1 round
     z = matmul_online(e, f, a, b, c, fused)
     return z.truncate(frac_bits) if rescale else z
+
+
+def open_rows(x: ShareTensor, mask: ShareTensor,
+              protocol: str = "matmul"):
+    """Open x against a fresh mask: both parties exchange their shares
+    of x - mask and reconstruct the public value (2*numel*64 bits, no
+    extra round — concurrent with the enclosing matmul's open).
+
+    The chunked-prefill cache protocol (DESIGN.md §10) opens each newly
+    written K/V row exactly once this way; every later chunk's matmul
+    reuses the already-open value instead of re-opening the whole padded
+    cache."""
+    return _open_masked(x, mask, protocol)
+
+
+def matmul_masked_f(x: ShareTensor, f_open, b: ShareTensor, dealer,
+                    frac_bits: int = ring.FRAC_BITS,
+                    protocol: str = "matmul",
+                    fused: bool | None = None) -> ShareTensor:
+    """[X @ Y] where Y was already opened against a persistent mask:
+    ``f_open`` = Y - B public, ``b`` = [B] (DESIGN.md §10).
+
+    Only E = X - A crosses the wire (2*numel(X)*64 bits, 1 round): the
+    F side was opened incrementally by `open_rows` as its rows were
+    written, and reusing the same opened value in later products
+    reveals nothing new.  The dealer supplies the fresh A and the
+    product C = A @ B against the caller's persistent B (simulated here
+    from the reconstructed plaintexts; its delivery is billed as
+    offline dealer traffic).  The combine is the standard Beaver
+    identity Z = E@F + E@B + A@F + C, so the result is exactly X @ Y
+    mod 2^64 before truncation — bit-compatible with `matmul`."""
+    a = dealer.mask_pair(x.shape)
+    e = _open_masked(x, a, protocol)
+    comm.record(protocol, rounds=1, bits=0)  # E opens in its own round
+    c_plain = ring.ring_matmul(a.s0 + a.s1, b.s0 + b.s1)
+    comm.record("dealer_triple", rounds=1,
+                bits=comm.numel(c_plain.shape) * comm.RING_BITS * 2,
+                online=False)
+    c = ShareTensor(c_plain, jnp.zeros_like(c_plain))
+    z = matmul_online(e, f_open, a, b, c, fused)
+    return z.truncate(frac_bits)
 
 
 def mul(x: ShareTensor, y: ShareTensor, dealer,

@@ -139,6 +139,27 @@ def private_decode_step(pm: PrivateModel, caches, token, pos,
                              lookahead=lookahead)
 
 
+def init_chunk_state(pm: PrivateModel, n_slots: int, max_len: int):
+    """Chunked-prefill cache/mask/permutation state (DESIGN.md §10)."""
+    return _exec.init_chunk_state(pm, n_slots, max_len)
+
+
+def private_prefill_chunk(pm: PrivateModel, state, token, pos, lens,
+                          jit: bool = False, lookahead: int = 4):
+    """One chunked-prefill tick: the next (B, C) prompt tokens against
+    the running chunk state; ONE compiled program per (C, max_len)
+    serves every chunk of every prompt length — see
+    executor.prefill_chunk."""
+    return _exec.prefill_chunk(pm, state, token, pos, lens, jit=jit,
+                               lookahead=lookahead)
+
+
+def chunk_state_caches(state):
+    """Decode-ready per-layer share KV caches from a finished chunked
+    prefill."""
+    return _exec.chunk_state_caches(state)
+
+
 centaur_prefill = private_prefill
 centaur_decode_step = private_decode_step
 

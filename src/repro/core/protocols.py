@@ -60,6 +60,21 @@ def pp_permute(x: ShareTensor, p, axis: int = -1) -> ShareTensor:
                        permute.apply_perm(x.s1, p, axis))
 
 
+def _gather_batched(x: ShareTensor, perms, axis: int) -> ShareTensor:
+    """Apply one independent index-permutation per leading-axis element
+    (perms: (B, n)) along `axis` of both shares — the shared gather
+    body of the per-slot and cached-π1 Pi_PPP variants."""
+    B, n = perms.shape
+    assert int(x.shape[0]) == B and int(x.shape[axis]) == n, \
+        (x.shape, perms.shape, axis)
+    ax = axis % x.ndim
+    idx_shape = [1] * x.ndim
+    idx_shape[0], idx_shape[ax] = B, n
+    idx = perms.reshape(idx_shape)
+    return ShareTensor(jnp.take_along_axis(x.s0, idx, axis=ax),
+                       jnp.take_along_axis(x.s1, idx, axis=ax))
+
+
 def pp_permute_batched(x: ShareTensor, perms, axis: int = -1
                        ) -> ShareTensor:
     """Pi_PPP with an INDEPENDENT permutation per leading-axis element.
@@ -71,16 +86,35 @@ def pp_permute_batched(x: ShareTensor, perms, axis: int = -1
     2*(numel(X) + B n^2)*64 bits — for B == 1 exactly the sequential
     pp_permute cost."""
     B, n = perms.shape
-    assert int(x.shape[0]) == B and int(x.shape[axis]) == n, \
-        (x.shape, perms.shape, axis)
     bits = 2 * (comm.numel(x.shape) + B * n * n) * comm.RING_BITS
     comm.record("ppp", rounds=1, bits=bits)
-    ax = axis % x.ndim
-    idx_shape = [1] * x.ndim
-    idx_shape[0], idx_shape[ax] = B, n
-    idx = perms.reshape(idx_shape)
-    return ShareTensor(jnp.take_along_axis(x.s0, idx, axis=ax),
-                       jnp.take_along_axis(x.s1, idx, axis=ax))
+    return _gather_batched(x, perms, axis)
+
+
+def pp_permute_setup(n_perms: int, n: int):
+    """Bill the one-time shared permutation-matrix material for a π
+    that later `pp_permute_cached` calls reuse.
+
+    `pp_permute`'s per-call bill is 2*(numel(X) + n^2)*64: the n^2 term
+    is the Beaver material for the shared dense permutation matrix.
+    Chunked prefill (DESIGN.md §10) draws ONE π1 per request per layer
+    and permutes every chunk's scores under it, so the matrix term is
+    paid once here (per independent permutation) and each chunk pays
+    only for its own data."""
+    comm.record("ppp", rounds=1,
+                bits=2 * n_perms * n * n * comm.RING_BITS)
+
+
+def pp_permute_cached(x: ShareTensor, perms, axis: int = -1
+                      ) -> ShareTensor:
+    """Pi_PPP against a permutation whose shared-matrix material was
+    already billed by `pp_permute_setup`: per-call cost is the data
+    opens only — 1 round, 2*numel(X)*64 bits.  `perms` is (B, n), one
+    independent permutation per leading-axis element (pass the
+    precomputed inverse to undo a cached permutation)."""
+    comm.record("ppp", rounds=1,
+                bits=2 * comm.numel(x.shape) * comm.RING_BITS)
+    return _gather_batched(x, perms, axis)
 
 
 def pp_permute_exact(x: ShareTensor, p_shared: ShareTensor,

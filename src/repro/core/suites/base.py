@@ -155,6 +155,25 @@ class ProtocolSuite:
         """
         raise NotImplementedError
 
+    def softmax_chunk(self, scores, pst):
+        """Chunked-prefill softmax over rectangular (B,hk,g,C,L)
+        prefill-against-cache scores, returning probabilities in
+        NATURAL key-column order (the value side of the chunk path is
+        an already-opened cache in natural order — DESIGN.md §10).
+
+        ``pst`` is the per-layer state minted by `chunk_perm_state`:
+        centaur permutes the revealed scores under the request's cached
+        π1 and un-permutes the re-shared probabilities; share-softmax
+        suites ignore it and stay in the share domain."""
+        raise NotImplementedError(
+            f"{self.mode} suite has no chunked-prefill softmax")
+
+    def chunk_perm_state(self, B: int, L: int):
+        """Per-request, per-layer permutation state for chunked prefill
+        (billed once at prefill start; None where the mode's softmax
+        reveals nothing and needs no permutation)."""
+        return None
+
     def act(self, x, expose: bool = False):
         """The MLP activation (mode-approximated where applicable)."""
         raise NotImplementedError
@@ -205,7 +224,9 @@ def rope_on_shares(x: ShareTensor, cos, sin):
 class ShareSuite(ProtocolSuite):
     """Common share-domain operations (centaur and the smpc family):
     Beaver products, public-constant scaling, additive ring masking,
-    and share-local RoPE are protocol-identical across these suites."""
+    and share-local RoPE are protocol-identical across these suites —
+    as is the chunked-prefill cache protocol (open-once row masks +
+    Beaver products against the opened cache, DESIGN.md §10)."""
 
     def matmul(self, a, b):
         return beaver.matmul(a, b, self.dealer)
@@ -218,6 +239,22 @@ class ShareSuite(ProtocolSuite):
 
     def rope(self, x, cos, sin):
         return rope_on_shares(x, cos, sin)
+
+    # ---- chunked-prefill cache protocol (DESIGN.md §10) --------------------
+    def rand_mask(self, shape):
+        """Fresh dealer mask shares for newly written cache rows."""
+        return self.dealer.mask_pair(shape)
+
+    def open_rows(self, x, mask):
+        """Open x - mask (each fresh row of the chunk cache is opened
+        exactly once; later chunks reuse the public value)."""
+        return beaver.open_rows(x, mask)
+
+    def matmul_opened(self, x, f_open, b_mask):
+        """Share x cache product where the cache side is already open
+        against the persistent mask: only x's mask open crosses the
+        wire."""
+        return beaver.matmul_masked_f(x, f_open, b_mask, self.dealer)
 
 
 def get_suite(pm: PrivateModel) -> ProtocolSuite:

@@ -333,6 +333,29 @@ class CentaurSuite(ShareSuite):
         vp = protocols.pp_permute(values, pi1, axis=-2)
         return o2p, vp
 
+    def chunk_perm_state(self, B: int, L: int):
+        """One independent π1 per slot over the padded key axis, drawn
+        ONCE per request per layer and reused by every chunk — the same
+        leakage as the full-sequence prefill, which reveals the whole
+        permuted score matrix of a layer under a single π1 (DESIGN.md
+        §10).  The shared permutation-matrix material is billed here
+        once; per-chunk `pp_permute_cached` calls bill data only."""
+        pi = jax.vmap(lambda k: permute.gen_perm(k, L))(
+            jax.random.split(self.ks(), B))                # (B, L)
+        inv = jax.vmap(permute.inv_perm)(pi)
+        protocols.pp_permute_setup(B, L)
+        return {"pi": pi, "inv": inv}
+
+    def softmax_chunk(self, scores, pst):
+        """Pi_PPP (cached π1) -> Pi_PPSM reveal -> inverse Pi_PPP, so
+        the returned probabilities line up with the natural-order
+        opened value cache.  P1 observes the π1-permuted masked
+        rectangular score rows — the same reveal surface as full
+        prefill, sliced chunk by chunk under the same π1."""
+        o1p = protocols.pp_permute_cached(scores, pst["pi"], axis=-1)
+        o2p = nonlinear.pp_softmax(o1p, self.ks())
+        return protocols.pp_permute_cached(o2p, pst["inv"], axis=-1)
+
     def act(self, x, expose: bool = False):
         if expose:
             self.pm.expose("O5", self.reveal(x))

@@ -100,6 +100,37 @@ def pad_cache_to(c, max_len: int):
 # attention (standard multi-head incl. GQA; full / prefill / slot-decode)
 # =============================================================================
 
+def project_qkv(suite, p, x, kv_in, rope_pos):
+    """Shared attention prologue for every call shape (full sequence,
+    prefill, slot decode, chunked prefill): Q/K/V projections, optional
+    RoPE rotation at absolute positions ``rope_pos`` (B, S) — pass None
+    to skip rotation (cross-attention) — and GQA head grouping.
+    Returns (q (B,S,hk,g,dh), k, v (B,T,hk,dh))."""
+    cfg = suite.cfg
+    B, S, _ = x.shape
+    T = kv_in.shape[1]
+    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    with comm.tag("linear"):
+        q = suite.linear(p["wq"], x)
+        k = suite.linear(p["wk"], kv_in).reshape(B, T, hk, dh)
+        v = suite.linear(p["wv"], kv_in).reshape(B, T, hk, dh)
+    if cfg.pos_embed == "rope" and rope_pos is not None:
+        from repro.models.layers import rope_freqs
+        cos, sin = rope_freqs(cfg, rope_pos, dh)
+        q = suite.rope(q.reshape(B, S, h, dh), cos, sin)
+        k = suite.rope(k, cos, sin)
+    return q.reshape(B, S, hk, g, dh), k, v
+
+
+def attn_output(suite, p, o3):
+    """Shared attention epilogue: (B,hk,g,S,dh) head outputs back to
+    (B, S, h*dh) rows through the output projection."""
+    B, hk, g, S, dh = o3.shape
+    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, hk * g * dh)
+    with comm.tag("linear"):
+        return suite.linear(p["wo"], o3)
+
+
 def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
               want_cache: bool = False, expose: bool = False, valid=None):
     """The paper's attention flow in any mode.
@@ -115,27 +146,24 @@ def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
       * slot decode (``cache``+``pos``): new K/V rows are written at
         per-slot offsets and queries attend over the whole padded axis
         under the shared validity mask.
+
+    (The fourth call shape, chunked prefill, lives in
+    `_chunk_attention`: its amortized opened-cache state replaces the
+    share-cache middle section, but it shares this prologue/epilogue
+    via `project_qkv`/`attn_output`.)
     """
     cfg = suite.cfg
     B, S, _ = x.shape
     kv_in = x if kv is None else kv
-    T = kv_in.shape[1]
-    h, hk, dh, g = cfg.num_heads, cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    hk, dh, g = cfg.num_kv_heads, cfg.dh, cfg.q_groups
     causal = cfg.causal if causal is None else causal
-    with comm.tag("linear"):
-        q = suite.linear(p["wq"], x)
-        k = suite.linear(p["wk"], kv_in).reshape(B, T, hk, dh)
-        v = suite.linear(p["wv"], kv_in).reshape(B, T, hk, dh)
     q_pos = (pos[:, None] + jnp.arange(S)[None, :]
              if cache is not None else None)              # (B,S)
-    if cfg.pos_embed == "rope" and kv is None:
-        from repro.models.layers import rope_freqs
-        pv = (q_pos if q_pos is not None
-              else jnp.arange(S)[None, :].repeat(B, 0))
-        cos, sin = rope_freqs(cfg, pv, dh)
-        q = suite.rope(q.reshape(B, S, h, dh), cos, sin)
-        k = suite.rope(k, cos, sin)
-    q = q.reshape(B, S, hk, g, dh)
+    rope_pos = None
+    if kv is None:
+        rope_pos = (q_pos if q_pos is not None
+                    else jnp.arange(S)[None, :].repeat(B, 0))
+    q, k, v = project_qkv(suite, p, x, kv_in, rope_pos)
 
     new_cache = None
     if cache is not None:
@@ -168,10 +196,7 @@ def attention(suite, p, x, *, kv=None, causal=None, cache=None, pos=None,
     vp = bcast(vp[:, :, None], (B, hk, g, L, dh))
     with comm.tag("linear"):
         o3 = suite.matmul(probs, vp)                      # (B,hk,g,S,dh)
-    o3 = o3.transpose(0, 3, 1, 2, 4).reshape(B, S, h * dh)
-    with comm.tag("linear"):
-        out = suite.linear(p["wo"], o3)
-    return out, new_cache
+    return attn_output(suite, p, o3), new_cache
 
 
 def mla_attention(suite, p, x, expose: bool = False):
@@ -523,6 +548,155 @@ def prefill(pm: PrivateModel, tokens, max_len: int | None = None,
 
     logits, ks_, vs_ = run_layers(suite, pm.wp["layers"], tokens, lens)
     return logits, [{"k": k, "v": v} for k, v in zip(ks_, vs_)]
+
+
+# =============================================================================
+# chunked prefill (DESIGN.md §10): long prompts as fixed-size chunks
+# against the slot cache, ONE compiled program per (chunk, max_len)
+# =============================================================================
+
+def init_chunk_state(pm: PrivateModel, n_slots: int, max_len: int):
+    """Per-layer chunked-prefill state for a request batch:
+
+    * ``ek``/``ev`` — the K/V cache *opened against persistent masks*
+      (public ring tensors, (B, max_len, hk, dh)); each written row is
+      opened exactly once by the chunk that writes it, so later chunks'
+      score/value products never re-open the cache.
+    * ``bk``/``bv`` — the persistent mask shares.  Rows start at zero
+      (an unwritten zero-share row opened against a zero mask is 0 =
+      0 - 0, keeping the Beaver identity exact over the whole padded
+      axis) and receive a fresh dealer mask when written.
+    * ``pi`` — the suite's per-request permutation state (centaur: one
+      π1 per layer reused by every chunk, matrix material billed here
+      at init; None for share-softmax suites).
+
+    The decode-ready share cache is recovered by `chunk_state_caches`
+    once the last chunk ran: K = ek + bk row-wise.
+    """
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    cfg = pm.cfg
+    z = jnp.zeros((n_slots, max_len, cfg.num_kv_heads, cfg.dh),
+                  ring.RING_DTYPE)
+    return [{"ek": z, "ev": z,
+             "bk": ShareTensor(z, z), "bv": ShareTensor(z, z),
+             "pi": suite.chunk_perm_state(n_slots, max_len)}
+            for _ in range(cfg.num_layers)]
+
+
+def chunk_state_caches(state):
+    """Reconstruct the per-layer share KV caches from a finished chunk
+    state (ready to splice into a serving slot for decode)."""
+    return [{"k": ShareTensor(lst["ek"] + lst["bk"].s0, lst["bk"].s1),
+             "v": ShareTensor(lst["ev"] + lst["bv"].s0, lst["bv"].s1)}
+            for lst in state]
+
+
+def _chunk_attention(suite, p, x, lst, pos, valid):
+    """One chunk of queries (B, C, d) against the padded opened cache.
+
+    Same flow as `attention`'s slot-decode path generalized from T=1
+    to T=C (same `project_qkv` prologue and `attn_output` epilogue),
+    but over the amortized cache state: fresh K/V rows get a dealer
+    mask and are opened once; both attention products run
+    `matmul_opened` against the public cache (only the share-side mask
+    opens cross the wire), and the suite's `softmax_chunk` returns
+    natural-order probabilities for the opened value cache."""
+    cfg = suite.cfg
+    B, C, _ = x.shape
+    hk, dh, g = cfg.num_kv_heads, cfg.dh, cfg.q_groups
+    q_pos = pos[:, None] + jnp.arange(C)                  # (B, C)
+    q, k, v = project_qkv(suite, p, x, x, q_pos)
+
+    with comm.tag("linear"):
+        bk_new = suite.rand_mask((B, C, hk, dh))
+        bv_new = suite.rand_mask((B, C, hk, dh))
+        ek = slot_write(lst["ek"], suite.open_rows(k, bk_new), pos)
+        ev = slot_write(lst["ev"], suite.open_rows(v, bv_new), pos)
+    bk = slot_write(lst["bk"], bk_new, pos)
+    bv = slot_write(lst["bv"], bv_new, pos)
+    L = ek.shape[1]
+
+    qh = q.transpose(0, 2, 3, 1, 4)                       # (B,hk,g,C,dh)
+    fkt = jnp.broadcast_to(
+        jnp.swapaxes(ek.transpose(0, 2, 1, 3), -1, -2)[:, :, None],
+        (B, hk, g, dh, L))
+    bkt = bcast(swap(bk.transpose(0, 2, 1, 3), -1, -2)[:, :, None],
+                (B, hk, g, dh, L))
+    with comm.tag("linear"):
+        o1 = suite.matmul_opened(qh, fkt, bkt)            # (B,hk,g,C,L)
+    o1 = suite.scale(o1, dh ** -0.5)
+    o1 = suite.mask(o1, valid[:, None, None])
+    with comm.tag("softmax"):
+        probs = suite.softmax_chunk(o1, lst["pi"])
+    fv = jnp.broadcast_to(ev.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, hk, g, L, dh))
+    bvt = bcast(bv.transpose(0, 2, 1, 3)[:, :, None], (B, hk, g, L, dh))
+    with comm.tag("linear"):
+        o3 = suite.matmul_opened(probs, fv, bvt)          # (B,hk,g,C,dh)
+    new_lst = {"ek": ek, "ev": ev, "bk": bk, "bv": bv, "pi": lst["pi"]}
+    return attn_output(suite, p, o3), new_lst
+
+
+def _chunk_layer(suite, p, x, lst, pos, valid):
+    """One transformer layer over a prefill chunk (serving hot path,
+    also traced into the jitted chunk tick: never exposes)."""
+    return block(suite, p, x,
+                 lambda h: _chunk_attention(suite, p["attn"], h, lst,
+                                            pos, valid))
+
+
+def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
+                  jit: bool = False, lookahead: int = 4):
+    """One chunked-prefill tick: token (B, C) — the next C prompt
+    tokens per request (tail chunk padded with dead tokens), pos int or
+    (B,) absolute chunk offsets, lens (B,) true prompt lengths, state
+    from `init_chunk_state`.  Returns (logits (B, 1, V), new state);
+    the logits row is gathered at the last REAL token (lens - 1) and is
+    only meaningful on the final chunk (earlier chunks bill and discard
+    the constant-size head — the price of ONE shape-static program).
+
+    The program is jit-keyed on (C, max_len) only — pos and lens are
+    traced — so an engine serving arbitrary prompt lengths compiles
+    exactly one chunk program (plus the §7 decode program), and the
+    per-chunk triple demand is the same multiset every tick, so
+    `TriplePool.reserve` keeps `lookahead` chunks in stock."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    nl = pm.cfg.num_layers
+    B, C = token.shape
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+    L = int(state[0]["ek"].shape[1])
+    assert int(jnp.max(pos)) + C <= L, \
+        f"chunk past padded cache: pos={pos}, C={C}, max_len={L}"
+
+    def run_layers(sh, p, tok, ps, ln, lsts):
+        q_pos = ps[:, None] + jnp.arange(C)
+        x = sh.embed(tok, q_pos)
+        valid = masking.chunk_valid(q_pos, ln, L)
+        new_lsts = []
+        for i in range(nl):
+            x, nlst = _chunk_layer(sh, p[i], x, lsts[i], ps, valid)
+            new_lsts.append(nlst)
+        last = rows_at(x, jnp.clip(ln - 1 - ps, 0, C - 1))
+        return sh.head(last), new_lsts
+
+    if jit:
+        def body(shadow, p, st):
+            tok, ps, ln, lsts = st
+            return run_layers(get_suite(shadow), p, tok, ps, ln, lsts)
+
+        state0 = (token, pos, lens, state)
+        jl = jit_layer_for(pm, f"{pm.mode}_prefill_chunk", body,
+                           pm.wp["layers"], state0)
+        pool = pm.triple_pool()
+        pool.reserve(jl.specs, steps=lookahead)
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        return jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
+
+    return run_layers(suite, pm.wp["layers"], token, pos, lens, state)
 
 
 def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,

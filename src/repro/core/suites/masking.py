@@ -81,6 +81,30 @@ def slot_valid(q_pos, L: int):
     return jnp.arange(L)[None, None, :] <= q_pos[:, :, None]
 
 
+def chunk_valid(q_pos, lens, L: int):
+    """(B, C, L) validity for one chunked-prefill tick against the
+    padded slot cache (DESIGN.md §10).
+
+    Key column t is live for the chunk query row of request b at
+    absolute position ``q_pos[b, s]`` iff it is causal against the
+    cache (``t <= q_pos[b, s]`` — the rectangular slice of the full
+    tril that this chunk's rows occupy) AND a real prompt token
+    (``t < lens[b]``): the tail chunk is padded up to the chunk size,
+    and its padded rows' garbage K/V columns must stay dead for every
+    query.  Padded query rows (q_pos >= lens) keep their live real
+    columns so their softmax stays well-defined; the garbage rows they
+    write above ``lens`` are the §7 unwritten-row case — decode's
+    ``slot_valid`` keeps them dead until overwritten.
+
+    ``q_pos`` and ``lens`` are traced inputs, NOT static shapes: ONE
+    compiled chunk program per (chunk size, max_len) serves every
+    chunk of every prompt length.
+    """
+    t = jnp.arange(L)
+    return ((t[None, None, :] <= q_pos[:, :, None])
+            & (t[None, None, :] < lens[:, None, None]))
+
+
 def prefill_valid(lens, S: int):
     """(B, S, S) validity for bucket-padded prefill.
 

@@ -137,6 +137,14 @@ class SmpcSuite(ShareSuite):
             probs = smpc_nl.smpc_softmax(scores, self.dealer)
         return probs, values
 
+    def softmax_chunk(self, scores, pst):
+        """Share-domain softmax over the rectangular chunk scores: the
+        approximations are axis-generic and reveal nothing, so no
+        permutation state is needed (pst is None) and the output is
+        already in natural key-column order."""
+        probs, _ = self.softmax_pair(scores, None, per_slot=False)
+        return probs
+
     def act(self, x, expose: bool = False):
         if self.mode == "mpcformer":
             return smpc_nl.quad_gelu(x, self.dealer)

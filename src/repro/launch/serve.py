@@ -38,15 +38,29 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=48)
-    ap.add_argument("--buckets", default="pow2",
+    ap.add_argument("--buckets", default=None,
                     help="prefill length buckets for the private engine:"
-                         " 'pow2' (default ladder), 'none' (exact-length"
-                         " prefill, one compile per distinct prompt"
-                         " length), or comma-separated lengths")
+                         " 'pow2' (the default ladder), 'none'"
+                         " (exact-length prefill, one compile per"
+                         " distinct prompt length), or comma-separated"
+                         " lengths")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked prefill (DESIGN.md §10): consume each"
+                         " prompt as fixed-size chunks against the slot"
+                         " cache — ONE compiled chunk program for every"
+                         " length mix; replaces --buckets (max-len must"
+                         " be a multiple of the chunk size)")
     args = ap.parse_args(argv)
-    buckets = (None if args.buckets == "none" else
-               "pow2" if args.buckets == "pow2" else
-               tuple(int(b) for b in args.buckets.split(",")))
+    if args.chunk_size is not None:
+        if args.buckets is not None:
+            # reject the conflict instead of silently dropping a ladder
+            ap.error("--chunk-size replaces --buckets; drop one")
+        buckets = None
+    else:
+        b = args.buckets or "pow2"
+        buckets = (None if b == "none" else
+                   "pow2" if b == "pow2" else
+                   tuple(int(x) for x in b.split(",")))
 
     cfg = get_config(args.arch, reduced=args.reduced)
     api = get_api(cfg)
@@ -102,7 +116,8 @@ def main(argv=None):
     from repro.serving.engine import PrivateServingEngine
     eng = PrivateServingEngine(cfg, params, jax.random.key(2),
                                mode=args.mode, max_slots=4,
-                               max_len=args.max_len, buckets=buckets)
+                               max_len=args.max_len, buckets=buckets,
+                               chunk_size=args.chunk_size)
     with comm.ledger() as led:
         rids = [eng.submit(p, max_new_tokens=args.max_new)
                 for p in random_prompts()]
@@ -111,13 +126,15 @@ def main(argv=None):
         dt = time.monotonic() - t0
     tok = sum(len(v) for v in outs.values())
     cs = eng.compile_stats()
+    chunked = (f" ({cs['chunk_ticks']} chunk ticks)"
+               if args.chunk_size else "")
     print(f"[{args.mode}] served {len(rids)} requests / {tok} tokens "
           f"in {dt:.2f}s ({tok / dt:.1f} tok/s), "
           f"comm {led.total_bytes() / 1e6:.1f} MB / "
           f"{led.total_rounds()} rounds, "
           f"{cs['prefill_programs']}+{cs['decode_programs']} compiled "
-          f"prefill+decode programs over {cs['prefills']} prefills / "
-          f"{cs['decode_ticks']} ticks")
+          f"prefill+decode programs over {cs['prefills']} prefills"
+          f"{chunked} / {cs['decode_ticks']} ticks")
     for rid in rids:
         st = stats[rid]
         flags = "".join([", truncated" if st["truncated"] else "",

@@ -216,12 +216,24 @@ class PrivateServingEngine(RequestQueue):
     the smallest bucket >= its length, so the engine compiles at most
     len(buckets) prefill programs + 1 decode program no matter how
     lengths mix (`compile_stats()` verifies), at the cost of billing
-    the padded bucket's S^2 attention comm."""
+    the padded bucket's S^2 attention comm.
+
+    `chunk_size=C` replaces bucketing (pass `buckets=None`): a prompt
+    of any length is consumed as ceil(len/C) fixed-shape chunks run
+    against the slot cache (DESIGN.md §10) — ONE compiled chunk
+    program + 1 decode program under arbitrary length mixes, and the
+    long-prompt comm bill drops below the bucket ladder's padded S^2
+    (the amortized chunk-cache protocol opens each K/V row once and
+    reuses one π1 per request per layer).  The tail chunk is padded to
+    C with masked dead tokens; each chunk tick is billed to its
+    request as it runs.  `max_len` must be a multiple of C so the last
+    chunk of a capped prompt still fits the padded cache."""
 
     def __init__(self, cfg: ModelConfig, params, key, *,
                  mode: str = "centaur", max_slots: int = 4,
                  max_len: int = 256, decode_jit: bool = True,
-                 lookahead: int = 4, buckets=None):
+                 lookahead: int = 4, buckets=None,
+                 chunk_size: int | None = None):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
         assert cfg.family == "dense" and not cfg.use_mla, \
@@ -235,6 +247,17 @@ class PrivateServingEngine(RequestQueue):
         self.max_len = max_len
         self.decode_jit = decode_jit
         self.lookahead = lookahead
+        if chunk_size is not None:
+            chunk_size = int(chunk_size)
+            assert buckets is None, \
+                "chunk_size replaces bucketing: pass buckets=None"
+            assert chunk_size >= 1, chunk_size
+            # ceil((max_len - 1) / C) * C <= max_len must hold so a
+            # capped prompt's padded tail chunk fits the slot cache
+            assert max_len % chunk_size == 0, \
+                f"max_len {max_len} must be a multiple of " \
+                f"chunk_size {chunk_size}"
+        self.chunk_size = chunk_size
         if buckets == "pow2":
             buckets = pow2_buckets(max_len)
         if buckets is not None:
@@ -253,6 +276,7 @@ class PrivateServingEngine(RequestQueue):
         self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
         self.stats: dict[int, dict] = {}
         self.prefills = 0
+        self.chunk_ticks = 0
         self.decode_ticks = 0
 
     # ---- per-request comm accounting ---------------------------------------
@@ -278,14 +302,19 @@ class PrivateServingEngine(RequestQueue):
         """Compiled-program + dispatch telemetry.  Program counts read
         the model's jit cache (0 when decode_jit=False); the bucketing
         guarantee is prefill_programs <= len(buckets) and
-        decode_programs <= 1 regardless of how prompt lengths mix."""
+        decode_programs <= 1 regardless of how prompt lengths mix; the
+        chunking guarantee is chunk_programs == 1 (counted inside
+        prefill_programs — the chunk program IS the prefill program)."""
         names = [k[0] for k in self.pm.jit_cache]
         pfx = f"{self.mode}_"
         return {"prefill_programs":
                 sum(n.startswith(pfx + "prefill") for n in names),
+                "chunk_programs":
+                sum(n.startswith(pfx + "prefill_chunk") for n in names),
                 "decode_programs":
                 sum(n.startswith(pfx + "decode") for n in names),
                 "prefills": self.prefills,
+                "chunk_ticks": self.chunk_ticks,
                 "decode_ticks": self.decode_ticks}
 
     # ---- scheduler ----------------------------------------------------------
@@ -293,6 +322,8 @@ class PrivateServingEngine(RequestQueue):
         return next(b for b in self.buckets if b >= length)
 
     def _prefill_into(self, slot: int, req: Request):
+        if self.chunk_size is not None:
+            return self._prefill_chunked(slot, req)
         S = len(req.prompt)
         assert S < self.max_len, "prompt fills the slot"  # submit() caps
         toks, lens = req.prompt, None
@@ -315,6 +346,44 @@ class PrivateServingEngine(RequestQueue):
         req.out.append(int(np.argmax(np.asarray(logits)[0])))
         self.prefills += 1
         self._accumulate(req, led)
+
+    def _prefill_chunked(self, slot: int, req: Request):
+        """Chunked prefill (DESIGN.md §10): consume the prompt as
+        ceil(S/C) fixed-shape chunk ticks against a fresh single-slot
+        chunk state, then splice the reconstructed share cache into the
+        slot.  Each chunk tick's ledger is accumulated to the request
+        as it runs — a prefill that spans several ticks stays exact and
+        sum-conserving per request (`comm.attribute` with one key is
+        the identity), so per-request stats keep summing to the global
+        ledger."""
+        C = self.chunk_size
+        S = len(req.prompt)
+        assert S < self.max_len, "prompt fills the slot"  # submit() caps
+        n_chunks = -(-S // C)
+        # pad the tail chunk; dead token ids are irrelevant (masked
+        # columns, garbage rows overwritten/kept dead by decode)
+        padded = req.prompt + [0] * (n_chunks * C - S)
+        lens = jnp.asarray([S], jnp.int32)
+        with self._comm.ledger() as led0:
+            # one-time per-request state: π1 permutation material
+            state = self._pmod.init_chunk_state(self.pm, 1, self.max_len)
+        self._accumulate(req, led0)
+        for ci in range(n_chunks):
+            toks = jnp.asarray([padded[ci * C:(ci + 1) * C]], jnp.int32)
+            with self._comm.ledger() as led:
+                logits, state = self._pmod.private_prefill_chunk(
+                    self.pm, state, toks, ci * C, lens,
+                    jit=self.decode_jit, lookahead=self.lookahead)
+            self.chunk_ticks += 1
+            self._accumulate(req, led)
+        c1 = self._pmod.chunk_state_caches(state)
+        self.caches = [
+            jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
+                         full_l, one_l)
+            for full_l, one_l in zip(self.caches, c1)]
+        self.pos[slot] = S
+        req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        self.prefills += 1
 
     def step(self) -> bool:
         """One tick: admit, decode the full slot width, evict."""

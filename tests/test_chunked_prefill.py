@@ -1,0 +1,282 @@
+"""Chunked prefill (DESIGN.md §10).
+
+Chunking must be a pure compile-count/comm transform: consuming a
+prompt as ceil(S/C) fixed-shape chunks against the slot cache changes
+neither the decoded tokens in any servable mode nor the online
+ledger's eager/jit agreement — while compiling ONE chunk program per
+(C, max_len), billing each chunk tick to its request exactly, and
+undercutting the bucket ladder's padded-S^2 online bill at long prompt
+lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm, ring
+from repro.core.private_model import (build_private_model,
+                                      chunk_state_caches,
+                                      init_chunk_state,
+                                      private_decode_step,
+                                      private_prefill,
+                                      private_prefill_chunk)
+from repro.core.sharing import reconstruct, share
+from repro.core.suites import get_suite, masking
+from repro.models.registry import get_api
+from repro.serving.engine import PrivateServingEngine, ServingEngine
+
+KEY = jax.random.key(3)
+C, MAXLEN = 4, 24
+# mixed lengths incl. multi-chunk prompts; more requests than slots
+PROMPTS = [list(range(1, 18)), [7, 8], list(range(2, 21)),
+           [3, 1, 4, 1, 5, 9, 2, 6], [5, 4, 3]]
+NNEW = 3
+LONG = list(range(1, 20))        # S=19: lands in the top pow2 bucket
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, KEY)
+
+
+def _serve(params, mode, slots=3, prompts=PROMPTS, n_new=NNEW,
+           decode_jit=True, **kw):
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, mode=mode,
+                               max_slots=slots, max_len=MAXLEN,
+                               decode_jit=decode_jit, **kw)
+    rids = [eng.submit(p, max_new_tokens=n_new) for p in prompts]
+    with comm.ledger() as led:
+        outs, stats = eng.run_to_completion()
+    return [outs[r] for r in rids], stats, eng, led
+
+
+def _chunk_ledgers(params, mode, prompt, jit, chunk=C, max_len=MAXLEN):
+    """Run a full chunked prefill; returns (per-chunk online ledgers
+    incl. the init tick, final logits)."""
+    pm = build_private_model(GPT2_TINY, params, KEY, mode=mode,
+                             use_pool=jit)
+    S = len(prompt)
+    n = -(-S // chunk)
+    padded = prompt + [0] * (n * chunk - S)
+    leds = []
+    with comm.ledger() as led0:
+        state = init_chunk_state(pm, 1, max_len)
+    leds.append(led0)
+    for ci in range(n):
+        toks = jnp.asarray([padded[ci * chunk:(ci + 1) * chunk]],
+                           jnp.int32)
+        with comm.ledger() as led:
+            logits, state = private_prefill_chunk(
+                pm, state, toks, ci * chunk,
+                jnp.asarray([S], jnp.int32), jit=jit)
+        leds.append(led)
+    return leds, np.asarray(logits), state, pm
+
+
+def test_chunk_valid_mask_contents():
+    """Rectangular causal-against-cache AND real-token: the chunk's
+    rows are the corresponding slice of the full tril, with columns
+    >= lens dead for every query row."""
+    q_pos = jnp.asarray([[2, 3], [2, 3]])
+    v = np.asarray(masking.chunk_valid(q_pos, jnp.asarray([4, 3]), 6))
+    # request 0: lens=4 covers the chunk -> pure tril slice rows 2..3
+    assert v[0].tolist() == [[1, 1, 1, 0, 0, 0], [1, 1, 1, 1, 0, 0]]
+    # request 1: lens=3 -> column 3 (the padded tail row's own K) dead
+    # even for the padded query row, which keeps its live real columns
+    assert v[1].tolist() == [[1, 1, 1, 0, 0, 0], [1, 1, 1, 0, 0, 0]]
+
+
+def test_chunked_tokens_match_exact_bucketed_and_plaintext(params):
+    """Exact-protocol serving: chunked prefill + decode == bucketed ==
+    exact-length == plaintext greedy, token for token, under a
+    mixed-length staggered workload — with exactly 1 compiled chunk
+    program + 1 decode program."""
+    toks_c, _, eng, _ = _serve(params, "centaur", chunk_size=C)
+    toks_e, _, _, _ = _serve(params, "centaur")
+    toks_b, _, _, _ = _serve(params, "centaur", buckets="pow2")
+    assert toks_c == toks_e, \
+        "centaur: chunked prefill changed the decoded tokens"
+    assert toks_c == toks_b, \
+        "centaur: chunked and bucketed serving disagree"
+    cs = eng.compile_stats()
+    assert cs["chunk_programs"] == 1, cs
+    assert cs["prefill_programs"] == 1, cs
+    assert cs["decode_programs"] == 1, cs
+    assert cs["chunk_ticks"] == sum(-(-len(p) // C) for p in PROMPTS)
+    peng = ServingEngine(GPT2_TINY, params, max_slots=3,
+                         max_len=MAXLEN)
+    prids = [peng.submit(p, max_new_tokens=NNEW) for p in PROMPTS]
+    pouts = peng.run_to_completion()
+    assert toks_c == [pouts[r] for r in prids], \
+        "centaur: chunked serving diverged from plaintext greedy"
+
+
+def test_chunked_tokens_match_exact_smpc(params):
+    """The share-softmax baseline end-to-end through the chunk path
+    (eager: compiling the baselines' NR stacks is minutes of XLA;
+    jit-vs-eager parity is pinned by the ledger test below)."""
+    lite = [[1, 2, 3], list(range(2, 13))]
+    toks_c, _, _, _ = _serve(params, "smpc", slots=1, prompts=lite,
+                             n_new=2, decode_jit=False, chunk_size=C)
+    toks_e, _, _, _ = _serve(params, "smpc", slots=1, prompts=lite,
+                             n_new=2, decode_jit=False)
+    assert toks_c == toks_e, \
+        "smpc: chunked prefill changed the decoded tokens"
+
+
+@pytest.mark.parametrize("mode", ("mpcformer", "secformer"))
+def test_chunked_prefill_logits_close_per_softmax_variant(params, mode):
+    """The masking contract per softmax variant (2Quad included):
+    chunk-padded dead columns must carry exactly zero mass, so chunked
+    and exact-length prefill logits agree up to the protocols' own
+    fixed-point noise."""
+    prompt = [1, 2, 3, 4, 5, 6]
+    _, lc, _, _ = _chunk_ledgers(params, mode, prompt, jit=False)
+    pm_e = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    le, _ = private_prefill(pm_e, jnp.asarray([prompt], jnp.int32),
+                            max_len=MAXLEN)
+    np.testing.assert_allclose(lc, np.asarray(le), atol=0.06)
+
+
+def test_gqa_chunked_decode_parity():
+    """The chunk path owns GQA head grouping / SwiGLU / RoPE like the
+    rest of the executor: llama-style shapes decode the same tokens
+    after a chunked prefill as after an exact-length prefill."""
+    cfg = get_config("smollm-360m", reduced=True)
+    params = get_api(cfg).init_params(cfg, KEY)
+    prompt, n_new, chunk, max_len = [9, 8, 7, 6, 5, 4, 3], 3, 4, 16
+
+    def greedy(chunked):
+        pm = build_private_model(cfg, params, KEY, mode="centaur")
+        toks = jnp.asarray([prompt], jnp.int32)
+        if chunked:
+            state = init_chunk_state(pm, 1, max_len)
+            S = len(prompt)
+            n = -(-S // chunk)
+            padded = prompt + [0] * (n * chunk - S)
+            for ci in range(n):
+                logits, state = private_prefill_chunk(
+                    pm, state,
+                    jnp.asarray([padded[ci * chunk:(ci + 1) * chunk]],
+                                jnp.int32),
+                    ci * chunk, jnp.asarray([S], jnp.int32))
+            caches = chunk_state_caches(state)
+        else:
+            logits, caches = private_prefill(pm, toks, max_len=max_len)
+        out = [int(np.argmax(np.asarray(logits)[0]))]
+        for i in range(n_new - 1):
+            logits, caches = private_decode_step(
+                pm, caches, jnp.asarray([[out[-1]]], jnp.int32),
+                len(prompt) + i)
+            out.append(int(np.argmax(np.asarray(logits)[0])))
+        return out
+
+    assert greedy(chunked=True) == greedy(chunked=False), \
+        "GQA: chunked prefill changed the decoded tokens"
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_chunk_ledger_eager_vs_jit_bit_exact(params, mode):
+    """Per-chunk eager-vs-jit online-ledger bit-exactness: every chunk
+    tick (and the init tick) must bill identically under capture/replay
+    and eager execution."""
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    leds_e, le, _, _ = _chunk_ledgers(params, mode, prompt, jit=False)
+    leds_j, lj, _, _ = _chunk_ledgers(params, mode, prompt, jit=True)
+    assert len(leds_e) == len(leds_j)
+    for i, (a, b) in enumerate(zip(leds_e, leds_j)):
+        assert a.total_bits() == b.total_bits(), f"chunk {i}"
+        assert a.total_rounds() == b.total_rounds(), f"chunk {i}"
+    if mode == "centaur":
+        assert le[0].argmax() == lj[0].argmax()
+
+
+def test_chunked_below_bucketed_bits_at_long_prompts(params):
+    """The comm trade chunking exists for: at long prompt lengths the
+    chunked online bill (incl. the per-request π1 setup and per-chunk
+    head) sits strictly below the bucket ladder's padded-S^2 bill, and
+    both sit above exact-length (chunking is near-exact, not free:
+    scores still span the padded cache width)."""
+    leds, _, _, _ = _chunk_ledgers(params, "centaur", LONG, jit=False)
+    chunk_bits = sum(led.total_bits() for led in leds)
+    bucket = 24   # pow2_buckets(24) puts S=19 in the top bucket
+    pm_b = build_private_model(GPT2_TINY, params, KEY, mode="centaur")
+    toks = jnp.asarray([LONG + [0] * (bucket - len(LONG))], jnp.int32)
+    with comm.ledger() as led_b:
+        private_prefill(pm_b, toks, max_len=MAXLEN,
+                        lens=jnp.asarray([len(LONG)], jnp.int32))
+    pm_x = build_private_model(GPT2_TINY, params, KEY, mode="centaur")
+    with comm.ledger() as led_x:
+        private_prefill(pm_x, jnp.asarray([LONG], jnp.int32),
+                        max_len=MAXLEN)
+    assert led_x.total_bits() < chunk_bits < led_b.total_bits(), \
+        (led_x.total_bits(), chunk_bits, led_b.total_bits())
+
+
+def test_chunk_attribution_conservation(params):
+    """A prefill spanning several chunk ticks stays exact and
+    sum-conserving: per-request attributed stats (chunk ticks + shared
+    decode ticks) sum to the global ledger, and every multi-chunk
+    request billed more than one tick's worth of prefill."""
+    toks, stats, eng, led = _serve(params, "centaur", chunk_size=C)
+    assert sum(s["online_bits"] for s in stats.values()) \
+        == led.total_bits()
+    assert sum(s["rounds"] for s in stats.values()) \
+        == led.total_rounds()
+    assert sum(s["offline_bits"] for s in stats.values()) \
+        == led.total_bits(False) - led.total_bits()
+    assert all(s["online_bits"] > 0 for s in stats.values())
+    # single-request engine == isolated bill (attribution identity)
+    _, stats_one, _, led_one = _serve(params, "centaur", slots=1,
+                                      prompts=[PROMPTS[0]],
+                                      chunk_size=C)
+    one = next(iter(stats_one.values()))
+    assert one["online_bits"] == led_one.total_bits()
+    assert one["rounds"] == led_one.total_rounds()
+
+
+def test_chunk_size_validation(params):
+    with pytest.raises(AssertionError):
+        PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=20,
+                             chunk_size=8)     # 20 % 8 != 0
+    with pytest.raises(AssertionError):
+        PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=24,
+                             chunk_size=4, buckets="pow2")
+    with pytest.raises(AssertionError):
+        PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=24,
+                             chunk_size=0)
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc", "permute"))
+def test_rectangular_mask_and_softmax_per_suite(params, mode):
+    """Every suite's mask + softmax path must handle rectangular
+    prefill-against-cache scores: dead key columns carry exactly zero
+    mass and live rows stay normalized, on (B, hk, g, C, L) shapes."""
+    pm = build_private_model(GPT2_TINY, params, KEY, mode=mode)
+    suite = get_suite(pm)
+    B, hk, g, Cq, L = 2, 2, 1, 3, 8
+    q_pos = jnp.asarray([[3, 4, 5], [2, 3, 4]])
+    lens = jnp.asarray([6, 4])
+    valid = masking.chunk_valid(q_pos, lens, L)
+    raw = jax.random.normal(jax.random.key(0), (B, hk, g, Cq, L))
+    if mode == "permute":
+        scores = jnp.asarray(raw, jnp.float32)
+    else:
+        scores = share(jax.random.key(1), ring.encode(raw))
+    masked = suite.mask(scores, valid[:, None, None])
+    if mode == "permute":
+        probs = suite.softmax_pair(masked, None, per_slot=False)[0]
+    else:
+        probs = suite.softmax_chunk(masked, suite.chunk_perm_state(B, L)
+                                    if mode == "centaur" else None)
+        probs = ring.decode(reconstruct(probs), dtype=jnp.float32)
+    probs = np.asarray(probs)
+    assert probs.shape == (B, hk, g, Cq, L)
+    dead = ~np.asarray(valid)[:, None, None]
+    # share modes represent the exact-zero mass in fixed point, where
+    # local truncation leaves +-2 LSB (2^-15) of noise around zero
+    tol = 1e-6 if mode == "permute" else 2 ** -15 + 1e-9
+    assert np.abs(probs[np.broadcast_to(dead, probs.shape)]).max() \
+        <= tol, f"{mode}: dead columns carry softmax mass"
+    np.testing.assert_allclose(probs.sum(-1), 1.0, atol=1e-3)

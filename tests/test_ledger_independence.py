@@ -1,0 +1,82 @@
+"""Ledger data-independence: the privacy contract behind the comm
+accounting (paper §2.2 semi-honest model).
+
+Everything a party could time or measure on the wire — event order,
+protocol names, rounds, bits, online/offline flags — must be a function
+of PUBLIC shapes only.  Two runs with identical public shapes but
+different prompts and different model/share randomness must therefore
+produce bit-identical comm ledgers in every servable mode, on every
+serving path (exact prefill, bucketed prefill, chunked prefill, slot
+decode).  Any data-dependent branch inside a suite (a value-dependent
+comparison, an early exit, a content-keyed cache) fails this test."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm
+from repro.core.private_model import (build_private_model,
+                                      init_chunk_state,
+                                      private_decode_step,
+                                      private_forward,
+                                      private_prefill,
+                                      private_prefill_chunk)
+from repro.models.registry import get_api
+
+SERVABLE = ("centaur", "smpc", "mpcformer", "secformer")
+MAXLEN = 12
+# identical PUBLIC shapes, different content and different randomness
+RUNS = ((jax.random.key(0), [1, 2, 3, 4, 5]),
+        (jax.random.key(99), [301, 7, 42, 250, 11]))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, jax.random.key(3))
+
+
+def _events(led):
+    return [(e.protocol, e.rounds, e.bits, e.tag, e.online)
+            for e in led.events]
+
+
+def _serving_ledger(params, mode, key, prompt):
+    """Exact prefill + bucketed prefill + one chunked prefill + one
+    batched decode tick, all eager (eager billing is the reference the
+    jit capture/replay path is pinned against)."""
+    pm = build_private_model(GPT2_TINY, params, key, mode=mode)
+    toks = jnp.asarray([prompt], jnp.int32)
+    lens = jnp.asarray([len(prompt)], jnp.int32)
+    with comm.ledger() as led:
+        _, caches = private_prefill(pm, toks, max_len=MAXLEN)
+        private_prefill(pm, jnp.asarray([prompt + [0, 0, 0]], jnp.int32),
+                        max_len=MAXLEN, lens=lens)
+        state = init_chunk_state(pm, 1, MAXLEN)
+        private_prefill_chunk(pm, state, toks[:, :4], 0, lens)
+        private_decode_step(pm, caches,
+                            jnp.asarray([[prompt[0]]], jnp.int32),
+                            len(prompt))
+    return led
+
+
+@pytest.mark.parametrize("mode", SERVABLE)
+def test_serving_ledger_is_data_independent(params, mode):
+    leds = [_serving_ledger(params, mode, key, prompt)
+            for key, prompt in RUNS]
+    assert _events(leds[0]) == _events(leds[1]), \
+        (f"{mode}: comm ledger depends on private data — a "
+         f"data-dependent branch leaks through traffic analysis")
+
+
+@pytest.mark.parametrize("mode", SERVABLE + ("permute",))
+def test_forward_ledger_is_data_independent(params, mode):
+    """Same contract for the full-sequence forward of every mode
+    (permute included: it must bill nothing, identically)."""
+    leds = []
+    for key, prompt in RUNS:
+        pm = build_private_model(GPT2_TINY, params, key, mode=mode)
+        with comm.ledger() as led:
+            private_forward(pm, jnp.asarray([prompt], jnp.int32))
+        leds.append(led)
+    assert _events(leds[0]) == _events(leds[1]), \
+        f"{mode}: forward ledger depends on private data"

@@ -1,0 +1,113 @@
+"""Hypothesis property tests for core/suites/masking.py and the
+serving engine's bucket ladder — the index algebra the §7/§9/§10
+masking contracts rest on.
+
+The claims are exact boolean-algebraic, so every check is equality on
+numpy bool arrays (no tolerances)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis "
+                           "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.suites import masking  # noqa: E402
+from repro.serving.engine import pow2_buckets  # noqa: E402
+
+caps = st.integers(min_value=2, max_value=48)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 24), st.integers(1, 16),
+       st.integers(0, 16))
+def test_chunk_valid_is_tril_slice(C, pos, L_extra, len_extra):
+    """A chunk whose rows are all real (lens >= pos + C) sees exactly
+    the corresponding row-slice of the full causal tril over the padded
+    key axis — the rectangular mask is the full-prefill mask, sliced."""
+    L = pos + C + L_extra
+    lens = pos + C + min(len_extra, L - pos - C + 1)
+    q_pos = jnp.asarray([pos + np.arange(C)])
+    v = np.asarray(masking.chunk_valid(q_pos, jnp.asarray([lens]), L))
+    tril = np.tril(np.ones((L, L), bool))
+    np.testing.assert_array_equal(v[0], tril[pos:pos + C])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 4), st.integers(1, 40),
+       st.integers(8, 40))
+def test_chunk_valid_tail_invariants(C, n_prior, lens, L):
+    """Tail-chunk invariants for any (lens, chunk schedule): columns
+    >= lens are dead for EVERY query row (padded/garbage K stays at
+    zero softmax mass), every row keeps >= 1 live column (no all-dead
+    softmax), and live columns are exactly the causal real tokens."""
+    pos = n_prior * C
+    lens = min(lens, L - 1)
+    if pos >= lens:        # chunk fully past the prompt: not scheduled
+        pos = max(0, ((lens - 1) // C) * C)
+    L = max(L, pos + C)
+    q_pos = jnp.asarray([pos + np.arange(C)])
+    v = np.asarray(masking.chunk_valid(q_pos, jnp.asarray([lens]), L))[0]
+    t = np.arange(L)
+    assert not v[:, t >= lens].any(), "columns past lens must be dead"
+    assert (v.sum(-1) >= 1).all(), "every query row needs a live column"
+    for s in range(C):
+        expect = (t <= pos + s) & (t < lens)
+        np.testing.assert_array_equal(v[s], expect)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 12))
+def test_prefill_valid_matches_chunk_valid_single_chunk(lens, pad):
+    """Bucketed prefill is the one-chunk special case: prefill_valid
+    over a padded bucket equals chunk_valid at chunk offset 0 with the
+    bucket as both chunk size and cache width."""
+    S = lens + pad
+    v_p = np.asarray(masking.prefill_valid(jnp.asarray([lens]), S))
+    q_pos = jnp.asarray([np.arange(S)])
+    v_c = np.asarray(masking.chunk_valid(q_pos, jnp.asarray([lens]), S))
+    np.testing.assert_array_equal(v_p, v_c)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 24), st.integers(0, 12))
+def test_prefill_valid_zero_mass_invariant(lens, pad):
+    """§9's masking contract: padded prompt columns are dead for every
+    query row, real rows see exactly their causal prefix, and no row is
+    all-dead (the softmax stays well-defined on padded query rows)."""
+    S = lens + pad
+    v = np.asarray(masking.prefill_valid(jnp.asarray([lens]), S))[0]
+    t = np.arange(S)
+    assert not v[:, t >= lens].any()
+    assert (v.sum(-1) >= 1).all()
+    tril = np.tril(np.ones((S, S), bool))
+    np.testing.assert_array_equal(v[:lens], tril[:lens, :S] &
+                                  (t < lens)[None, :])
+
+
+@settings(max_examples=50, deadline=None)
+@given(caps)
+def test_pow2_buckets_monotone_and_coverage(max_len):
+    """Ladder invariants: strictly increasing, capped by max_len,
+    topped exactly at max_len, and every admissible prompt length
+    (<= max_len - 1 after the shared cap) has a bucket — the smallest
+    covering bucket above the ladder's floor pads by less than 2x
+    (doubling steps), except possibly the max_len-capped top rung."""
+    b = pow2_buckets(max_len)
+    assert list(b) == sorted(set(b))
+    assert b[-1] == max_len and all(x <= max_len for x in b)
+    for length in range(1, max_len):
+        cover = next(x for x in b if x >= length)
+        assert cover >= length
+        if b[0] < cover < max_len:
+            assert cover < 2 * length, (length, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(caps, st.integers(0, 40))
+def test_slot_valid_is_occupancy_prefix(L, pos):
+    """§7 decode validity: exactly the first pos+1 columns are live."""
+    pos = min(pos, L - 1)
+    v = np.asarray(masking.slot_valid(jnp.asarray([[pos]]), L))[0, 0]
+    np.testing.assert_array_equal(v, np.arange(L) <= pos)
