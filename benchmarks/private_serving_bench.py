@@ -280,11 +280,77 @@ def run_long(mode: str, cfg, params, prompts, slots: int, n_new: int,
     return out
 
 
+CHAOS_PLANS = (
+    ("corrupt_open_prefill",
+     dict(kind="corrupt_open", phase="prefill", rid=0, index=2)),
+    ("nan_logits_decode", dict(kind="nan_logits", phase="decode", rid=0)),
+    ("transport_drop_decode",
+     dict(kind="transport_drop", phase="decode", index=4)),
+    ("pool_exhaust_decode",
+     dict(kind="pool_exhaust", phase="decode", index=3, persist=True)),
+)
+
+
+def run_chaos(mode: str, cfg, params, prompts, slots: int, n_new: int,
+              max_len: int):
+    """Chaos smoke (DESIGN.md §11): serve the workload under each
+    representative fault plan with the paranoid guards armed, and hold
+    the robustness contract — every request is either token-identical
+    to the fault-free run or marked failed/quarantined with exact
+    partial comm accounting, and the engine ends with no stuck slots.
+    Eager (value corruption skips tracers by design)."""
+    from repro.core import comm
+    from repro.runtime import faults
+    from repro.serving.engine import PrivateServingEngine
+
+    def serve(injector=None):
+        eng = PrivateServingEngine(cfg, params, jax.random.key(0),
+                                   mode=mode, max_slots=slots,
+                                   max_len=max_len, decode_jit=False,
+                                   integrity="paranoid")
+        rids = [eng.submit(p, max_new_tokens=n_new) for p in prompts]
+        with comm.ledger() as led:
+            if injector is None:
+                outs, stats = eng.run_to_completion()
+            else:
+                with faults.inject(injector):
+                    outs, stats = eng.run_to_completion()
+        return rids, outs, stats, led, eng
+
+    rids, base, _, _, _ = serve()
+    out = {}
+    for name, spec in CHAOS_PLANS:
+        spec = dict(spec)  # CHAOS_PLANS stays reusable
+        inj = faults.FaultInjector(
+            faults.FaultPlan(spec.pop("kind"), **spec))
+        rids, outs, stats, led, eng = serve(inj)
+        assert inj.fired, f"{mode}/{name}: plan never fired"
+        statuses = {}
+        for r in rids:
+            st = stats[r]
+            statuses[st["status"]] = statuses.get(st["status"], 0) + 1
+            if st["status"] in ("failed", "quarantined"):
+                assert r not in outs, f"{mode}/{name}: delivered a " \
+                    f"failed request"
+            elif st["status"] == "ok":
+                assert outs[r] == base[r], \
+                    f"{mode}/{name}: unaffected request diverged"
+        assert sum(s["online_bits"] for s in stats.values()) \
+            == led.total_bits(), f"{mode}/{name}: conservation broke"
+        assert all(s is None for s in eng.slots), \
+            f"{mode}/{name}: stuck slot"
+        out[name] = {"fired": len(inj.fired), "statuses": statuses,
+                     "survived_faults": eng.health()["faults"]}
+        print(f"[private-serving] chaos {mode}/{name}: "
+              f"fired {len(inj.fired)}, statuses {statuses}")
+    return out
+
+
 def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
         max_len: int = 24, rounds: int = 2, out: str | None = OUT,
         smoke: bool = False, modes=MODES, mixed: bool | None = None,
         uniform: bool = True, long_prompts: bool | None = None,
-        chunk_size: int = 4):
+        chunk_size: int = 4, chaos: bool = False):
     from repro.configs.paper_models import GPT2_TINY as CFG
     from repro.models.registry import get_api
 
@@ -327,6 +393,12 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
             results["centaur_vs_smpc_tokens_per_sec_mixed"] = r
             print(f"[private-serving] centaur vs smpc under "
                   f"mixed-length traffic: {r}x tokens/sec")
+    if chaos:
+        results["chaos"] = {
+            mode: run_chaos(mode, CFG, params, prompts,
+                            slots=max(slot_counts), n_new=n_new,
+                            max_len=max_len)
+            for mode in modes}
     if long_prompts and "centaur" in modes:
         # the paper-protocol engine only: an smpc chunk program stacks
         # per-chunk NR softmax iterations into one XLA build (minutes
@@ -366,6 +438,12 @@ def main(argv=None):
                          "for the CI 1-chunk-program check)")
     wl.add_argument("--uniform-only", action="store_true",
                     help="skip the mixed-length/long-prompt workloads")
+    wl.add_argument("--inject-faults", action="store_true",
+                    help="chaos smoke (DESIGN.md §11): serve under "
+                         "each representative fault plan with paranoid "
+                         "guards armed and assert the robustness "
+                         "contract (token-identical or quarantined, "
+                         "exact partial comm, no stuck slots)")
     ap.add_argument("--chunk-size", type=int, default=4,
                     help="chunk size for the long-prompt workload; "
                          "must divide max_len, and the comm win over "
@@ -377,16 +455,18 @@ def main(argv=None):
     # a workload flag FOCUSES only under --smoke (the CI regression
     # checks); full runs always measure every workload so the written
     # BENCH json never silently drops a section
-    focused = args.smoke and (args.mixed_lengths or args.long_prompts)
+    focused = args.smoke and (args.mixed_lengths or args.long_prompts
+                              or args.inject_faults)
     run(out=None if args.smoke else args.out, smoke=args.smoke,
         modes=modes,
-        mixed=(False if args.uniform_only
+        mixed=(False if args.uniform_only or args.inject_faults
                else True if args.mixed_lengths
                else False if focused else None),
-        long_prompts=(False if args.uniform_only
+        long_prompts=(False if args.uniform_only or args.inject_faults
                       else True if args.long_prompts
                       else False if focused else None),
-        uniform=not focused, chunk_size=args.chunk_size)
+        uniform=not focused, chunk_size=args.chunk_size,
+        chaos=args.inject_faults)
 
 
 if __name__ == "__main__":

@@ -36,12 +36,28 @@ from collections import deque
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import faults
+
 from . import comm, ring
 from .sharing import ShareTensor, reconstruct, share
 
 # Flip to False to restore the unfused 5-GEMM reference combine globally
 # (benchmarks toggle per call via the `fused=` kwarg instead).
 FUSE_ONLINE = True
+
+
+def _fault_dealer(kind: str):
+    """Chaos seam on offline-material generation.  Guarded against
+    capture() traces: a RecordingDealer discovering a layer's triple
+    demand under eval_shape must never trip a plan counter (eager and
+    jit paths would diverge on when plans fire)."""
+    if faults._INJECTORS and not comm.capturing():
+        faults.on_dealer(kind)
+
+
+def _fault_take(spec):
+    if faults._INJECTORS and not comm.capturing():
+        faults.on_take(spec)
 
 
 def _matmul_triple_bits(a_shape, b_shape, c_shape) -> int:
@@ -61,6 +77,7 @@ class TripleDealer:
         return keys[1:]
 
     def matmul_triple(self, a_shape, b_shape):
+        _fault_dealer("matmul")
         ka, kb, ks = self._split()
         a = ring.rand_ring(ka, a_shape)
         b = ring.rand_ring(kb, b_shape)
@@ -72,6 +89,7 @@ class TripleDealer:
         return share(ks0, a), share(ks1, b), share(ks2, c)
 
     def mul_triple(self, shape):
+        _fault_dealer("mul")
         ka, kb, ks = self._split()
         a = ring.rand_ring(ka, shape)
         b = ring.rand_ring(kb, shape)
@@ -84,6 +102,7 @@ class TripleDealer:
 
     def square_triple(self, shape):
         """(A, A^2) pair for the square protocol (half a mul triple)."""
+        _fault_dealer("square")
         ka, ks1, ks2 = self._split()
         a = ring.rand_ring(ka, shape)
         c = a * a
@@ -100,6 +119,7 @@ class TripleDealer:
         dealer supplies only the fresh query-side mask A — the matching
         C = A @ B is derived against the caller's persistent B inside
         `matmul_masked_f` and billed there as dealer traffic."""
+        _fault_dealer("mask")
         ka, ks1, _ = self._split()
         a = ring.rand_ring(ka, shape)
         comm.record("dealer_triple", rounds=1,
@@ -198,6 +218,7 @@ class TriplePool:
         n == 1 generates eagerly (no per-spec program compile) — the
         right shape for one-shot specs like growing KV-decode GEMMs."""
         spec = _canon_spec(spec)
+        _fault_dealer(spec[0])
         pool = self._pools.setdefault(spec, deque())
         if n == 1:
             pool.append(_GEN[spec[0]](self._next_key(), *spec[1:]))
@@ -250,6 +271,7 @@ class TriplePool:
         generators compiled for shapes never seen again — while hot
         recurring shapes ramp up to `batch`-ahead generation."""
         spec = _canon_spec(spec)
+        _fault_take(spec)
         pool = self._pools.setdefault(spec, deque())
         if not pool:
             n = min(self.batch, max(1, self._taken.get(spec, 0)))
@@ -259,6 +281,18 @@ class TriplePool:
 
     def size(self, spec) -> int:
         return len(self._pools.get(_canon_spec(spec), ()))
+
+    def stock(self) -> dict:
+        """Pool census for engine.health(): triples in stock and taken
+        so far per spec kind (aggregated over shapes)."""
+        in_stock: dict[str, int] = {}
+        taken: dict[str, int] = {}
+        for spec, pool in self._pools.items():
+            in_stock[spec[0]] = in_stock.get(spec[0], 0) + len(pool)
+        for spec, n in self._taken.items():
+            taken[spec[0]] = taken.get(spec[0], 0) + n
+        return {"in_stock": in_stock, "taken": taken,
+                "specs": len(self._pools)}
 
     # ---- TripleDealer interface -------------------------------------------
     def matmul_triple(self, a_shape, b_shape):
@@ -337,6 +371,12 @@ def _open_masked(x: ShareTensor, a: ShareTensor, protocol: str):
     # each party sends numel elements; 2x crosses the wire
     comm.record(protocol, rounds=0,
                 bits=2 * comm.numel(e.shape) * comm.RING_BITS)
+    # chaos seam: a corrupt_open/ring_wrap plan lands on the value a
+    # party received here (concrete values only — see runtime.faults).
+    # No envelope guard is possible at this seam: E = X - A is uniform
+    # on the ring by construction.
+    if faults._INJECTORS:
+        e = faults.on_open(protocol, e)
     return e
 
 

@@ -17,6 +17,8 @@ import contextlib
 from collections import defaultdict
 from dataclasses import dataclass, field
 
+from repro.runtime import faults
+
 RING_BITS = 64
 
 
@@ -118,12 +120,19 @@ def replay(events, online_only: bool = False):
     itself at generation time."""
     if _MUTED[-1] or _CAPTURES:
         return
-    for led in _LEDGERS:
-        for e in events:
-            if online_only and not e.online:
-                continue
+    # per-event outer loop so an injected transport fault (jit path:
+    # the schedule replays where eager would record) bills every ledger
+    # the events up to the failed message, exactly like eager — partial
+    # ticks stay sum-conserving across ledgers.  Per-ledger event order
+    # is unchanged.
+    for e in events:
+        if online_only and not e.online:
+            continue
+        for led in _LEDGERS:
             led.events.append(CommEvent(e.protocol, e.rounds, e.bits,
                                         e.tag, e.online))
+        if faults._INJECTORS:
+            faults.on_record(e.protocol, e.rounds, e.bits, e.online)
 
 
 @contextlib.contextmanager
@@ -165,6 +174,17 @@ def record(protocol: str, rounds: int, bits: int, online: bool = True):
         return
     for led in _LEDGERS:
         led.record(protocol, rounds, bits, online)
+    # chaos seam, AFTER billing: the bytes crossed, then the failure
+    # surfaced — an injected TransportFault leaves every ledger with
+    # the partial event so accounting stays sum-conserving
+    if faults._INJECTORS:
+        faults.on_record(protocol, rounds, bits, online)
+
+
+def capturing() -> bool:
+    """True while a `capture()` trace is open — seams use this to keep
+    chaos hooks out of abstract cost-schedule traces."""
+    return bool(_CAPTURES)
 
 
 def numel(shape) -> int:

@@ -17,14 +17,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import faults
+
 from . import comm, ring
 from .sharing import ShareTensor, reconstruct, share
+
+# Paranoid-mode envelope for P1's decoded permuted activations: honest
+# protocol values are bounded by the additive-mask depth (activations
+# themselves are O(1-100)); a corrupted share or ring wrap decodes to
+# ~2^47 or NaN and trips the guard at the very next reveal-compute seam.
+OPEN_ENVELOPE = 4.0 * 1e4  # 4 * masking.MASK_MAGNITUDE (import-cycle-free)
 
 
 def pp_apply(fn, x: ShareTensor, key, protocol: str,
              frac_bits: int = ring.FRAC_BITS) -> ShareTensor:
     """Reveal-compute-reshare on a permuted-state shared tensor."""
     x_plain = ring.decode(reconstruct(x), frac_bits, jnp.float32)
+    # integrity guard (engine integrity="paranoid"): P1 already holds
+    # x_plain in the clear here, so the check is party-local and bills
+    # nothing — the ledger-independence contract is untouched
+    if faults.paranoid():
+        faults.check_envelope(x_plain, OPEN_ENVELOPE, protocol)
     y = fn(x_plain)
     comm.record(protocol, rounds=2,
                 bits=(comm.numel(x.shape) + comm.numel(y.shape))

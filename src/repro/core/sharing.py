@@ -14,6 +14,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import faults
+
 from . import comm, ring
 
 
@@ -112,7 +114,11 @@ def reveal(st: ShareTensor, protocol: str = "reveal"):
     1 round, numel * 64 bits (one share crosses the link)."""
     comm.record(protocol, rounds=1,
                 bits=comm.numel(st.shape) * comm.RING_BITS)
-    return reconstruct(st)
+    out = reconstruct(st)
+    # chaos seam: the receiving party's reconstructed value
+    if faults._INJECTORS:
+        out = faults.on_open(protocol, out)
+    return out
 
 
 def reshare(key, x_ring, protocol: str = "reshare") -> ShareTensor:

@@ -30,6 +30,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.runtime.faults import EngineConfigError, ProtocolIntegrityError
+
 from .. import beaver, comm, ring
 from ..sharing import ShareTensor
 from . import masking
@@ -422,8 +424,9 @@ def model_forward(pm: PrivateModel, tokens, jit: bool = False):
     """
     suite = get_suite(pm)
     cfg = pm.cfg
-    assert cfg.family in suite.families, \
-        f"{pm.mode} does not cover family {cfg.family!r}"
+    if cfg.family not in suite.families:
+        raise EngineConfigError(
+            f"{pm.mode} does not cover family {cfg.family!r}")
     if jit and suite.jittable():
         S = tokens.shape[1]
         x = suite.embed(tokens, jnp.arange(S))
@@ -448,10 +451,13 @@ def model_forward(pm: PrivateModel, tokens, jit: bool = False):
 # =============================================================================
 
 def _assert_servable(suite):
-    assert suite.serves, \
-        f"{suite.mode} mode has no share-domain KV-cache decode path"
-    assert suite.cfg.family == "dense" and not suite.cfg.use_mla, \
-        "private serving covers the dense KV-cache decode path"
+    # explicit raises (not asserts): config validation must survive -O
+    if not suite.serves:
+        raise EngineConfigError(
+            f"{suite.mode} mode has no share-domain KV-cache decode path")
+    if suite.cfg.family != "dense" or suite.cfg.use_mla:
+        raise EngineConfigError(
+            "private serving covers the dense KV-cache decode path")
 
 
 def init_slot_caches(pm: PrivateModel, n_slots: int, max_len: int):
@@ -512,7 +518,9 @@ def prefill(pm: PrivateModel, tokens, max_len: int | None = None,
     B, S = tokens.shape
     if max_len is None:
         max_len = S + 1
-    assert max_len >= S, (max_len, S)
+    if max_len < S:
+        raise EngineConfigError(
+            f"prompt length {S} exceeds max_len {max_len}")
     if lens is not None:
         lens = jnp.asarray(lens, jnp.int32)
 
@@ -668,8 +676,9 @@ def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
     L = int(state[0]["ek"].shape[1])
-    assert int(jnp.max(pos)) + C <= L, \
-        f"chunk past padded cache: pos={pos}, C={C}, max_len={L}"
+    if int(jnp.max(pos)) + C > L:
+        raise ProtocolIntegrityError(
+            f"chunk past padded cache: pos={pos}, C={C}, max_len={L}")
 
     def run_layers(sh, p, tok, ps, ln, lsts):
         q_pos = ps[:, None] + jnp.arange(C)
@@ -749,8 +758,9 @@ def decode_step(pm: PrivateModel, caches, token, pos,
     L = int(caches[0]["k"].shape[1])
     # dynamic_update_slice would silently clamp an out-of-range write
     # onto the previous token's K/V row — fail loudly instead
-    assert int(jnp.max(pos)) + S <= L, \
-        f"decode past padded cache: pos={pos}, S={S}, max_len={L}"
+    if int(jnp.max(pos)) + S > L:
+        raise ProtocolIntegrityError(
+            f"decode past padded cache: pos={pos}, S={S}, max_len={L}")
     if jit:
         return _run_jit_decode_step(pm, caches, token, pos,
                                     lookahead=lookahead)

@@ -50,6 +50,16 @@ def main(argv=None):
                          " cache — ONE compiled chunk program for every"
                          " length mix; replaces --buckets (max-len must"
                          " be a multiple of the chunk size)")
+    ap.add_argument("--integrity", choices=["off", "paranoid"],
+                    default="off",
+                    help="arm the party-local runtime integrity guards"
+                         " (DESIGN.md §11): opened-value envelopes,"
+                         " cache-splice structure, ledger conservation."
+                         " Guards bill zero comm")
+    ap.add_argument("--health", action="store_true",
+                    help="print the engine health snapshot (party"
+                         " liveness, pool stock, quarantine census)"
+                         " after serving")
     args = ap.parse_args(argv)
     if args.chunk_size is not None:
         if args.buckets is not None:
@@ -117,7 +127,8 @@ def main(argv=None):
     eng = PrivateServingEngine(cfg, params, jax.random.key(2),
                                mode=args.mode, max_slots=4,
                                max_len=args.max_len, buckets=buckets,
-                               chunk_size=args.chunk_size)
+                               chunk_size=args.chunk_size,
+                               integrity=args.integrity)
     with comm.ledger() as led:
         rids = [eng.submit(p, max_new_tokens=args.max_new)
                 for p in random_prompts()]
@@ -140,9 +151,18 @@ def main(argv=None):
         flags = "".join([", truncated" if st["truncated"] else "",
                          ", prompt-truncated"
                          if st["prompt_truncated"] else ""])
-        print(f"  req {rid}: {outs[rid]} "
+        print(f"  req {rid}: {outs.get(rid, '<not delivered>')} "
               f"({st['online_bits'] / 8e6:.1f} MB online, "
-              f"{st['rounds']} rounds{flags})")
+              f"{st['rounds']} rounds, status {st['status']}{flags})")
+    if args.health:
+        h = eng.health()
+        parties = " ".join(f"{k}={v}" for k, v in h["parties"].items())
+        pool = h["pool"] or {}
+        print(f"health: {parties}; pool taken "
+              f"{sum(pool.get('taken', {}).values())} / in stock "
+              f"{sum(pool.get('in_stock', {}).values())}; "
+              f"quarantined {h['quarantined']}; failed {h['failed']}; "
+              f"faults {h['faults']}; ticks {h['ticks']}")
 
 
 if __name__ == "__main__":

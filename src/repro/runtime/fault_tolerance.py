@@ -46,15 +46,25 @@ class StragglerMonitor:
     mesh from the last checkpoint), or rebalance (shrink its data
     shard)."""
 
-    def __init__(self, policy: StragglerPolicy = StragglerPolicy(),
+    def __init__(self, policy: StragglerPolicy | None = None,
                  ema: float = 0.3):
-        self.policy = policy
+        # a fresh policy per monitor: a shared default instance would
+        # alias policy mutations across every monitor in the process
+        self.policy = StragglerPolicy() if policy is None else policy
         self.ema_alpha = ema
         self.times: dict[int, float] = {}
         self.counts: dict[int, int] = defaultdict(int)
         self.events: list = []
+        self.last_step: dict[int, int] = {}
 
     def observe(self, host: int, step: int, duration: float):
+        # drop stale/duplicate step reports (a re-delivered beat or an
+        # out-of-order arrival must not inflate the observation count
+        # or drag the EMA backwards in time)
+        last = self.last_step.get(host)
+        if last is not None and step <= last:
+            return
+        self.last_step[host] = step
         prev = self.times.get(host, duration)
         self.times[host] = (1 - self.ema_alpha) * prev \
             + self.ema_alpha * duration
@@ -93,11 +103,18 @@ class PreemptionGuard:
                  install_signal: bool = False):
         self.flag_file = flag_file
         self._flag = False
+        self._prev_handler = None
         if install_signal:  # opt-in; tests use the file/explicit path
-            signal.signal(signal.SIGTERM, self._on_signal)
+            # chain, don't clobber: a pre-existing SIGTERM handler
+            # (the launcher's own checkpointer, a supervisor's hook)
+            # still runs after the flag is raised
+            self._prev_handler = signal.signal(signal.SIGTERM,
+                                               self._on_signal)
 
-    def _on_signal(self, *_):
+    def _on_signal(self, signum=None, frame=None):
         self._flag = True
+        if callable(self._prev_handler):
+            self._prev_handler(signum, frame)
 
     def request(self):
         self._flag = True

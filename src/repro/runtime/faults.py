@@ -1,0 +1,364 @@
+"""Deterministic protocol fault injection + runtime integrity guards.
+
+Chaos engineering for the private serving stack (DESIGN.md §11): a
+seedable :class:`FaultInjector` holds declarative :class:`FaultPlan`s
+("corrupt the share side of the 3rd matmul open during request r's
+prefill", "exhaust the TriplePool after 5 takes", "NaN request r's
+decoded logits", "wrap the ring on one opened row") and is consulted
+from tiny hooks at the protocol's natural seams — ``comm.record`` /
+``comm.replay`` (transport), ``beaver._open_masked`` / ``sharing.reveal``
+(opened values), ``TriplePool.take``/``generate`` and the
+``TripleDealer`` triple methods (offline phase), and the serving
+engine's logits decode.  Plans fire on deterministic per-plan call
+counters scoped by the ambient engine phase, so a chaos run is
+bit-reproducible: the same plans against the same engine always corrupt
+the same message.
+
+Integrity guards (``check_envelope`` / ``check_tree_match``) are the
+runtime tripwires behind the engine's ``integrity="paranoid"`` flag.
+They are party-local computations on values a party already holds in
+plaintext (decoded pp-permuted activations at P1, decoded logits at the
+client, a party's own cache-share metadata) and therefore record ZERO
+ledger events — the PR-5 ledger-independence contract stays
+bit-identical with guards on.  NOTE the one value class a guard can
+never bound: a masked Beaver opening E = X - A is *uniform* on the ring
+by construction, so there is no magnitude envelope at `_open_masked`
+itself; envelopes apply only where the protocol legitimately decodes
+(pp_apply inputs, head logits), which is also exactly where corruption
+must surface to do damage.
+
+Jit caveat: value-corruption plans (``corrupt_open`` / ``ring_wrap``)
+act on concrete arrays only and skip tracers — corrupting a traced
+value would bake the fault into a cached compiled program and poison
+every later fault-free call.  Raising plans (pool/dealer/transport)
+fire on the Python side and work under jit too (transport faults on the
+jit path fire from ``comm.replay``).  Chaos sweeps run the engine with
+``decode_jit=False`` when they need value corruption.
+
+This module deliberately imports nothing from ``repro.core`` at import
+time (the core protocol modules import it), and nothing here touches
+the ledger stacks.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+# =============================================================================
+# typed failure hierarchy
+# =============================================================================
+
+class ServingFault(Exception):
+    """Base of every fault the serving engine knows how to survive."""
+
+
+class ProtocolIntegrityError(ServingFault):
+    """An integrity guard tripped: an opened/decoded value escaped its
+    envelope, a cache splice changed shape/dtype, or per-request
+    accounting stopped summing to the ledger."""
+
+
+class TransportFault(ServingFault):
+    """A protocol message failed in transit (injected at comm.record /
+    comm.replay)."""
+
+
+class DealerFault(ServingFault):
+    """The trusted dealer failed to produce offline material."""
+
+
+class PoolExhausted(DealerFault):
+    """The TriplePool ran dry and could not restock."""
+
+
+class InvalidRequest(ServingFault, ValueError):
+    """A submitted request is malformed (empty prompt, non-positive
+    token budget).  Raised explicitly so it survives ``python -O``."""
+
+
+class EngineConfigError(ServingFault, ValueError):
+    """Engine construction was given an inconsistent configuration.
+    Raised explicitly so it survives ``python -O``."""
+
+
+# =============================================================================
+# fault plans
+# =============================================================================
+
+#: plan kind -> the hook ("op") it fires at
+OP_OF = {"corrupt_open": "open", "ring_wrap": "open",
+         "pool_exhaust": "take", "dealer_fault": "dealer",
+         "transport_drop": "record", "nan_logits": "logits"}
+
+FAULT_KINDS = tuple(OP_OF)
+
+
+@dataclass
+class FaultPlan:
+    """One declarative fault: fire `kind` at the `index`-th call of its
+    hook that matches (site, phase, rid).  `persist=True` keeps firing
+    on every later matching call (e.g. a pool that STAYS exhausted).
+
+    `site` filters on the protocol/spec name seen at the seam
+    ("matmul", "ppsm", "reveal", ... — "*" matches all); `phase` on the
+    engine phase ("prefill" | "decode" | "*"); `rid` on the request
+    being prefilled (None matches any).  `row` picks the leading-axis
+    row a value corruption lands on (slot index during a batched decode
+    tick); `magnitude` is the decoded size of the injected offset."""
+    kind: str
+    site: str = "*"
+    phase: str = "*"
+    index: int = 0
+    rid: int | None = None
+    row: int = 0
+    persist: bool = False
+    magnitude: float = 1e9
+
+    def __post_init__(self):
+        if self.kind not in OP_OF:
+            raise EngineConfigError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+
+
+class FaultInjector:
+    """Deterministic fault scheduler: per-plan counters over matching
+    hook calls; `fired` logs (kind, op, site, phase, rid, count) for
+    every injection so tests can assert exact reproducibility."""
+
+    def __init__(self, *plans: FaultPlan, seed: int = 0):
+        self.plans = list(plans)
+        self.seed = seed
+        self._counts = [0] * len(self.plans)
+        self.fired: list[tuple] = []
+
+    def reset(self):
+        self._counts = [0] * len(self.plans)
+        self.fired = []
+
+    def _arm(self, op: str, site: str, rid=None):
+        """Count this hook call against every matching plan; return the
+        plans whose trigger index is reached."""
+        if rid is None:
+            rid = current_rid()
+        phase = current_phase()
+        hits = []
+        for j, p in enumerate(self.plans):
+            if OP_OF[p.kind] != op:
+                continue
+            if p.site != "*" and p.site != site:
+                continue
+            if p.phase != "*" and p.phase != phase:
+                continue
+            if p.rid is not None and p.rid != rid:
+                continue
+            c = self._counts[j]
+            self._counts[j] += 1
+            if c == p.index or (p.persist and c >= p.index):
+                hits.append(p)
+                self.fired.append((p.kind, op, site, phase, rid, c))
+        return hits
+
+
+# =============================================================================
+# ambient stacks: active injector, engine phase, integrity mode
+# =============================================================================
+
+_INJECTORS: list[FaultInjector] = []
+_PHASES: list[tuple[str, object]] = [("*", None)]
+_INTEGRITY: list[str] = ["off"]
+
+
+@contextlib.contextmanager
+def inject(injector: FaultInjector):
+    """Activate an injector for the enclosed block (innermost wins)."""
+    _INJECTORS.append(injector)
+    try:
+        yield injector
+    finally:
+        _INJECTORS.pop()
+
+
+@contextlib.contextmanager
+def phase(name: str, rid=None):
+    """Engine-phase scope ("prefill" / "decode") for plan targeting."""
+    _PHASES.append((name, rid))
+    try:
+        yield
+    finally:
+        _PHASES.pop()
+
+
+def current_phase() -> str:
+    return _PHASES[-1][0]
+
+
+def current_rid():
+    return _PHASES[-1][1]
+
+
+@contextlib.contextmanager
+def integrity(mode: str):
+    """Integrity-guard scope: "paranoid" arms check_envelope inside the
+    protocol stack for the enclosed block, "off" disarms it."""
+    if mode not in ("off", "paranoid"):
+        raise EngineConfigError(f"integrity mode {mode!r}; "
+                                "one of ('off', 'paranoid')")
+    _INTEGRITY.append(mode)
+    try:
+        yield
+    finally:
+        _INTEGRITY.pop()
+
+
+def paranoid() -> bool:
+    return _INTEGRITY[-1] == "paranoid"
+
+
+# =============================================================================
+# hooks (called from the protocol seams; no-ops without an injector)
+# =============================================================================
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _corrupt(value, plan: FaultPlan):
+    from repro.core import ring  # lazy: avoids any import-time cycle
+    if plan.kind == "ring_wrap":
+        # +2^63 mod 2^64: flips the sign bit — the canonical overflow
+        off = np.int64(-(1 << 63))
+    else:
+        off = np.int64(int(plan.magnitude) << ring.FRAC_BITS)
+    if value.ndim == 0:
+        return value + off
+    idx = plan.row % value.shape[0]
+    return value.at[idx].add(off)
+
+
+def on_open(protocol: str, value):
+    """Seam hook on every opened/revealed ring tensor.  May return a
+    corrupted copy (concrete values only — tracers pass through
+    uncounted so eager and jit traces never diverge on cached
+    programs)."""
+    if not _INJECTORS or _is_tracer(value):
+        return value
+    for p in _INJECTORS[-1]._arm("open", protocol):
+        value = _corrupt(value, p)
+    return value
+
+
+def on_record(protocol: str, rounds: int, bits: int, online: bool = True):
+    """Seam hook on every comm event (after billing: the bytes crossed,
+    then the failure surfaced — partial ticks stay sum-conserving)."""
+    if not _INJECTORS:
+        return
+    for p in _INJECTORS[-1]._arm("record", protocol):
+        raise TransportFault(
+            f"injected transport fault: {protocol} "
+            f"({rounds} rounds / {bits} bits, "
+            f"{'online' if online else 'offline'})")
+
+
+def on_take(spec):
+    """Seam hook on TriplePool.take (spec already canonical)."""
+    if not _INJECTORS:
+        return
+    for _ in _INJECTORS[-1]._arm("take", spec[0]):
+        raise PoolExhausted(f"injected pool exhaustion at take({spec})")
+
+
+def on_dealer(kind: str):
+    """Seam hook on offline-material generation (dealer crash)."""
+    if not _INJECTORS:
+        return
+    for _ in _INJECTORS[-1]._arm("dealer", kind):
+        raise DealerFault(f"injected dealer fault generating {kind!r}")
+
+
+def on_logits(rid, logits):
+    """Seam hook on a request's decoded logits row (numpy, engine
+    side).  Returns the (possibly NaN'd) row."""
+    if not _INJECTORS:
+        return logits
+    for _ in _INJECTORS[-1]._arm("logits", "logits", rid=rid):
+        logits = np.full_like(logits, np.nan)
+    return logits
+
+
+# =============================================================================
+# integrity guards — party-local, zero ledger events
+# =============================================================================
+
+def check_envelope(x, limit: float, what: str):
+    """Paranoid-mode tripwire on a legitimately decoded plaintext value:
+    finite and |x| <= limit (a multiple of masking.MASK_MAGNITUDE at the
+    call site).  Party-local — the checking party already holds `x` in
+    plaintext — so it bills nothing.  Skips tracers (under jit the
+    check runs on the eager reference path only)."""
+    if not paranoid() or _is_tracer(x):
+        return
+    xa = np.asarray(x)
+    if xa.size == 0:
+        return
+    if not np.isfinite(xa).all():
+        raise ProtocolIntegrityError(f"{what}: non-finite decoded value")
+    m = float(np.abs(xa).max())
+    if m > limit:
+        raise ProtocolIntegrityError(
+            f"{what}: |decoded value| {m:.4g} escapes envelope "
+            f"{limit:.4g} — corrupted share or ring wrap")
+
+
+def check_finite_logits(logits, limit: float, what: str):
+    """Envelope for decoded logits rows; always-on version used by the
+    engine regardless of tracing (logits are concrete numpy there)."""
+    la = np.asarray(logits)
+    if not np.isfinite(la).all():
+        raise ProtocolIntegrityError(f"{what}: non-finite logits")
+    if la.size and float(np.abs(la).max()) > limit:
+        raise ProtocolIntegrityError(
+            f"{what}: logits escape envelope {limit:.4g}")
+
+
+def check_tree_match(new, ref, what: str):
+    """Structural guard: `new` must match `ref` in pytree structure,
+    leaf shapes and dtypes (cache-splice integrity).  Party-local on
+    share metadata; bills nothing."""
+    ns = jax.tree.structure(new)
+    rs = jax.tree.structure(ref)
+    if ns != rs:
+        raise ProtocolIntegrityError(
+            f"{what}: pytree structure changed ({ns} != {rs})")
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(ref)):
+        if jax.numpy.shape(a) != jax.numpy.shape(b):
+            raise ProtocolIntegrityError(
+                f"{what}: leaf shape changed "
+                f"({jax.numpy.shape(a)} != {jax.numpy.shape(b)})")
+        da = getattr(a, "dtype", None)
+        db = getattr(b, "dtype", None)
+        if da != db:
+            raise ProtocolIntegrityError(
+                f"{what}: leaf dtype changed ({da} != {db})")
+
+
+@dataclass
+class FaultLogEntry:
+    """Engine-side record of a survived fault (health() telemetry)."""
+    tick: int
+    phase: str
+    rid: object
+    error: str
+    detail: str = ""
+    retries: int = 0
+    outcome: str = "retried"   # retried | failed | quarantined
+
+
+def summarize_faults(entries: list[FaultLogEntry]) -> dict:
+    out: dict[str, int] = {}
+    for e in entries:
+        out[e.error] = out.get(e.error, 0) + 1
+    return out

@@ -5,9 +5,12 @@ row), every step decodes the whole active batch, finished requests are
 evicted and their slots reused — the vLLM-style loop reduced to its
 JAX-native essentials (slot-indexed dynamic_update_slice into stacked
 caches).  Also drives the *private* (Centaur) serving path for the
-paper's own models via core.private_model."""
+paper's own models via core.private_model, with the crash-safe
+transactional scheduler of DESIGN.md §11 (rollback, retry, quarantine,
+graceful drain)."""
 from __future__ import annotations
 
+import contextlib
 import itertools
 from dataclasses import dataclass, field
 
@@ -17,6 +20,8 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.registry import get_api
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import HeartbeatMonitor
 
 
 @dataclass
@@ -30,6 +35,16 @@ class Request:
     truncated: bool = False
     #: prompt cut to the shared length cap (max_len - 1) at submit time
     prompt_truncated: bool = False
+    #: scheduler outcome: ok | retried | failed | quarantined.  Retry
+    #: and quarantine counts are PUBLIC metadata (same leakage class as
+    #: the chunk count): they depend on protocol/infrastructure faults,
+    #: never on prompt content — see DESIGN.md §11.
+    status: str = "ok"
+    #: failed attempts survived so far (prefill retries + decode-tick
+    #: retries for this request)
+    retries: int = 0
+    #: earliest engine tick this request may be (re)admitted (backoff)
+    not_before: int = 0
 
     @property
     def done(self) -> bool:
@@ -55,12 +70,30 @@ class RequestQueue:
     admission, eviction and the length-cap policy live here so the
     plaintext and private engines can never drift apart on the rules
     that keep them token-identical (same admit order, same length-cap
-    truncation)."""
+    truncation).  Admission goes through `_try_prefill` so the private
+    engine can make it transactional (rollback + retry + quarantine)
+    without touching the shared admit order."""
 
     def __init__(self):
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._rid = itertools.count()
+        #: scheduler tick counter (drives retry backoff)
+        self.ticks = 0
+        #: graceful drain: stop admitting, finish active slots
+        self.draining = False
+
+    @staticmethod
+    def _validate_limits(max_slots: int, max_len: int):
+        # explicit raises, not asserts: `python -O` strips asserts and
+        # would silently readmit the crashes these reject
+        if max_slots < 1:
+            raise faults.EngineConfigError(
+                f"max_slots must be >= 1, got {max_slots}")
+        if max_len < 2:
+            raise faults.EngineConfigError(
+                f"max_len must fit a prompt token plus one generated "
+                f"token, got {max_len}")
 
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
         """Queue a request.  ONE shared length-cap policy for every
@@ -73,7 +106,12 @@ class RequestQueue:
         # an empty prompt has no last-real-token to decode from: the
         # exact-length path would crash late and the bucketed path
         # would silently serve a fully-masked garbage hidden state
-        assert prompt, "empty prompt"
+        if not prompt:
+            raise faults.InvalidRequest(
+                "empty prompt: no last real token to decode from")
+        if max_new_tokens < 1:
+            raise faults.InvalidRequest(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         rid = next(self._rid)
         cap = self.max_len - 1
         truncated = len(prompt) > cap
@@ -83,11 +121,34 @@ class RequestQueue:
         return rid
 
     def _admit(self):
+        if self.draining:
+            return
         for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill_into(i, req)
-                self.slots[i] = req
+            if slot is not None:
+                continue
+            while True:
+                # first queued request whose backoff has elapsed
+                # (not_before == 0 always, for the plaintext engine:
+                # identical FIFO admit order)
+                ri = next((j for j, r in enumerate(self.queue)
+                           if r.not_before <= self.ticks), None)
+                if ri is None:
+                    break
+                req = self.queue.pop(ri)
+                if self._try_prefill(i, req):
+                    self.slots[i] = req
+                    break
+                # prefill failed and was requeued/quarantined by the
+                # subclass: try the next admissible request for this
+                # slot so one poisoned request never stalls the tick
+
+    def _try_prefill(self, slot: int, req: Request) -> bool:
+        """Admission hook: prefill `req` into `slot`, True on success.
+        The base implementation lets exceptions propagate (plaintext
+        engine semantics); the private engine overrides this with the
+        transactional rollback/retry/quarantine path."""
+        self._prefill_into(slot, req)
+        return True
 
     def _evict(self):
         for i, s in enumerate(self.slots):
@@ -112,6 +173,7 @@ class ServingEngine(RequestQueue):
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_len: int = 256):
         super().__init__()
+        self._validate_limits(max_slots, max_len)
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
@@ -227,20 +289,55 @@ class PrivateServingEngine(RequestQueue):
     reuses one π1 per request per layer).  The tail chunk is padded to
     C with masked dead tokens; each chunk tick is billed to its
     request as it runs.  `max_len` must be a multiple of C so the last
-    chunk of a capped prompt still fits the padded cache."""
+    chunk of a capped prompt still fits the padded cache.
+
+    Fault tolerance (DESIGN.md §11): admission is TRANSACTIONAL — the
+    slot's cache rows, `pos` and the request's output are snapshotted
+    before prefill and rolled back on any `faults.ServingFault`
+    (transport drop, dealer/pool failure, integrity trip); partial
+    comm is still billed to the request exactly (failed work crossed
+    the wire).  A failed request retries with per-retry tick backoff
+    up to `max_retries`, then is QUARANTINED (terminal, slot freed).
+    A whole failed decode tick likewise rolls back (nothing committed,
+    partial comm attributed sum-conservingly across the active slots)
+    and is retried; after `max_retries` consecutive failed ticks the
+    active requests are marked `failed` and the engine itself stays
+    alive.  `integrity="paranoid"` arms the party-local guards (opened
+    -value envelopes at the pp seams, logits envelope, cache-splice
+    structure, ledger sum-conservation) — guards record ZERO ledger
+    events, so the ledger-independence contract is untouched.
+    `preemption` (a PreemptionGuard) drives graceful drain; `health()`
+    snapshots liveness, pool stock and the quarantine census."""
 
     def __init__(self, cfg: ModelConfig, params, key, *,
                  mode: str = "centaur", max_slots: int = 4,
                  max_len: int = 256, decode_jit: bool = True,
                  lookahead: int = 4, buckets=None,
-                 chunk_size: int | None = None):
+                 chunk_size: int | None = None,
+                 integrity: str = "off", max_retries: int = 2,
+                 retry_backoff: int = 1, preemption=None,
+                 heartbeat_timeout: float = 60.0):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
-        assert cfg.family == "dense" and not cfg.use_mla, \
-            "private serving covers the dense KV-cache decode path"
-        assert mode in ("centaur", "smpc", "mpcformer", "secformer"), \
-            f"no share-domain serving path for mode {mode!r}"
+        from repro.core.suites import masking as _masking
+        if cfg.family != "dense" or cfg.use_mla:
+            raise faults.EngineConfigError(
+                "private serving covers the dense KV-cache decode path")
+        if mode not in ("centaur", "smpc", "mpcformer", "secformer"):
+            raise faults.EngineConfigError(
+                f"no share-domain serving path for mode {mode!r}")
+        if integrity not in ("off", "paranoid"):
+            raise faults.EngineConfigError(
+                f"integrity must be 'off' or 'paranoid', got "
+                f"{integrity!r}")
+        if max_retries < 0:
+            raise faults.EngineConfigError(
+                f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff < 0:
+            raise faults.EngineConfigError(
+                f"retry_backoff must be >= 0, got {retry_backoff}")
         super().__init__()
+        self._validate_limits(max_slots, max_len)
         self.cfg = cfg
         self.mode = mode
         self.max_slots = max_slots
@@ -249,23 +346,29 @@ class PrivateServingEngine(RequestQueue):
         self.lookahead = lookahead
         if chunk_size is not None:
             chunk_size = int(chunk_size)
-            assert buckets is None, \
-                "chunk_size replaces bucketing: pass buckets=None"
-            assert chunk_size >= 1, chunk_size
+            if buckets is not None:
+                raise faults.EngineConfigError(
+                    "chunk_size replaces bucketing: pass buckets=None")
+            if chunk_size < 1:
+                raise faults.EngineConfigError(
+                    f"chunk_size must be >= 1, got {chunk_size}")
             # ceil((max_len - 1) / C) * C <= max_len must hold so a
             # capped prompt's padded tail chunk fits the slot cache
-            assert max_len % chunk_size == 0, \
-                f"max_len {max_len} must be a multiple of " \
-                f"chunk_size {chunk_size}"
+            if max_len % chunk_size != 0:
+                raise faults.EngineConfigError(
+                    f"max_len {max_len} must be a multiple of "
+                    f"chunk_size {chunk_size}")
         self.chunk_size = chunk_size
         if buckets == "pow2":
             buckets = pow2_buckets(max_len)
         if buckets is not None:
             buckets = tuple(sorted(int(b) for b in buckets))
-            assert buckets and buckets[-1] <= max_len, \
-                f"buckets {buckets} exceed max_len {max_len}"
-            assert buckets[-1] >= max_len - 1, \
-                "largest bucket must admit every capped prompt"
+            if not buckets or buckets[-1] > max_len:
+                raise faults.EngineConfigError(
+                    f"buckets {buckets} exceed max_len {max_len}")
+            if buckets[-1] < max_len - 1:
+                raise faults.EngineConfigError(
+                    "largest bucket must admit every capped prompt")
         self.buckets = buckets
         self._comm = _comm
         self._pmod = _pm
@@ -278,6 +381,24 @@ class PrivateServingEngine(RequestQueue):
         self.prefills = 0
         self.chunk_ticks = 0
         self.decode_ticks = 0
+        # ---- fault tolerance ------------------------------------------------
+        self.integrity = integrity
+        self.max_retries = max_retries
+        self.retry_backoff = retry_backoff
+        self.preemption = preemption
+        # honest decoded logits are O(1-100); anything past the mask
+        # envelope is a corrupted share or a ring wrap
+        self._logit_limit = 4.0 * _masking.MASK_MAGNITUDE
+        self.quarantined: list[Request] = []
+        self.failed: list[Request] = []
+        self.fault_log: list[faults.FaultLogEntry] = []
+        self.prefill_failures = 0
+        self._tick_failures = 0          # consecutive failed decode ticks
+        #: logical-party liveness: in this SPMD simulation all parties
+        #: run in-process, so beats are derived from protocol progress
+        #: (a dealer fault withholds the dealer's beat)
+        self.heartbeats = HeartbeatMonitor(timeout=heartbeat_timeout)
+        self._beat()
 
     # ---- per-request comm accounting ---------------------------------------
     def _accumulate(self, req: Request, led):
@@ -287,16 +408,36 @@ class PrivateServingEngine(RequestQueue):
                                              "tokens": 0,
                                              "truncated": False,
                                              "prompt_truncated":
-                                                 req.prompt_truncated})
+                                                 req.prompt_truncated,
+                                             "status": req.status,
+                                             "retries": req.retries})
         st["rounds"] += led.total_rounds()
         st["online_bits"] += led.total_bits()
         st["offline_bits"] += led.total_bits(False) - led.total_bits()
         st["tokens"] = len(req.out)
+        st["status"] = req.status
+        st["retries"] = req.retries
+
+    @contextlib.contextmanager
+    def _billed(self, req: Request):
+        """Ledger scope whose events are ALWAYS accumulated to `req` —
+        a fault mid-protocol keeps its partial comm billed exactly
+        (those bytes crossed the wire; dropping them would break the
+        stats == global-ledger conservation invariant)."""
+        with self._comm.ledger() as led:
+            try:
+                yield led
+            finally:
+                self._accumulate(req, led)
 
     def _on_finish(self, req: Request):
+        if req.status not in ("failed", "quarantined"):
+            req.status = "retried" if req.retries else "ok"
         if req.rid in self.stats:
             self.stats[req.rid]["truncated"] = req.truncated
             self.stats[req.rid]["tokens"] = len(req.out)
+            self.stats[req.rid]["status"] = req.status
+            self.stats[req.rid]["retries"] = req.retries
 
     def compile_stats(self) -> dict:
         """Compiled-program + dispatch telemetry.  Program counts read
@@ -317,15 +458,126 @@ class PrivateServingEngine(RequestQueue):
                 "chunk_ticks": self.chunk_ticks,
                 "decode_ticks": self.decode_ticks}
 
+    # ---- fault bookkeeping --------------------------------------------------
+    def _beat(self, dealer: bool = True):
+        self.heartbeats.beat("p0")
+        self.heartbeats.beat("p1")
+        if dealer:
+            self.heartbeats.beat("dealer")
+
+    def _note_fault(self, err: Exception, phase: str, rid,
+                    retries: int = 0, outcome: str = "retried"):
+        self.fault_log.append(faults.FaultLogEntry(
+            tick=self.ticks, phase=phase, rid=rid,
+            error=type(err).__name__, detail=str(err),
+            retries=retries, outcome=outcome))
+
+    def _quarantine(self, req: Request):
+        """Terminal: the request exceeded max_retries.  Its stats entry
+        (partial comm included) survives; the slot/queue forget it."""
+        req.status = "quarantined"
+        self.quarantined.append(req)
+        self._accumulate(req, self._comm.CommLedger())  # ensure entry
+        self.stats[req.rid]["tokens"] = len(req.out)
+
+    def _register_failure(self, req: Request, err: Exception,
+                          phase: str):
+        """Shared retry/quarantine policy for a per-request fault."""
+        req.retries += 1
+        if req.retries > self.max_retries:
+            self._quarantine(req)
+            self._note_fault(err, phase, req.rid, req.retries,
+                             "quarantined")
+        else:
+            req.status = "retried"
+            req.not_before = self.ticks + self.retry_backoff * req.retries
+            self._note_fault(err, phase, req.rid, req.retries, "retried")
+
+    def _check_conservation(self, per: dict, tick) -> None:
+        """Paranoid invariant: comm.attribute's per-request split must
+        sum EXACTLY to the tick ledger (party-local arithmetic on
+        already-public metadata; bills nothing)."""
+        if self.integrity != "paranoid":
+            return
+        bits = sum(led.total_bits(False) for led in per.values())
+        rounds = sum(led.total_rounds(False) for led in per.values())
+        if (bits != tick.total_bits(False)
+                or rounds != tick.total_rounds(False)):
+            raise faults.ProtocolIntegrityError(
+                f"attribution broke sum-conservation: "
+                f"{bits}/{rounds} != {tick.total_bits(False)}"
+                f"/{tick.total_rounds(False)}")
+
+    def _bill_tick(self, tick, active):
+        """Attribute one (possibly partial) decode tick's events across
+        the active requests — exact and sum-conserving either way."""
+        rids = [self.slots[i].rid for i in active]
+        per = self._comm.attribute(tick.events, rids)
+        self._check_conservation(per, tick)
+        for i in active:
+            self._accumulate(self.slots[i], per[self.slots[i].rid])
+
     # ---- scheduler ----------------------------------------------------------
     def _bucket_for(self, length: int) -> int:
         return next(b for b in self.buckets if b >= length)
+
+    def _try_prefill(self, slot: int, req: Request) -> bool:
+        """Transactional admission: snapshot the slot's cache rows,
+        `pos` and the request output; roll all three back on any
+        ServingFault so the slot is bit-identical to before the attempt
+        (cache arrays are immutable — the snapshot is just the old list
+        of per-layer trees).  Partial comm stays billed to the request
+        (`_billed`), the fault is logged, and the request either backs
+        off into the queue or is quarantined."""
+        snap_caches = list(self.caches)
+        snap_pos = int(self.pos[slot])
+        snap_out = len(req.out)
+        try:
+            with faults.phase("prefill", rid=req.rid), \
+                    faults.integrity(self.integrity):
+                self._prefill_into(slot, req)
+            self._beat()
+            return True
+        except Exception as err:
+            self.caches = snap_caches
+            self.pos[slot] = snap_pos
+            del req.out[snap_out:]
+            if not isinstance(err, faults.ServingFault):
+                raise
+            self.prefill_failures += 1
+            self._beat(dealer=not isinstance(err, faults.DealerFault))
+            self._register_failure(req, err, "prefill")
+            if req.status != "quarantined":
+                # back into the queue behind its backoff window
+                self.queue.append(req)
+            return False
+
+    def _guard_logits(self, logits, rid, what: str):
+        """Engine-side decoded-logits seam: chaos injection point plus
+        the paranoid envelope (party-local — the output party holds the
+        decoded logits in the clear; bills nothing)."""
+        if faults._INJECTORS:
+            logits = faults.on_logits(rid, logits)
+        if self.integrity == "paranoid":
+            faults.check_finite_logits(logits, self._logit_limit, what)
+        return logits
+
+    def _splice(self, slot: int, c1):
+        """Splice a request's padded share-cache rows into its slot,
+        with the paranoid structural guard (a suite returning the wrong
+        shape/dtype would silently corrupt the whole slot batch)."""
+        new = [jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
+                            full_l, one_l)
+               for full_l, one_l in zip(self.caches, c1)]
+        if self.integrity == "paranoid":
+            faults.check_tree_match(new, self.caches,
+                                    f"prefill cache splice (slot {slot})")
+        self.caches = new
 
     def _prefill_into(self, slot: int, req: Request):
         if self.chunk_size is not None:
             return self._prefill_chunked(slot, req)
         S = len(req.prompt)
-        assert S < self.max_len, "prompt fills the slot"  # submit() caps
         toks, lens = req.prompt, None
         if self.buckets is not None:
             # pad to the smallest bucket; the pad token id is irrelevant
@@ -333,19 +585,16 @@ class PrivateServingEngine(RequestQueue):
             toks = toks + [0] * (self._bucket_for(S) - S)
             lens = jnp.asarray([S], jnp.int32)
         toks = jnp.asarray(toks, jnp.int32)[None, :]
-        with self._comm.ledger() as led:
+        with self._billed(req):
             logits, c1 = self._pmod.private_prefill(
                 self.pm, toks, max_len=self.max_len,
                 jit=self.decode_jit, lens=lens)
-        # splice the request's padded share-cache rows into its slot
-        self.caches = [
-            jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
-                         full_l, one_l)
-            for full_l, one_l in zip(self.caches, c1)]
+        lg = self._guard_logits(np.array(logits)[0], req.rid,
+                                f"prefill logits (rid {req.rid})")
+        self._splice(slot, c1)
         self.pos[slot] = S
-        req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        req.out.append(int(np.argmax(lg)))
         self.prefills += 1
-        self._accumulate(req, led)
 
     def _prefill_chunked(self, slot: int, req: Request):
         """Chunked prefill (DESIGN.md §10): consume the prompt as
@@ -355,45 +604,56 @@ class PrivateServingEngine(RequestQueue):
         as it runs — a prefill that spans several ticks stays exact and
         sum-conserving per request (`comm.attribute` with one key is
         the identity), so per-request stats keep summing to the global
-        ledger."""
+        ledger, including the partial ticks of an attempt that faults
+        halfway."""
         C = self.chunk_size
         S = len(req.prompt)
-        assert S < self.max_len, "prompt fills the slot"  # submit() caps
         n_chunks = -(-S // C)
         # pad the tail chunk; dead token ids are irrelevant (masked
         # columns, garbage rows overwritten/kept dead by decode)
         padded = req.prompt + [0] * (n_chunks * C - S)
         lens = jnp.asarray([S], jnp.int32)
-        with self._comm.ledger() as led0:
+        with self._billed(req):
             # one-time per-request state: π1 permutation material
             state = self._pmod.init_chunk_state(self.pm, 1, self.max_len)
-        self._accumulate(req, led0)
         for ci in range(n_chunks):
             toks = jnp.asarray([padded[ci * C:(ci + 1) * C]], jnp.int32)
-            with self._comm.ledger() as led:
+            with self._billed(req):
                 logits, state = self._pmod.private_prefill_chunk(
                     self.pm, state, toks, ci * C, lens,
                     jit=self.decode_jit, lookahead=self.lookahead)
             self.chunk_ticks += 1
-            self._accumulate(req, led)
+        lg = self._guard_logits(np.array(logits)[0], req.rid,
+                                f"prefill logits (rid {req.rid})")
         c1 = self._pmod.chunk_state_caches(state)
-        self.caches = [
-            jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
-                         full_l, one_l)
-            for full_l, one_l in zip(self.caches, c1)]
+        self._splice(slot, c1)
         self.pos[slot] = S
-        req.out.append(int(np.argmax(np.asarray(logits)[0])))
+        req.out.append(int(np.argmax(lg)))
         self.prefills += 1
 
     def step(self) -> bool:
-        """One tick: admit, decode the full slot width, evict."""
+        """One tick: admit, decode the full slot width, evict.
+
+        Crash safety: the decode is transactional.  A ServingFault
+        anywhere in the batched step commits NOTHING (caches, pos and
+        outputs are untouched since the new caches are only adopted on
+        success), bills the partial tick sum-conservingly across the
+        active requests, and retries next tick; `max_retries`
+        consecutive failed ticks mark the active requests `failed` and
+        free their slots — the engine itself never dies.  A per-slot
+        fault detected at the logits seam (NaN / envelope) rolls back
+        ONLY that slot's cache rows; the slot retries the same position
+        next tick (other slots commit and advance normally)."""
+        if self.preemption is not None and self.preemption.should_stop():
+            self.draining = True
+        self.ticks += 1
         self._admit()
         # prefill emits a token and may already satisfy the request
         # (max_new_tokens=1) — never decode a finished slot
         self._evict()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
-            return bool(self.queue)
+            return bool(self.queue) and not self.draining
         # decode the FULL slot width every tick: an empty slot runs a
         # dummy token at pos 0 (its logits are discarded and its cache
         # rows are rewritten wholesale by the next admit's prefill
@@ -405,20 +665,76 @@ class PrivateServingEngine(RequestQueue):
                             for s in self.slots], jnp.int32)
         pos = jnp.asarray([int(self.pos[i]) if s is not None else 0
                            for i, s in enumerate(self.slots)], jnp.int32)
-        with self._comm.ledger() as tick:
-            logits, self.caches = self._pmod.private_decode_step(
-                self.pm, self.caches, toks, pos, jit=self.decode_jit,
-                lookahead=self.lookahead)
-        lg = np.asarray(logits)
+        try:
+            with faults.phase("decode"), \
+                    faults.integrity(self.integrity), \
+                    self._comm.ledger() as tick:
+                logits, new_caches = self._pmod.private_decode_step(
+                    self.pm, self.caches, toks, pos, jit=self.decode_jit,
+                    lookahead=self.lookahead)
+        except Exception as err:
+            # nothing was committed; bill the partial tick exactly
+            self._bill_tick(tick, active)
+            if not isinstance(err, faults.ServingFault):
+                raise
+            self._beat(dealer=not isinstance(err, faults.DealerFault))
+            self._tick_failures += 1
+            if self._tick_failures > self.max_retries:
+                # persistent protocol outage: fail the active fleet so
+                # the engine survives to serve new traffic
+                for i in active:
+                    req = self.slots[i]
+                    req.status = "failed"
+                    req.retries += 1
+                    self._note_fault(err, "decode", req.rid,
+                                     req.retries, "failed")
+                    self._accumulate(req, self._comm.CommLedger())
+                    self.failed.append(req)
+                    self.slots[i] = None
+                self._tick_failures = 0
+            else:
+                self._note_fault(err, "decode", None,
+                                 self._tick_failures, "retried")
+            return True
+        self._tick_failures = 0
+        self._beat()
+        if self.integrity == "paranoid":
+            faults.check_tree_match(new_caches, self.caches,
+                                    "decode cache write")
+        lg = np.array(logits)
+        bad = []
+        with faults.phase("decode"):
+            for i in active:
+                req = self.slots[i]
+                try:
+                    lg[i] = self._guard_logits(
+                        lg[i], req.rid, f"decode logits (rid {req.rid})")
+                except faults.ProtocolIntegrityError as err:
+                    # per-slot fault: roll back this slot only; the
+                    # request retries the SAME position next tick or
+                    # quarantines
+                    bad.append(i)
+                    self._register_failure(req, err, "decode")
+        if bad:
+            bidx = jnp.asarray(bad)
+            new_caches = [
+                jax.tree.map(lambda nw, old: nw.at[bidx].set(old[bidx]),
+                             nl, ol)
+                for nl, ol in zip(new_caches, self.caches)]
+        self.caches = new_caches
         for i in active:
+            if i in bad:
+                continue
             self.slots[i].out.append(int(lg[i, 0].argmax()))
             self.pos[i] += 1
         self.decode_ticks += 1
-        # exact per-request attribution of the batched step's comm
-        per = self._comm.attribute(tick.events,
-                                   [self.slots[i].rid for i in active])
-        for i in active:
-            self._accumulate(self.slots[i], per[self.slots[i].rid])
+        # exact per-request attribution of the batched step's comm —
+        # afflicted slots did the same protocol work, so they are
+        # billed the same share
+        self._bill_tick(tick, active)
+        for i in bad:
+            if self.slots[i].status == "quarantined":
+                self.slots[i] = None
         self._evict()
         return True
 
@@ -430,3 +746,41 @@ class PrivateServingEngine(RequestQueue):
             if not self.step():
                 break
         return {r.rid: r.out for r in self.finished}, self.stats
+
+    # ---- graceful drain + health -------------------------------------------
+    def drain(self, max_steps: int = 10_000) -> tuple[dict, dict]:
+        """Graceful drain (PreemptionGuard path): stop admitting, run
+        the active slots to completion, return outputs + stats.  Queued
+        requests stay queued (a restarted engine can resubmit them);
+        partial outputs of still-active requests are NOT flushed here
+        because draining runs them to their natural finish."""
+        self.draining = True
+        for _ in range(max_steps):
+            if all(s is None for s in self.slots):
+                break
+            if not self.step():
+                break
+        return {r.rid: r.out for r in self.finished}, self.stats
+
+    def health(self) -> dict:
+        """Liveness/robustness snapshot (launch/serve.py --health):
+        logical-party heartbeats, triple-pool stock, slot occupancy,
+        quarantine census and the survived-fault log summary."""
+        dead = set(self.heartbeats.dead_hosts())
+        dealer = self.pm.dealer
+        return {
+            "parties": {h: ("dead" if h in dead else "alive")
+                        for h in self.heartbeats.last},
+            "all_alive": not dead,
+            "pool": dealer.stock() if hasattr(dealer, "stock") else None,
+            "slots": {"total": self.max_slots,
+                      "active": sum(s is not None for s in self.slots)},
+            "queue_depth": len(self.queue),
+            "quarantined": [r.rid for r in self.quarantined],
+            "failed": [r.rid for r in self.failed],
+            "faults": faults.summarize_faults(self.fault_log),
+            "retries": {"prefill_failures": self.prefill_failures,
+                        "tick_failures": self._tick_failures},
+            "ticks": self.ticks,
+            "draining": self.draining,
+        }

@@ -16,6 +16,7 @@ from repro.core import comm
 from repro.core.private_model import build_private_model, private_prefill
 from repro.core.suites import masking
 from repro.models.registry import get_api
+from repro.runtime.faults import EngineConfigError
 from repro.serving.engine import (PrivateServingEngine, ServingEngine,
                                   pow2_buckets)
 
@@ -191,9 +192,10 @@ def test_bucketed_prefill_bills_padded_cost(params):
 
 
 def test_bucket_validation():
-    with pytest.raises(AssertionError):
+    # typed config errors (not bare asserts: they must survive -O)
+    with pytest.raises(EngineConfigError):
         PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=16,
                              buckets=(8, 32))      # bucket > max_len
-    with pytest.raises(AssertionError):
+    with pytest.raises(EngineConfigError):
         PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=16,
                              buckets=(4, 8))       # cannot admit cap

@@ -24,6 +24,7 @@ from repro.core.private_model import (build_private_model,
 from repro.core.sharing import reconstruct, share
 from repro.core.suites import get_suite, masking
 from repro.models.registry import get_api
+from repro.runtime.faults import EngineConfigError
 from repro.serving.engine import PrivateServingEngine, ServingEngine
 
 KEY = jax.random.key(3)
@@ -237,13 +238,14 @@ def test_chunk_attribution_conservation(params):
 
 
 def test_chunk_size_validation(params):
-    with pytest.raises(AssertionError):
+    # typed config errors (not bare asserts: they must survive -O)
+    with pytest.raises(EngineConfigError):
         PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=20,
                              chunk_size=8)     # 20 % 8 != 0
-    with pytest.raises(AssertionError):
+    with pytest.raises(EngineConfigError):
         PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=24,
                              chunk_size=4, buckets="pow2")
-    with pytest.raises(AssertionError):
+    with pytest.raises(EngineConfigError):
         PrivateServingEngine(GPT2_TINY, {}, KEY, max_len=24,
                              chunk_size=0)
 

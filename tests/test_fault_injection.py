@@ -1,0 +1,298 @@
+"""Unit coverage for the fault-injection layer and integrity guards
+(runtime.faults + the seams in core.{comm,beaver,sharing,nonlinear}).
+
+Everything here is protocol-level (no serving engine): deterministic
+plan matching, exact corruption semantics, hook/capture interactions,
+and the party-local guards.  The engine-level chaos sweep lives in
+tests/test_serving_faults.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import beaver, comm, nonlinear, ring
+from repro.core.sharing import reveal, share
+from repro.core.suites import masking
+from repro.runtime import faults
+
+
+# ---- typed hierarchy --------------------------------------------------------
+
+def test_exception_hierarchy():
+    assert issubclass(faults.PoolExhausted, faults.DealerFault)
+    assert issubclass(faults.DealerFault, faults.ServingFault)
+    assert issubclass(faults.ProtocolIntegrityError, faults.ServingFault)
+    assert issubclass(faults.TransportFault, faults.ServingFault)
+    # validation errors double as ValueError for idiomatic callers
+    assert issubclass(faults.InvalidRequest, ValueError)
+    assert issubclass(faults.EngineConfigError, ValueError)
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(faults.EngineConfigError):
+        faults.FaultPlan("meteor_strike")
+
+
+def test_envelope_tracks_masking_constant():
+    # nonlinear hardcodes the limit (importing masking there would be a
+    # core<->suites cycle); this pin keeps the two in lockstep
+    assert nonlinear.OPEN_ENVELOPE == 4.0 * masking.MASK_MAGNITUDE
+
+
+# ---- hooks are no-ops without an injector ----------------------------------
+
+def test_hooks_inert_without_injector():
+    v = jnp.arange(4, dtype=jnp.int64)
+    assert faults.on_open("matmul", v) is v
+    faults.on_record("matmul", 1, 64)          # does not raise
+    faults.on_take(("matmul", (2, 2), (2, 2)))
+    faults.on_dealer("matmul")
+    row = np.ones(3)
+    assert faults.on_logits(0, row) is row
+
+
+# ---- deterministic plan matching -------------------------------------------
+
+def test_corrupt_open_hits_exact_row_and_call():
+    plan = faults.FaultPlan("corrupt_open", site="matmul", index=1,
+                            row=1, magnitude=100.0)
+    inj = faults.FaultInjector(plan)
+    v = jnp.zeros((3, 2), jnp.int64)
+    with faults.inject(inj):
+        a = faults.on_open("matmul", v)      # call 0: no fire
+        b = faults.on_open("ppsm", v)        # site mismatch: not counted
+        c = faults.on_open("matmul", v)      # call 1: fires
+        d = faults.on_open("matmul", v)      # call 2: one-shot, done
+    assert (np.asarray(a) == 0).all() and (np.asarray(b) == 0).all()
+    assert (np.asarray(d) == 0).all()
+    expect = 100 << ring.FRAC_BITS
+    assert np.asarray(c)[1].tolist() == [expect, expect]
+    assert (np.asarray(c)[[0, 2]] == 0).all()
+    assert inj.fired == [("corrupt_open", "open", "matmul", "*", None, 1)]
+
+
+def test_ring_wrap_flips_sign_bit():
+    inj = faults.FaultInjector(faults.FaultPlan("ring_wrap", row=0))
+    v = jnp.zeros((2,), jnp.int64)
+    with faults.inject(inj):
+        out = faults.on_open("matmul", v)
+    # +2^63 mod 2^64 == int64 min: the canonical half-ring wrap
+    assert int(np.asarray(out)[0]) == np.iinfo(np.int64).min
+    assert int(np.asarray(out)[1]) == 0
+
+
+def test_persist_keeps_firing():
+    inj = faults.FaultInjector(
+        faults.FaultPlan("transport_drop", index=2, persist=True))
+    with faults.inject(inj):
+        faults.on_record("matmul", 1, 64)
+        faults.on_record("matmul", 1, 64)
+        for _ in range(3):
+            with pytest.raises(faults.TransportFault):
+                faults.on_record("matmul", 1, 64)
+    assert len(inj.fired) == 3
+
+
+def test_phase_and_rid_filters():
+    plan = faults.FaultPlan("nan_logits", phase="prefill", rid=7)
+    inj = faults.FaultInjector(plan)
+    row = np.ones(4)
+    with faults.inject(inj):
+        assert np.isfinite(faults.on_logits(7, row)).all()  # phase "*"
+        with faults.phase("decode", rid=7):
+            assert np.isfinite(faults.on_logits(7, row)).all()
+        with faults.phase("prefill", rid=7):
+            assert np.isfinite(faults.on_logits(3, row)).all()  # rid
+            assert np.isnan(faults.on_logits(7, row)).all()     # fires
+    # filtered-out calls must not advance the counter
+    assert inj.fired[0][5] == 0
+
+
+def test_injector_reset_reproduces():
+    inj = faults.FaultInjector(
+        faults.FaultPlan("transport_drop", index=1))
+    log = []
+    for _ in range(2):
+        with faults.inject(inj):
+            faults.on_record("matmul", 1, 64)
+            with pytest.raises(faults.TransportFault):
+                faults.on_record("matmul", 1, 64)
+        log.append(list(inj.fired))
+        inj.reset()
+    assert log[0] == log[1]
+
+
+# ---- seam integration -------------------------------------------------------
+
+def test_transport_fault_bills_before_raising():
+    """The failed message's bits are already in every ledger (the bytes
+    crossed, then the ack never came) — partial accounting stays
+    sum-conserving."""
+    inj = faults.FaultInjector(faults.FaultPlan("transport_drop"))
+    with comm.ledger() as led, faults.inject(inj):
+        with pytest.raises(faults.TransportFault):
+            comm.record("matmul", rounds=1, bits=128)
+    assert led.total_bits() == 128
+    assert led.total_rounds() == 1
+
+
+def test_replay_transport_fault_bills_prefix():
+    """The jit path (comm.replay of a captured schedule) drops at the
+    same event an eager run would, with the prefix billed."""
+    with comm.capture() as sched:
+        comm.record("matmul", 1, 64)
+        comm.record("ppsm", 2, 32)
+        comm.record("matmul", 1, 64)
+    inj = faults.FaultInjector(
+        faults.FaultPlan("transport_drop", site="ppsm"))
+    with comm.ledger() as led, faults.inject(inj):
+        with pytest.raises(faults.TransportFault):
+            comm.replay(sched.events)
+    assert [e.protocol for e in led.events] == ["matmul", "ppsm"]
+    assert led.total_bits() == 96
+
+
+def test_open_masked_corruption_changes_reconstruction():
+    key = jax.random.key(0)
+    x = share(key, jnp.zeros((2, 2), jnp.int64))
+    a = share(jax.random.split(key)[0], jnp.zeros((2, 2), jnp.int64))
+    clean = beaver._open_masked(x, a, "matmul")
+    inj = faults.FaultInjector(
+        faults.FaultPlan("corrupt_open", site="matmul", row=1))
+    with faults.inject(inj):
+        dirty = beaver._open_masked(x, a, "matmul")
+    assert (np.asarray(dirty)[0] == np.asarray(clean)[0]).all()
+    assert (np.asarray(dirty)[1] != np.asarray(clean)[1]).all()
+
+
+def test_reveal_seam_fires():
+    st = share(jax.random.key(1), jnp.zeros((3,), jnp.int64))
+    inj = faults.FaultInjector(
+        faults.FaultPlan("corrupt_open", site="reveal", row=2))
+    with faults.inject(inj):
+        out = reveal(st)
+    assert int(np.asarray(out)[2]) != 0
+
+
+def test_pool_take_exhaustion_and_stock():
+    pool = beaver.TriplePool(jax.random.key(2))
+    spec = ("matmul", (2, 2), (2, 2))
+    pool.take(spec)
+    census = pool.stock()
+    assert census["taken"] == {"matmul": 1}
+    assert census["specs"] == 1
+    inj = faults.FaultInjector(
+        faults.FaultPlan("pool_exhaust", persist=True))
+    with faults.inject(inj):
+        with pytest.raises(faults.PoolExhausted):
+            pool.take(spec)
+
+
+def test_dealer_fault_on_triple_generation():
+    dealer = beaver.TripleDealer(jax.random.key(3))
+    inj = faults.FaultInjector(faults.FaultPlan("dealer_fault"))
+    with faults.inject(inj):
+        with pytest.raises(faults.DealerFault):
+            dealer.matmul_triple((2, 2), (2, 2))
+
+
+def test_dealer_hooks_skip_capture_traces():
+    """A RecordingDealer discovering triple demand under comm.capture
+    (the jit-layer build path) must never trip a plan counter."""
+    dealer = beaver.TripleDealer(jax.random.key(4))
+    inj = faults.FaultInjector(faults.FaultPlan("dealer_fault"))
+    with faults.inject(inj):
+        with comm.capture():
+            dealer.matmul_triple((2, 2), (2, 2))   # no raise
+        assert inj.fired == []
+        with pytest.raises(faults.DealerFault):
+            dealer.matmul_triple((2, 2), (2, 2))
+
+
+def test_on_open_skips_tracers():
+    """Corrupting a traced value would bake the fault into a cached
+    compiled program — tracers pass through uncounted."""
+    inj = faults.FaultInjector(
+        faults.FaultPlan("corrupt_open", persist=True))
+    with faults.inject(inj):
+        out = jax.jit(lambda v: faults.on_open("matmul", v))(
+            jnp.zeros((2,), jnp.int64))
+        assert (np.asarray(out) == 0).all()
+        assert inj.fired == []
+
+
+# ---- integrity guards -------------------------------------------------------
+
+def test_check_envelope_off_by_default():
+    faults.check_envelope(np.array([1e30, np.nan]), 1.0, "x")  # inert
+
+
+def test_check_envelope_paranoid():
+    with faults.integrity("paranoid"):
+        faults.check_envelope(np.array([1.0, -3.0]), 10.0, "x")
+        with pytest.raises(faults.ProtocolIntegrityError):
+            faults.check_envelope(np.array([1e9]), 10.0, "x")
+        with pytest.raises(faults.ProtocolIntegrityError):
+            faults.check_envelope(np.array([np.nan]), 10.0, "x")
+
+
+def test_check_envelope_skips_tracers():
+    with faults.integrity("paranoid"):
+        jax.eval_shape(
+            lambda v: (faults.check_envelope(v, 1.0, "x"), v)[1],
+            jax.ShapeDtypeStruct((4,), jnp.float32))
+
+
+def test_pp_apply_guard_catches_corrupted_decode():
+    """End-to-end: a corrupted opened share decodes past the envelope
+    and trips at the very next reveal-compute seam."""
+    huge = ring.encode(jnp.full((2, 2), 1e7), ring.FRAC_BITS)
+    st = share(jax.random.key(5), huge)
+    with faults.integrity("paranoid"):
+        with pytest.raises(faults.ProtocolIntegrityError):
+            nonlinear.pp_apply(lambda v: v, st, jax.random.key(6),
+                               "ppsm")
+    # guards record ZERO ledger events
+    with comm.ledger() as led:
+        with faults.integrity("paranoid"):
+            nonlinear.pp_apply(
+                lambda v: v,
+                share(jax.random.key(7),
+                      ring.encode(jnp.ones((2, 2)), ring.FRAC_BITS)),
+                jax.random.key(8), "ppsm")
+    with comm.ledger() as led_off:
+        nonlinear.pp_apply(
+            lambda v: v,
+            share(jax.random.key(7),
+                  ring.encode(jnp.ones((2, 2)), ring.FRAC_BITS)),
+            jax.random.key(8), "ppsm")
+    assert [(e.protocol, e.rounds, e.bits) for e in led.events] \
+        == [(e.protocol, e.rounds, e.bits) for e in led_off.events]
+
+
+def test_check_tree_match():
+    ref = [{"k": jnp.zeros((2, 3)), "v": jnp.zeros((2, 3))}]
+    faults.check_tree_match(
+        [{"k": jnp.ones((2, 3)), "v": jnp.ones((2, 3))}], ref, "x")
+    with pytest.raises(faults.ProtocolIntegrityError):
+        faults.check_tree_match(
+            [{"k": jnp.ones((2, 4)), "v": jnp.ones((2, 3))}], ref, "x")
+    with pytest.raises(faults.ProtocolIntegrityError):
+        faults.check_tree_match(
+            [{"k": jnp.ones((2, 3), jnp.int32),
+              "v": jnp.ones((2, 3))}], ref, "x")
+    with pytest.raises(faults.ProtocolIntegrityError):
+        faults.check_tree_match([{"k": jnp.ones((2, 3))}], ref, "x")
+
+
+def test_integrity_stack_nests():
+    assert not faults.paranoid()
+    with faults.integrity("paranoid"):
+        assert faults.paranoid()
+        with faults.integrity("off"):
+            assert not faults.paranoid()
+        assert faults.paranoid()
+    assert not faults.paranoid()
+    with pytest.raises(faults.EngineConfigError):
+        with faults.integrity("brave"):
+            pass

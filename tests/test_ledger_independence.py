@@ -22,6 +22,8 @@ from repro.core.private_model import (build_private_model,
                                       private_prefill,
                                       private_prefill_chunk)
 from repro.models.registry import get_api
+from repro.runtime import faults
+from repro.serving.engine import PrivateServingEngine
 
 SERVABLE = ("centaur", "smpc", "mpcformer", "secformer")
 MAXLEN = 12
@@ -66,6 +68,46 @@ def test_serving_ledger_is_data_independent(params, mode):
     assert _events(leds[0]) == _events(leds[1]), \
         (f"{mode}: comm ledger depends on private data — a "
          f"data-dependent branch leaks through traffic analysis")
+
+
+@pytest.mark.parametrize("mode", SERVABLE)
+def test_serving_ledger_bit_identical_with_guards_on(params, mode):
+    """DESIGN.md §11 contract: integrity="paranoid" guards are
+    party-local computations on values a party already holds in
+    plaintext — they must record ZERO ledger events, so the guarded
+    ledger is bit-identical to the unguarded one on every serving
+    path."""
+    key, prompt = RUNS[0]
+    base = _serving_ledger(params, mode, key, prompt)
+    with faults.integrity("paranoid"):
+        guarded = _serving_ledger(params, mode, key, prompt)
+    assert _events(base) == _events(guarded), \
+        f"{mode}: integrity guards changed the comm ledger"
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_engine_ledger_independent_and_guard_free(params, mode):
+    """Engine-level version of both contracts at once: full serving
+    runs with integrity off vs paranoid bill bit-identically, and the
+    guarded ledgers stay data-independent across RUNS."""
+    def engine_events(key, prompt, integrity):
+        eng = PrivateServingEngine(GPT2_TINY, params, key, mode=mode,
+                                   max_slots=2, max_len=MAXLEN,
+                                   decode_jit=False,
+                                   integrity=integrity)
+        eng.submit(prompt, max_new_tokens=2)
+        with comm.ledger() as led:
+            eng.run_to_completion()
+        return _events(led)
+
+    guarded = []
+    for key, prompt in RUNS:
+        off = engine_events(key, prompt, "off")
+        par = engine_events(key, prompt, "paranoid")
+        assert off == par, f"{mode}: engine guards bill on the ledger"
+        guarded.append(par)
+    assert guarded[0] == guarded[1], \
+        f"{mode}: engine comm ledger depends on private data"
 
 
 @pytest.mark.parametrize("mode", SERVABLE + ("permute",))

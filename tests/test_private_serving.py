@@ -11,6 +11,7 @@ import pytest
 from repro.configs.paper_models import GPT2_TINY
 from repro.core import comm
 from repro.models.registry import get_api
+from repro.runtime.faults import InvalidRequest
 from repro.serving.engine import PrivateServingEngine, ServingEngine
 
 KEY = jax.random.key(3)
@@ -164,7 +165,7 @@ def test_overlong_prompt_shared_cap_policy(params):
     assert not st["prompt_truncated"] and not st["truncated"]
     # an empty prompt is rejected up front (no last-real-token exists;
     # the bucketed path would otherwise serve masked garbage silently)
-    with pytest.raises(AssertionError):
+    with pytest.raises(InvalidRequest):
         eng.submit([], max_new_tokens=1)
 
 

@@ -1,0 +1,273 @@
+"""Chaos sweep + crash-safe scheduler coverage (DESIGN.md §11).
+
+Every fault class x {centaur, smpc} x {exact, chunked, decode-targeted}:
+under injection the engine must either (a) deliver a request
+token-identical to the fault-free run, or (b) mark it failed /
+quarantined and deliver nothing for it — never a corrupted output,
+never a stuck slot — while per-request comm stats stay EXACTLY
+sum-conserving (partial ticks of failed attempts included).
+
+Value-corruption plans need concrete arrays, so the sweep runs eager
+(decode_jit=False); the jit-path transport seam is unit-tested in
+tests/test_fault_injection.py via comm.replay."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm
+from repro.models.registry import get_api
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import PreemptionGuard
+from repro.serving.engine import PrivateServingEngine
+
+KEY = jax.random.key(7)
+PROMPTS = [[1, 2, 3], [4, 5, 6, 7]]
+NNEW, MAXLEN, SLOTS = 2, 12, 2
+
+MODES = ("centaur", "smpc")
+#: serving path -> engine kwargs ("decode" = exact path, decode-phase
+#: fault targeting)
+PATHS = {"exact": {}, "chunked": {"chunk_size": 4}, "decode": {}}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, jax.random.key(3))
+
+
+def _engine(params, mode, path, **kw):
+    kw = {"integrity": "paranoid", **PATHS[path], **kw}
+    return PrivateServingEngine(
+        GPT2_TINY, params, KEY, mode=mode, max_slots=SLOTS,
+        max_len=MAXLEN, decode_jit=False, **kw)
+
+
+def _serve(params, mode, path, injector=None, prompts=PROMPTS, **kw):
+    eng = _engine(params, mode, path, **kw)
+    rids = [eng.submit(p, max_new_tokens=NNEW) for p in prompts]
+    with comm.ledger() as led:
+        if injector is None:
+            outs, stats = eng.run_to_completion()
+        else:
+            with faults.inject(injector):
+                outs, stats = eng.run_to_completion()
+    return rids, outs, stats, led, eng
+
+
+_BASE = {}
+
+
+def _baseline(params, mode, path):
+    if (mode, path) not in _BASE:
+        rids, outs, stats, led, eng = _serve(params, mode, path)
+        assert all(stats[r]["status"] == "ok" for r in rids)
+        _BASE[(mode, path)] = {r: outs[r] for r in rids}
+    return _BASE[(mode, path)]
+
+
+def _plan(kind: str, path: str) -> faults.FaultPlan:
+    """One representative plan per fault class, targeted at the sweep
+    cell's phase.  Prefill plans pin rid=0 where the hook knows the
+    request; decode plans hit the shared batched tick."""
+    phase = "decode" if path == "decode" else "prefill"
+    pre = phase == "prefill"
+    if kind in ("corrupt_open", "ring_wrap"):
+        return faults.FaultPlan(kind, phase=phase,
+                                rid=0 if pre else None, index=2)
+    if kind == "pool_exhaust":
+        return faults.FaultPlan(kind, phase=phase, index=3, persist=True)
+    if kind == "dealer_fault":
+        return faults.FaultPlan(kind, phase=phase, index=1)
+    if kind == "transport_drop":
+        return faults.FaultPlan(kind, phase=phase,
+                                rid=0 if pre else None, index=4)
+    return faults.FaultPlan("nan_logits", phase=phase, rid=0)
+
+
+def _assert_contract(mode, rids, outs, stats, led, eng, base):
+    # 1. no corrupted outputs: every delivered request is either
+    #    bit-identical to the fault-free run or was never delivered
+    #    (failed / quarantined).  Exact modes (centaur) are
+    #    randomness-independent, so even RETRIED requests must match;
+    #    smpc carries +-1LSB truncation noise under the retry's shifted
+    #    key stream, so only untouched requests are pinned there.
+    for r in rids:
+        st = stats[r]
+        if st["status"] in ("failed", "quarantined"):
+            assert r not in outs
+            assert st["retries"] >= 1
+            continue
+        assert st["status"] in ("ok", "retried")
+        if st["status"] == "ok":
+            assert st["retries"] == 0
+            assert outs[r] == base[r], f"unaffected rid {r} diverged"
+        elif mode == "centaur":
+            assert outs[r] == base[r], f"retried rid {r} diverged"
+    # 2. exact sum-conservation, failed attempts' partial comm included
+    assert sum(s["rounds"] for s in stats.values()) == led.total_rounds()
+    assert sum(s["online_bits"] for s in stats.values()) \
+        == led.total_bits()
+    assert sum(s["offline_bits"] for s in stats.values()) \
+        == led.total_bits(False) - led.total_bits()
+    # 3. no stuck slots, nothing left queued, engine still schedulable
+    assert all(s is None for s in eng.slots)
+    assert not eng.queue
+    assert not eng.step()
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("path", tuple(PATHS))
+@pytest.mark.parametrize("kind", faults.FAULT_KINDS)
+def test_chaos_sweep(params, mode, path, kind):
+    base = _baseline(params, mode, path)
+    inj = faults.FaultInjector(_plan(kind, path))
+    rids, outs, stats, led, eng = _serve(params, mode, path, inj)
+    assert inj.fired, f"{kind} plan never fired on {mode}/{path}"
+    _assert_contract(mode, rids, outs, stats, led, eng, base)
+    # survived faults are visible in telemetry whenever the scheduler
+    # had to intervene (some corruptions are absorbed harmlessly, e.g.
+    # landing on a dummy slot row — then the log stays empty)
+    h = eng.health()
+    if any(stats[r]["status"] != "ok" for r in rids):
+        assert eng.fault_log and h["faults"]
+    assert h["slots"]["active"] == 0 and h["queue_depth"] == 0
+
+
+def test_chaos_runs_are_bit_reproducible(params):
+    """Same plans, same engine, same seed => same fired log, same
+    outputs, same stats — chaos runs are debuggable replays."""
+    runs = []
+    for _ in range(2):
+        inj = faults.FaultInjector(_plan("corrupt_open", "exact"),
+                                   _plan("transport_drop", "decode"))
+        rids, outs, stats, led, eng = _serve(params, "centaur", "exact",
+                                             inj)
+        runs.append((inj.fired, outs, stats,
+                     led.total_bits(False), led.total_rounds(False)))
+    assert runs[0] == runs[1]
+
+
+def test_quarantine_frees_slots_for_new_traffic(params):
+    """A persistently-poisoned request quarantines; the engine then
+    serves a fresh clean request token-identically to a fresh engine."""
+    base = _baseline(params, "centaur", "exact")
+    inj = faults.FaultInjector(
+        faults.FaultPlan("transport_drop", phase="prefill", rid=0,
+                         index=1, persist=True))
+    eng = _engine(params, "centaur", "exact", max_retries=1,
+                  retry_backoff=0)
+    r0 = eng.submit(PROMPTS[0], max_new_tokens=NNEW)
+    r1 = eng.submit(PROMPTS[1], max_new_tokens=NNEW)
+    with faults.inject(inj):
+        outs, stats = eng.run_to_completion()
+    assert stats[r0]["status"] == "quarantined"
+    assert stats[r0]["retries"] == 2          # max_retries + 1 attempts
+    assert [q.rid for q in eng.quarantined] == [r0]
+    assert outs[r1] == base[1], "healthy request disturbed"
+    # partial comm of the two failed attempts stayed billed
+    assert stats[r0]["online_bits"] > 0
+    # the engine is NOT poisoned: clean traffic completes exactly
+    r2 = eng.submit(PROMPTS[0], max_new_tokens=NNEW)
+    outs, stats = eng.run_to_completion()
+    assert stats[r2]["status"] == "ok" and outs[r2] == base[0]
+    assert eng.health()["quarantined"] == [r0]
+
+
+def test_retry_recovers_token_identical(params):
+    """A one-shot prefill fault retries with backoff and finishes
+    token-identical (exact mode is randomness-independent)."""
+    base = _baseline(params, "centaur", "exact")
+    inj = faults.FaultInjector(
+        faults.FaultPlan("nan_logits", phase="prefill", rid=0))
+    rids, outs, stats, led, eng = _serve(params, "centaur", "exact", inj)
+    assert stats[rids[0]]["status"] == "retried"
+    assert stats[rids[0]]["retries"] == 1
+    assert outs[rids[0]] == base[rids[0]]
+    assert outs[rids[1]] == base[rids[1]]
+    assert [e.outcome for e in eng.fault_log] == ["retried"]
+
+
+def test_persistent_decode_outage_fails_fleet_engine_survives(params):
+    inj = faults.FaultInjector(
+        faults.FaultPlan("pool_exhaust", phase="decode", index=0,
+                         persist=True))
+    rids, outs, stats, led, eng = _serve(params, "centaur", "decode",
+                                         inj)
+    assert all(stats[r]["status"] == "failed" for r in rids)
+    assert sorted(f.rid for f in eng.failed) == sorted(rids)
+    assert all(s is None for s in eng.slots)
+    # conservation holds even when every request failed mid-decode
+    assert sum(s["online_bits"] for s in stats.values()) \
+        == led.total_bits()
+    assert not eng.step()
+
+
+def test_preemption_guard_drains_gracefully(params):
+    guard = PreemptionGuard()
+    eng = _engine(params, "centaur", "exact", preemption=guard)
+    r0 = eng.submit(PROMPTS[0], max_new_tokens=4)
+    r1 = eng.submit(PROMPTS[1], max_new_tokens=4)
+    eng.step()                      # r0, r1 admitted and decoding
+    guard.request()                 # preemption arrives mid-flight
+    r2 = eng.submit(PROMPTS[0], max_new_tokens=4)
+    outs, stats = eng.drain()
+    assert eng.draining
+    # active requests ran to their natural finish...
+    assert len(outs[r0]) == 4 and len(outs[r1]) == 4
+    assert stats[r0]["status"] == "ok"
+    # ...and the queued request was never admitted, but not lost
+    assert r2 not in outs
+    assert [q.rid for q in eng.queue] == [r2]
+
+
+def test_health_snapshot_shape(params):
+    eng = _engine(params, "centaur", "exact")
+    eng.submit(PROMPTS[0], max_new_tokens=1)
+    eng.run_to_completion()
+    h = eng.health()
+    assert h["all_alive"] is True
+    assert set(h["parties"]) == {"p0", "p1", "dealer"}
+    assert set(h["parties"].values()) == {"alive"}
+    assert h["pool"] is not None and h["pool"]["taken"]
+    assert h["slots"] == {"total": SLOTS, "active": 0}
+    assert h["quarantined"] == [] and h["failed"] == []
+    assert h["faults"] == {} and h["ticks"] >= 1
+
+
+def test_engine_config_validation_is_typed(params):
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, "centaur", "exact", max_retries=-1)
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, "centaur", "exact", retry_backoff=-1)
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, "centaur", "exact", integrity="sloppy")
+    with pytest.raises(faults.EngineConfigError):
+        PrivateServingEngine(GPT2_TINY, params, KEY, mode="telepathy")
+    with pytest.raises(faults.EngineConfigError):
+        PrivateServingEngine(GPT2_TINY, params, KEY, max_slots=0)
+    with pytest.raises(faults.EngineConfigError):
+        PrivateServingEngine(GPT2_TINY, params, KEY, max_len=1)
+
+
+def test_submit_validation_is_typed(params):
+    eng = _engine(params, "centaur", "exact")
+    with pytest.raises(faults.InvalidRequest):
+        eng.submit([], max_new_tokens=2)
+    with pytest.raises(faults.InvalidRequest):
+        eng.submit([1, 2], max_new_tokens=0)
+
+
+def test_paranoid_guards_change_no_tokens_and_no_comm(params):
+    """integrity="paranoid" must be a pure observer on a clean run:
+    identical tokens, identical ledger totals."""
+    eng_off = PrivateServingEngine(GPT2_TINY, params, KEY,
+                                   max_slots=SLOTS, max_len=MAXLEN,
+                                   decode_jit=False, integrity="off")
+    rids = [eng_off.submit(p, max_new_tokens=NNEW) for p in PROMPTS]
+    with comm.ledger() as led_off:
+        outs_off, _ = eng_off.run_to_completion()
+    rids2, outs_on, _, led_on, _ = _serve(params, "centaur", "exact")
+    assert [outs_off[r] for r in rids] == [outs_on[r] for r in rids2]
+    assert led_off.total_bits(False) == led_on.total_bits(False)
+    assert led_off.total_rounds(False) == led_on.total_rounds(False)

@@ -116,6 +116,40 @@ def test_heartbeat_and_straggler_monitors():
     assert acts and acts[0]["host"] == 2 and acts[0]["action"] == "evict"
 
 
+def test_straggler_policy_not_shared_across_monitors():
+    # regression: a shared default StragglerPolicy instance aliased
+    # policy mutations across every monitor in the process
+    a, b = StragglerMonitor(), StragglerMonitor()
+    a.policy.action = "evict"
+    assert b.policy.action == "alert"
+
+
+def test_straggler_observe_drops_stale_steps():
+    sm = StragglerMonitor(StragglerPolicy(min_observations=1))
+    sm.observe(0, step=5, duration=1.0)
+    sm.observe(0, step=5, duration=100.0)   # re-delivered beat
+    sm.observe(0, step=3, duration=100.0)   # out-of-order arrival
+    assert sm.counts[0] == 1 and sm.times[0] == 1.0
+    sm.observe(0, step=6, duration=2.0)
+    assert sm.counts[0] == 2
+
+
+def test_preemption_guard_chains_prior_sigterm_handler():
+    import signal
+
+    seen = []
+    prev = signal.signal(signal.SIGTERM, lambda s, f: seen.append(s))
+    try:
+        guard = PreemptionGuard(install_signal=True)
+        signal.raise_signal(signal.SIGTERM)
+        assert guard.should_stop()
+        # the pre-existing handler (a supervisor's checkpointer) still
+        # ran after the flag was raised
+        assert seen == [signal.SIGTERM]
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+
+
 def test_elastic_plan_shrinks_mesh():
     plan = ElasticPlan(global_batch=256, model_parallel=16)
     full = plan.plan(alive_hosts=64, chips_per_host=4)
