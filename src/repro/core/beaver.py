@@ -114,16 +114,34 @@ class TripleDealer:
     def mask_pair(self, shape):
         """Shares of a fresh uniform mask A (no product attached).
 
-        The chunked-prefill attention (DESIGN.md §10) reuses a
-        *persistent* cache-side mask B across chunks, so per chunk the
-        dealer supplies only the fresh query-side mask A — the matching
-        C = A @ B is derived against the caller's persistent B inside
-        `matmul_masked_f` and billed there as dealer traffic."""
+        Persistent-mask opens (chunk cache rows, weight opens —
+        DESIGN.md §10/§12) draw their one-time mask B here; products
+        against an already-open side draw `maskmul_pair` instead."""
         _fault_dealer("mask")
         ka, ks1, _ = self._split()
         a = ring.rand_ring(ka, shape)
         comm.record("dealer_triple", rounds=1,
                     bits=comm.numel(shape) * comm.RING_BITS * 2,
+                    online=False)
+        return share(ks1, a)
+
+    def maskmul_pair(self, a_shape, b_shape):
+        """Fresh mask A for a product whose other side is already open
+        against a PERSISTENT mask B (chunk caches, weight opens).
+
+        The dealer delivers the A shares AND the matching C = A @ B
+        shares (it dealt B, so it can form the product offline); both
+        deliveries are billed HERE, at the dealer seam, so the lazy
+        dealer and `TriplePool` generation-time billing are bit-exact
+        per triple — eager and jit offline ledgers agree (DESIGN.md
+        §12).  C itself is derived against the caller's B inside
+        `matmul_masked_f` (simulation shortcut)."""
+        _fault_dealer("maskmul")
+        ka, ks1, _ = self._split()
+        a = ring.rand_ring(ka, a_shape)
+        comm.record("dealer_triple", rounds=1,
+                    bits=_spec_offline_bits(("maskmul", tuple(a_shape),
+                                             tuple(b_shape))),
                     online=False)
         return share(ks1, a)
 
@@ -160,19 +178,39 @@ def _gen_mask_pair(key, shape):
     return share(ks1, ring.rand_ring(ka, shape))
 
 
+def _gen_maskmul_pair(key, a_shape, b_shape):
+    # only the A shares are generated: C = A @ B is derived against the
+    # caller's persistent B inside matmul_masked_f (its delivery is
+    # still billed by the spec — see _spec_offline_bits)
+    del b_shape
+    return _gen_mask_pair(key, a_shape)
+
+
 _GEN = {"matmul": _gen_matmul_triple, "mul": _gen_mul_triple,
-        "square": _gen_square_triple, "mask": _gen_mask_pair}
+        "square": _gen_square_triple, "mask": _gen_mask_pair,
+        "maskmul": _gen_maskmul_pair}
+
+
+def _mm_out_shape(a_shape, b_shape):
+    return jax.eval_shape(
+        lambda a, b: jnp.matmul(a, b),
+        jax.ShapeDtypeStruct(a_shape, ring.RING_DTYPE),
+        jax.ShapeDtypeStruct(b_shape, ring.RING_DTYPE)).shape
 
 
 def _spec_offline_bits(spec) -> int:
     kind = spec[0]
     if kind == "matmul":
         _, a_shape, b_shape = spec
-        c_shape = jax.eval_shape(
-            lambda a, b: jnp.matmul(a, b),
-            jax.ShapeDtypeStruct(a_shape, ring.RING_DTYPE),
-            jax.ShapeDtypeStruct(b_shape, ring.RING_DTYPE)).shape
-        return _matmul_triple_bits(a_shape, b_shape, c_shape)
+        return _matmul_triple_bits(a_shape, b_shape,
+                                   _mm_out_shape(a_shape, b_shape))
+    if kind == "maskmul":
+        # A shares + C = A @ B shares (B is the caller's persistent
+        # mask, delivered once elsewhere)
+        _, a_shape, b_shape = spec
+        return (comm.numel(a_shape)
+                + comm.numel(_mm_out_shape(a_shape, b_shape))) \
+            * comm.RING_BITS * 2
     n = comm.numel(spec[1])
     return n * comm.RING_BITS * {"mul": 6, "square": 4, "mask": 2}[kind]
 
@@ -307,6 +345,9 @@ class TriplePool:
     def mask_pair(self, shape):
         return self.take(("mask", shape))
 
+    def maskmul_pair(self, a_shape, b_shape):
+        return self.take(("maskmul", a_shape, b_shape))
+
 
 def _canon_spec(spec) -> tuple:
     return tuple((spec[0],) + tuple(tuple(int(d) for d in s)
@@ -334,6 +375,9 @@ class ReplayDealer:
     def mask_pair(self, shape):
         return next(self._triples)
 
+    def maskmul_pair(self, a_shape, b_shape):
+        return next(self._triples)
+
 
 class RecordingDealer(TripleDealer):
     """TripleDealer that also logs the (kind, shapes) request sequence —
@@ -359,6 +403,10 @@ class RecordingDealer(TripleDealer):
     def mask_pair(self, shape):
         self.specs.append(_canon_spec(("mask", shape)))
         return super().mask_pair(shape)
+
+    def maskmul_pair(self, a_shape, b_shape):
+        self.specs.append(_canon_spec(("maskmul", a_shape, b_shape)))
+        return super().maskmul_pair(a_shape, b_shape)
 
 
 # =============================================================================
@@ -480,31 +528,53 @@ def open_rows(x: ShareTensor, mask: ShareTensor,
 
 
 def matmul_masked_f(x: ShareTensor, f_open, b: ShareTensor, dealer,
-                    frac_bits: int = ring.FRAC_BITS,
+                    frac_bits: int = ring.FRAC_BITS, rescale: bool = True,
                     protocol: str = "matmul",
                     fused: bool | None = None) -> ShareTensor:
     """[X @ Y] where Y was already opened against a persistent mask:
-    ``f_open`` = Y - B public, ``b`` = [B] (DESIGN.md §10).
+    ``f_open`` = Y - B public, ``b`` = [B] (DESIGN.md §10, §12).
 
     Only E = X - A crosses the wire (2*numel(X)*64 bits, 1 round): the
-    F side was opened incrementally by `open_rows` as its rows were
-    written, and reusing the same opened value in later products
-    reveals nothing new.  The dealer supplies the fresh A and the
-    product C = A @ B against the caller's persistent B (simulated here
-    from the reconstructed plaintexts; its delivery is billed as
-    offline dealer traffic).  The combine is the standard Beaver
-    identity Z = E@F + E@B + A@F + C, so the result is exactly X @ Y
-    mod 2^64 before truncation — bit-compatible with `matmul`."""
-    a = dealer.mask_pair(x.shape)
+    F side was opened once — incrementally by `open_rows` as cache rows
+    were written, or at param-prep time by `open_weight` — and reusing
+    the same opened value in later products reveals nothing new.  The
+    dealer supplies the fresh A *and* the product C = A @ B against the
+    caller's persistent B via `maskmul_pair`, which bills both A and
+    C's delivery as offline dealer traffic at the dealer seam (so
+    eager, pooled, and replayed ledgers agree bit-for-bit).  C is
+    simulated here from the reconstructed plaintexts.  The combine is
+    the standard Beaver identity Z = E@F + E@B + A@F + C, so the result
+    is exactly X @ Y mod 2^64 before truncation — bit-compatible with
+    `matmul`."""
+    a = dealer.maskmul_pair(x.shape, b.shape)
     e = _open_masked(x, a, protocol)
     comm.record(protocol, rounds=1, bits=0)  # E opens in its own round
     c_plain = ring.ring_matmul(a.s0 + a.s1, b.s0 + b.s1)
-    comm.record("dealer_triple", rounds=1,
-                bits=comm.numel(c_plain.shape) * comm.RING_BITS * 2,
-                online=False)
     c = ShareTensor(c_plain, jnp.zeros_like(c_plain))
     z = matmul_online(e, f_open, a, b, c, fused)
-    return z.truncate(frac_bits)
+    return z.truncate(frac_bits) if rescale else z
+
+
+def open_weight(w: ShareTensor, dealer, protocol: str = "weight_open"):
+    """Open a *static* weight tensor once against a persistent dealer
+    mask B_w (DESIGN.md §12): returns ``(f, b_w)`` with
+    ``f = W - B_w`` public and ``b_w`` = [B_w] shares.
+
+    Called once per weight per engine lifetime at param-prep time; all
+    subsequent GEMMs against W route through `matmul_masked_f(x, f,
+    b_w, dealer)` so only the activation side E = X - A crosses the
+    wire per call.  The one-time open costs 2*numel(W)*64 bits, billed
+    under the ``weight_open`` protocol bucket so serving ledgers can
+    attribute it separately from per-tick online traffic.
+
+    Leakage: the public value F = W - B_w is uniform on the ring
+    because B_w is a fresh uniform mask — the same argument as chunk
+    cache-row opens (`open_rows`), and re-using F across ticks reveals
+    nothing beyond the first open."""
+    b_w = dealer.mask_pair(w.shape)
+    f = _open_masked(w, b_w, protocol)
+    comm.record(protocol, rounds=1, bits=0)  # the open's round
+    return f, b_w
 
 
 def mul(x: ShareTensor, y: ShareTensor, dealer,

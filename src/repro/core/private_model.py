@@ -79,7 +79,7 @@ def build_private_model(cfg, params, key, mode: str = "centaur",
     if mode in ("centaur", "permute"):
         pm.wp = _centaur.prepare_permuted(cfg, params, perms)
     elif mode in ("smpc", "mpcformer", "secformer"):
-        pm.wp = _smpc.prepare_shared(cfg, params, ks)
+        pm.wp = _smpc.prepare_shared(cfg, params, ks, dealer)
     else:
         raise ValueError(mode)
     return pm
@@ -145,13 +145,15 @@ def init_chunk_state(pm: PrivateModel, n_slots: int, max_len: int):
 
 
 def private_prefill_chunk(pm: PrivateModel, state, token, pos, lens,
-                          jit: bool = False, lookahead: int = 4):
+                          jit: bool = False, lookahead: int = 4,
+                          final: bool | None = None):
     """One chunked-prefill tick: the next (B, C) prompt tokens against
     the running chunk state; ONE compiled program per (C, max_len)
-    serves every chunk of every prompt length — see
-    executor.prefill_chunk."""
+    serves every chunk of every prompt length.  Logits are returned on
+    the final chunk only (the head runs as its own tiny program once
+    per request) — see executor.prefill_chunk."""
     return _exec.prefill_chunk(pm, state, token, pos, lens, jit=jit,
-                               lookahead=lookahead)
+                               lookahead=lookahead, final=final)
 
 
 def chunk_state_caches(state):

@@ -185,16 +185,21 @@ def _prepare_layer_permuted(cfg, p_l, perms):
         out["ffn"] = {
             # router: feature-permuted in, expert-permuted out
             "router": enc_linear(f["router"], None, pd, pe),
-            # per-expert weights: stored in permuted-expert order
-            "w_gate": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_gate"], P32), pe, 0),
-                pd, 1), pf, 2)),
-            "w_up": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_up"], P32), pe, 0),
-                pd, 1), pf, 2)),
-            "w_down": ring.encode(permute.apply_perm(permute.apply_perm(
-                permute.apply_perm(jnp.asarray(f["w_down"], P32), pe, 0),
-                pf, 1), pd, 2)),
+            # per-expert weights: stored in permuted-expert order and
+            # pre-transposed to (E, out, in) — the ScalMul convention —
+            # so the expert path never transposes per call
+            "w_gate": ring.encode(jnp.swapaxes(permute.apply_perm(
+                permute.apply_perm(permute.apply_perm(
+                    jnp.asarray(f["w_gate"], P32), pe, 0),
+                    pd, 1), pf, 2), 1, 2)),
+            "w_up": ring.encode(jnp.swapaxes(permute.apply_perm(
+                permute.apply_perm(permute.apply_perm(
+                    jnp.asarray(f["w_up"], P32), pe, 0),
+                    pd, 1), pf, 2), 1, 2)),
+            "w_down": ring.encode(jnp.swapaxes(permute.apply_perm(
+                permute.apply_perm(permute.apply_perm(
+                    jnp.asarray(f["w_down"], P32), pe, 0),
+                    pf, 1), pd, 2), 1, 2)),
         }
         if cfg.n_shared_experts:
             psf = perms["shared_ff"]
@@ -427,11 +432,11 @@ class CentaurSuite(ShareSuite):
         with comm.muted():
             # (E, T, f) gate/up for all tokens — simulation-only shortcut
             def expert_out(e):
-                # stacked expert weights are (E, in, out): transpose for
-                # the (out, in) ScalMul convention
-                we_g = {"w": jnp.swapaxes(p["w_gate"][e], 0, 1), "b": None}
-                we_u = {"w": jnp.swapaxes(p["w_up"][e], 0, 1), "b": None}
-                we_d = {"w": jnp.swapaxes(p["w_down"][e], 0, 1), "b": None}
+                # stacked expert weights are pre-transposed to
+                # (E, out, in) at prep — index straight into ScalMul
+                we_g = {"w": p["w_gate"][e], "b": None}
+                we_u = {"w": p["w_up"][e], "b": None}
+                we_d = {"w": p["w_down"][e], "b": None}
                 g_ = self.linear(we_g, xf)
                 u_ = self.linear(we_u, xf)
                 hidden = self._apply2(lambda a, b: act(a) * b,

@@ -654,20 +654,50 @@ def _chunk_layer(suite, p, x, lst, pos, valid):
                                             pos, valid))
 
 
+def chunk_head(pm: PrivateModel, last, jit: bool = False):
+    """The adaptation head as its own tiny program over the final
+    chunk's gathered last-token rows (B, 1, d) -> plaintext logits.
+
+    Splitting the head out of the chunk program means non-final chunks
+    neither run nor bill the (d, vocab) head GEMM whose output they
+    discard — the head is opened/billed exactly once per request, while
+    the chunk program stays shape-static (it returns the gathered
+    hidden rows every tick; only the final tick feeds them here)."""
+    if not jit:
+        return get_suite(pm).head(last)
+
+    def body(shadow, p_, x_):
+        return get_suite(shadow).head(x_)
+
+    # the name deliberately does NOT extend f"{pm.mode}_prefill" — it
+    # is not a prefill variant and must not count against the
+    # 1-prefill/1-chunk program budget (engine.compile_stats)
+    jl = jit_layer_for(pm, f"{pm.mode}_chunk_head", body, None, last)
+    pool = pm.triple_pool()
+    pool.prefetch(jl.specs)
+    triples = [pool.take(s) for s in jl.specs]
+    comm.replay(jl.events, online_only=True)
+    return jl.fn(None, last, pm.ks(), triples)
+
+
 def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
-                  jit: bool = False, lookahead: int = 4):
+                  jit: bool = False, lookahead: int = 4,
+                  final: bool | None = None):
     """One chunked-prefill tick: token (B, C) — the next C prompt
     tokens per request (tail chunk padded with dead tokens), pos int or
     (B,) absolute chunk offsets, lens (B,) true prompt lengths, state
-    from `init_chunk_state`.  Returns (logits (B, 1, V), new state);
-    the logits row is gathered at the last REAL token (lens - 1) and is
-    only meaningful on the final chunk (earlier chunks bill and discard
-    the constant-size head — the price of ONE shape-static program).
+    from `init_chunk_state`.  Returns (logits (B, 1, V), new state) on
+    the FINAL chunk and (None, new state) otherwise: the chunk program
+    itself ends at the gathered last-token hidden rows, and the
+    adaptation head runs as its own tiny program (`chunk_head`) exactly
+    once per request — non-final chunks no longer run or bill a head
+    whose output they would discard.  ``final`` defaults to
+    auto-detection (this chunk covers the last real token).
 
     The program is jit-keyed on (C, max_len) only — pos and lens are
     traced — so an engine serving arbitrary prompt lengths compiles
-    exactly one chunk program (plus the §7 decode program), and the
-    per-chunk triple demand is the same multiset every tick, so
+    exactly one chunk program (plus the head + §7 decode programs), and
+    the per-chunk triple demand is the same multiset every tick, so
     `TriplePool.reserve` keeps `lookahead` chunks in stock."""
     suite = get_suite(pm)
     _assert_servable(suite)
@@ -679,6 +709,8 @@ def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
     if int(jnp.max(pos)) + C > L:
         raise ProtocolIntegrityError(
             f"chunk past padded cache: pos={pos}, C={C}, max_len={L}")
+    if final is None:
+        final = int(jnp.max(pos)) + C >= int(jnp.max(lens))
 
     def run_layers(sh, p, tok, ps, ln, lsts):
         q_pos = ps[:, None] + jnp.arange(C)
@@ -689,7 +721,7 @@ def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
             x, nlst = _chunk_layer(sh, p[i], x, lsts[i], ps, valid)
             new_lsts.append(nlst)
         last = rows_at(x, jnp.clip(ln - 1 - ps, 0, C - 1))
-        return sh.head(last), new_lsts
+        return last, new_lsts
 
     if jit:
         def body(shadow, p, st):
@@ -703,9 +735,13 @@ def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
         pool.reserve(jl.specs, steps=lookahead)
         triples = [pool.take(s) for s in jl.specs]
         comm.replay(jl.events, online_only=True)
-        return jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
-
-    return run_layers(suite, pm.wp["layers"], token, pos, lens, state)
+        last, new_state = jl.fn(pm.wp["layers"], state0, pm.ks(),
+                                triples)
+    else:
+        last, new_state = run_layers(suite, pm.wp["layers"], token, pos,
+                                     lens, state)
+    logits = chunk_head(pm, last, jit=jit) if final else None
+    return logits, new_state
 
 
 def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,

@@ -39,9 +39,22 @@ def norm_stat_bound(cfg) -> float | None:
     return 4096.0 if cfg.act == "relu2" else None
 
 
-def prepare_shared(cfg, params, ks):
+def prepare_shared(cfg, params, ks, dealer):
     """Secret-share every parameter, arranged in the executor's
-    canonical layout (same keys as the centaur preparation)."""
+    canonical layout (same keys as the centaur preparation) — and open
+    every *static* weight matrix ONCE against a persistent dealer mask
+    (DESIGN.md §12).
+
+    Each GEMM weight is stored pre-transposed into the orientation
+    `matmul` consumes and opened via `beaver.open_weight`, yielding
+    ``{"f": W^T - B_w (public), "m": [B_w], "b": [bias] | None}``.
+    F = W^T - B_w is uniform on the ring (B_w is a fresh uniform mask),
+    so publishing it once per engine lifetime leaks nothing — the same
+    argument as the chunked-prefill cache-row opens.  Every later
+    linear routes through `matmul_masked_f`, so only the activation
+    side E = X - A crosses the wire per call; the one-time opens are
+    billed under the ``weight_open`` ledger bucket.  Norm/bias
+    parameters stay plain shares (they enter via mul/add, not GEMMs)."""
     assert cfg.family in ("encoder", "dense") and not cfg.use_mla, \
         "smpc baselines cover the paper's encoder/dense shapes"
 
@@ -51,15 +64,25 @@ def prepare_shared(cfg, params, ks):
     def share_tree(t):
         return jax.tree.map(enc_share, t)
 
-    wp = {"embed": {"tok": enc_share(params["embed"]["tok"])}}
+    def open_w(a, transpose=True):
+        if transpose:
+            a = jnp.swapaxes(jnp.asarray(a, P32), -1, -2)
+        f, m = beaver.open_weight(enc_share(a), dealer)
+        return {"f": f, "m": m}
+
+    def lin(w, b=None):
+        d = open_w(w)
+        d["b"] = None if b is None else enc_share(b)
+        return d
+
+    # embed table stays in natural (vocab, d) orientation — the one-hot
+    # GEMM consumes it untransposed
+    wp = {"embed": {"tok": open_w(params["embed"]["tok"],
+                                  transpose=False)}}
     if "pos" in params["embed"]:
         wp["embed"]["pos"] = enc_share(params["embed"]["pos"])
     if "embed_norm" in params:
         wp["embed_norm"] = share_tree(params["embed_norm"])
-
-    def lin(w, b=None):
-        return {"w": enc_share(w), "b": None if b is None
-                else enc_share(b)}
 
     wp["layers"] = []
     for i in range(cfg.num_layers):
@@ -85,11 +108,18 @@ def prepare_shared(cfg, params, ks):
         wp["classifier"] = lin(params["classifier"]["w"],
                                params["classifier"]["b"])
     else:
-        # tied embeddings reuse the very same share tensors (one offline
-        # sharing, exactly like the plaintext model reuses the table)
-        wp["head"] = ({"w": wp["embed"]["tok"], "b": None}
-                      if cfg.tie_embeddings
-                      else lin(params["head"]["w"]))
+        if cfg.tie_embeddings:
+            # tied embeddings reuse the very same one-time open: the
+            # head's (d, vocab) public F and mask are free transposed
+            # views of the embed table's — one sharing, one bill
+            tok = wp["embed"]["tok"]
+            wp["head"] = {
+                "f": jnp.swapaxes(tok["f"], -1, -2),
+                "m": ShareTensor(jnp.swapaxes(tok["m"].s0, -1, -2),
+                                 jnp.swapaxes(tok["m"].s1, -1, -2)),
+                "b": None}
+        else:
+            wp["head"] = lin(params["head"]["w"])
     return wp
 
 
@@ -109,9 +139,10 @@ class SmpcSuite(ShareSuite):
     def embed(self, tokens, positions, expose: bool = False):
         pm = self.pm
         x_oh = encrypt_tokens(pm, tokens)
+        tok = pm.wp["embed"]["tok"]
         with comm.tag("embedding"):
-            y = beaver.matmul(x_oh, pm.wp["embed"]["tok"], self.dealer,
-                              rescale=False)
+            y = beaver.matmul_masked_f(x_oh, tok["f"], tok["m"],
+                                       self.dealer, rescale=False)
             if "pos" in pm.wp["embed"] and positions is not None:
                 pos = pm.wp["embed"]["pos"]
                 y = y + ShareTensor(jnp.take(pos.s0, positions, axis=0),
@@ -121,10 +152,9 @@ class SmpcSuite(ShareSuite):
         return y
 
     def linear(self, p, x):
-        w = p["w"]
-        wt = ShareTensor(jnp.swapaxes(w.s0, -1, -2),
-                         jnp.swapaxes(w.s1, -1, -2))
-        y = beaver.matmul(x, wt, self.dealer)
+        # weights were opened once at prep (pre-transposed); only the
+        # activation side E = X - A crosses the wire here
+        y = beaver.matmul_masked_f(x, p["f"], p["m"], self.dealer)
         if p.get("b") is not None:
             y = y + p["b"]
         return y

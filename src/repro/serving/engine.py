@@ -372,8 +372,16 @@ class PrivateServingEngine(RequestQueue):
         self.buckets = buckets
         self._comm = _comm
         self._pmod = _pm
-        self.pm = _pm.build_private_model(cfg, params, key,
-                                          mode=mode, use_pool=True)
+        # one-time weight-share opens (DESIGN.md §12) happen at build:
+        # bill them to the engine lifetime, not to any request
+        with _comm.ledger() as boot:
+            self.pm = _pm.build_private_model(cfg, params, key,
+                                              mode=mode, use_pool=True)
+        #: bits of the once-per-lifetime `W - B_w` weight opens
+        #: (smpc-family modes; 0 for centaur's plaintext-permuted
+        #: weights).  Constant in tokens served by construction.
+        self.weight_open_bits = sum(
+            e.bits for e in boot.events if e.protocol == "weight_open")
         self.slots: list[Request | None] = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int32)
         self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
@@ -621,7 +629,8 @@ class PrivateServingEngine(RequestQueue):
             with self._billed(req):
                 logits, state = self._pmod.private_prefill_chunk(
                     self.pm, state, toks, ci * C, lens,
-                    jit=self.decode_jit, lookahead=self.lookahead)
+                    jit=self.decode_jit, lookahead=self.lookahead,
+                    final=(ci == n_chunks - 1))
             self.chunk_ticks += 1
         lg = self._guard_logits(np.array(logits)[0], req.rid,
                                 f"prefill logits (rid {req.rid})")
@@ -775,6 +784,7 @@ class PrivateServingEngine(RequestQueue):
             "pool": dealer.stock() if hasattr(dealer, "stock") else None,
             "slots": {"total": self.max_slots,
                       "active": sum(s is not None for s in self.slots)},
+            "weight_open_bits": self.weight_open_bits,
             "queue_depth": len(self.queue),
             "quarantined": [r.rid for r in self.quarantined],
             "failed": [r.rid for r in self.failed],

@@ -53,8 +53,10 @@ def _serve(params, mode, slots=3, prompts=PROMPTS, n_new=NNEW,
 
 
 def _chunk_ledgers(params, mode, prompt, jit, chunk=C, max_len=MAXLEN):
-    """Run a full chunked prefill; returns (per-chunk online ledgers
-    incl. the init tick, final logits)."""
+    """Run a full chunked prefill; returns (per-chunk ledgers incl. the
+    init tick, final logits).  lookahead=1 on the jit path keeps the
+    pool's generation == each tick's consumption, so offline bits are
+    comparable per chunk too (DESIGN.md §12)."""
     pm = build_private_model(GPT2_TINY, params, KEY, mode=mode,
                              use_pool=jit)
     S = len(prompt)
@@ -64,13 +66,16 @@ def _chunk_ledgers(params, mode, prompt, jit, chunk=C, max_len=MAXLEN):
     with comm.ledger() as led0:
         state = init_chunk_state(pm, 1, max_len)
     leds.append(led0)
+    logits = None
     for ci in range(n):
         toks = jnp.asarray([padded[ci * chunk:(ci + 1) * chunk]],
                            jnp.int32)
         with comm.ledger() as led:
-            logits, state = private_prefill_chunk(
+            lg, state = private_prefill_chunk(
                 pm, state, toks, ci * chunk,
-                jnp.asarray([S], jnp.int32), jit=jit)
+                jnp.asarray([S], jnp.int32), jit=jit, lookahead=1)
+        if lg is not None:
+            logits = lg
         leds.append(led)
     return leds, np.asarray(logits), state, pm
 
@@ -179,9 +184,13 @@ def test_gqa_chunked_decode_parity():
 
 @pytest.mark.parametrize("mode", ("centaur", "smpc"))
 def test_chunk_ledger_eager_vs_jit_bit_exact(params, mode):
-    """Per-chunk eager-vs-jit online-ledger bit-exactness: every chunk
-    tick (and the init tick) must bill identically under capture/replay
-    and eager execution."""
+    """Per-chunk eager-vs-jit ledger bit-exactness — online AND offline
+    bits: every chunk tick (and the init tick) must bill identically
+    under capture/replay and eager execution.  Offline exactness is the
+    §12 fix: `matmul_masked_f`'s C = A@B delivery is billed at the
+    dealer seam (the `maskmul` spec), so the lazy dealer and the pool's
+    generation-time billing agree per triple; with lookahead=1 the
+    pool generates exactly each tick's demand."""
     prompt = [1, 2, 3, 4, 5, 6, 7]
     leds_e, le, _, _ = _chunk_ledgers(params, mode, prompt, jit=False)
     leds_j, lj, _, _ = _chunk_ledgers(params, mode, prompt, jit=True)
@@ -189,25 +198,31 @@ def test_chunk_ledger_eager_vs_jit_bit_exact(params, mode):
     for i, (a, b) in enumerate(zip(leds_e, leds_j)):
         assert a.total_bits() == b.total_bits(), f"chunk {i}"
         assert a.total_rounds() == b.total_rounds(), f"chunk {i}"
+        assert a.total_bits(False) == b.total_bits(False), \
+            f"chunk {i}: offline bits diverge eager-vs-jit"
     if mode == "centaur":
         assert le[0].argmax() == lj[0].argmax()
 
 
-def test_chunked_below_bucketed_bits_at_long_prompts(params):
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_chunked_below_bucketed_bits_at_long_prompts(params, mode):
     """The comm trade chunking exists for: at long prompt lengths the
-    chunked online bill (incl. the per-request π1 setup and per-chunk
-    head) sits strictly below the bucket ladder's padded-S^2 bill, and
-    both sit above exact-length (chunking is near-exact, not free:
-    scores still span the padded cache width)."""
-    leds, _, _, _ = _chunk_ledgers(params, "centaur", LONG, jit=False)
+    chunked online bill (incl. the per-request π1 setup and the
+    once-per-request head program) sits strictly below the bucket
+    ladder's padded-S^2 bill, and both sit above exact-length (chunking
+    is near-exact, not free: scores still span the padded cache width).
+    The smpc case is the previously-impossible assertion: persistent
+    weight masks (DESIGN.md §12) removed the per-chunk weight re-opens
+    that used to dominate the baselines' chunk bill."""
+    leds, _, _, _ = _chunk_ledgers(params, mode, LONG, jit=False)
     chunk_bits = sum(led.total_bits() for led in leds)
     bucket = 24   # pow2_buckets(24) puts S=19 in the top bucket
-    pm_b = build_private_model(GPT2_TINY, params, KEY, mode="centaur")
+    pm_b = build_private_model(GPT2_TINY, params, KEY, mode=mode)
     toks = jnp.asarray([LONG + [0] * (bucket - len(LONG))], jnp.int32)
     with comm.ledger() as led_b:
         private_prefill(pm_b, toks, max_len=MAXLEN,
                         lens=jnp.asarray([len(LONG)], jnp.int32))
-    pm_x = build_private_model(GPT2_TINY, params, KEY, mode="centaur")
+    pm_x = build_private_model(GPT2_TINY, params, KEY, mode=mode)
     with comm.ledger() as led_x:
         private_prefill(pm_x, jnp.asarray([LONG], jnp.int32),
                         max_len=MAXLEN)

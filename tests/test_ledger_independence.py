@@ -110,6 +110,31 @@ def test_engine_ledger_independent_and_guard_free(params, mode):
         f"{mode}: engine comm ledger depends on private data"
 
 
+@pytest.mark.parametrize("mode", SERVABLE)
+def test_weight_open_ledger_is_data_independent(params, mode):
+    """The once-per-engine-lifetime weight-share opens (DESIGN.md §12)
+    are wire traffic too: identical public shapes must produce
+    bit-identical build-time ledgers — including the `weight_open`
+    events — regardless of share/mask randomness, and serving after the
+    build must never bill `weight_open` again."""
+    leds = []
+    for key, prompt in RUNS:
+        with comm.ledger() as led:
+            pm = build_private_model(GPT2_TINY, params, key, mode=mode)
+        leds.append(led)
+    assert _events(leds[0]) == _events(leds[1]), \
+        f"{mode}: build-time (weight-open) ledger depends on randomness"
+    wob = [sum(e.bits for e in led.events
+               if e.protocol == "weight_open") for led in leds]
+    assert wob[0] == wob[1]
+    if mode != "centaur":   # centaur weights are permuted plaintext
+        assert wob[0] > 0, f"{mode}: no weight opens billed at build"
+    serve_led = _serving_ledger(params, mode, *RUNS[0])
+    assert not any(e.protocol == "weight_open"
+                   for e in serve_led.events), \
+        f"{mode}: serving re-billed a persistent weight open"
+
+
 @pytest.mark.parametrize("mode", SERVABLE + ("permute",))
 def test_forward_ledger_is_data_independent(params, mode):
     """Same contract for the full-sequence forward of every mode

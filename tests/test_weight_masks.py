@@ -1,0 +1,213 @@
+"""Persistent weight-share masks (DESIGN.md §12).
+
+Static weights are opened ONCE per engine lifetime against a persistent
+dealer mask B_w (`beaver.open_weight`, billed under the `weight_open`
+protocol); every later GEMM routes through `beaver.matmul_masked_f`, so
+only the activation side E = X - A crosses the wire per call.  These
+tests pin the protocol algebra (the masked product is the exact ring
+product), the ledger contract (opened once, constant in tokens served,
+never re-billed while serving), the dealer-seam billing that makes
+eager and pooled offline ledgers bit-exact per `maskmul` triple, and
+the headline comm win (an smpc decode tick's online bill dropped by
+more than the 2x acceptance bar)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import beaver, comm, ring
+from repro.core.private_model import (build_private_model,
+                                      init_chunk_state,
+                                      init_slot_caches,
+                                      private_decode_step,
+                                      private_prefill,
+                                      private_prefill_chunk)
+from repro.core.sharing import reconstruct, share
+from repro.models.registry import get_api
+from repro.serving.engine import PrivateServingEngine
+
+KEY = jax.random.key(5)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, KEY)
+
+
+def _weight_open_bits(led):
+    return sum(e.bits for e in led.events
+               if e.protocol == "weight_open")
+
+
+# =============================================================================
+# protocol algebra + billing of the open itself
+# =============================================================================
+
+def test_open_weight_roundtrip_and_ledger():
+    """F = W - B_w reconstructs the weight exactly (ring identity), and
+    the one-time open bills 2*numel*RING_BITS online bits / 1 round
+    under the `weight_open` protocol."""
+    w = jax.random.normal(jax.random.key(0), (6, 8))
+    sh = share(jax.random.key(1), ring.encode(w))
+    dealer = beaver.TripleDealer(jax.random.key(2))
+    with comm.ledger() as led:
+        f, bw = beaver.open_weight(sh, dealer)
+    np.testing.assert_array_equal(
+        np.asarray(f + reconstruct(bw)),
+        np.asarray(ring.encode(w)))
+    wo = [e for e in led.events if e.protocol == "weight_open"]
+    assert sum(e.bits for e in wo) == 2 * 48 * comm.RING_BITS
+    assert sum(e.rounds for e in wo) == 1
+    assert all(e.online for e in wo)
+
+
+def test_masked_product_is_exact_ring_product():
+    """matmul_masked_f against an opened weight equals plain Beaver
+    matmul on the reconstructed ring value — bit-exact BEFORE
+    truncation (rescale=False), fixed-point close after."""
+    w = jax.random.normal(jax.random.key(0), (6, 8))
+    x = jax.random.normal(jax.random.key(1), (3, 6))
+    wsh = share(jax.random.key(2), ring.encode(w))
+    xsh = share(jax.random.key(3), ring.encode(x))
+    dealer = beaver.TripleDealer(jax.random.key(4))
+    f, bw = beaver.open_weight(wsh, dealer)
+
+    raw_m = reconstruct(beaver.matmul_masked_f(xsh, f, bw, dealer,
+                                               rescale=False))
+    raw_b = reconstruct(beaver.matmul(xsh, wsh, dealer, rescale=False))
+    np.testing.assert_array_equal(np.asarray(raw_m), np.asarray(raw_b))
+
+    z = ring.decode(reconstruct(
+        beaver.matmul_masked_f(xsh, f, bw, dealer)))
+    np.testing.assert_allclose(np.asarray(z), np.asarray(x @ w),
+                               atol=1e-3)
+
+
+def test_maskmul_offline_billing_identical_eager_vs_pool():
+    """Satellite-3 seam: the dealer bills A + C = A@B delivery inside
+    `maskmul_pair`, so the lazy dealer and the pool's generation-time
+    billing are bit-exact per triple — the root cause of the old
+    eager-vs-jit offline divergence for matmul_masked_f."""
+    a_shape, b_shape = (3, 6), (6, 8)
+    with comm.ledger() as led_e:
+        beaver.TripleDealer(jax.random.key(0)).maskmul_pair(a_shape,
+                                                            b_shape)
+    pool = beaver.TriplePool(jax.random.key(0))
+    with comm.ledger() as led_p:
+        pool.maskmul_pair(a_shape, b_shape)
+    eager = led_e.total_bits(False)
+    pooled = led_p.total_bits(False)
+    assert eager == pooled, (eager, pooled)
+    # A (3,6) + C (3,8), both shares crossing the dealer seam
+    assert eager == (18 + 24) * comm.RING_BITS * 2
+    assert led_e.total_bits() == led_p.total_bits() == 0
+
+
+# =============================================================================
+# engine lifetime: opened once, constant in tokens served
+# =============================================================================
+
+@pytest.mark.parametrize("mode", ("smpc", "mpcformer"))
+def test_weight_open_billed_once_regardless_of_tokens(params, mode):
+    """`weight_open_bits` is charged at build and is constant in tokens
+    served; serving itself never re-bills a weight open."""
+    def serve(n_new):
+        eng = PrivateServingEngine(GPT2_TINY, params, KEY, mode=mode,
+                                   max_slots=1, max_len=12,
+                                   decode_jit=False)
+        with comm.ledger() as led:
+            eng.submit([1, 2, 3], max_new_tokens=n_new)
+            eng.run_to_completion()
+        return eng, led
+
+    eng2, led2 = serve(2)
+    eng6, led6 = serve(6)
+    assert eng2.weight_open_bits == eng6.weight_open_bits > 0
+    assert _weight_open_bits(led2) == _weight_open_bits(led6) == 0, \
+        f"{mode}: serving re-billed a persistent weight open"
+    assert eng2.health()["weight_open_bits"] == eng2.weight_open_bits
+
+
+def test_centaur_has_no_weight_opens(params):
+    """Permuted-plaintext weights are never opened — the weight-mask
+    protocol is an smpc-family concern."""
+    eng = PrivateServingEngine(GPT2_TINY, params, KEY, mode="centaur",
+                               max_slots=1, max_len=12,
+                               decode_jit=False)
+    assert eng.weight_open_bits == 0
+
+
+# =============================================================================
+# the measured win: decode-tick online bits
+# =============================================================================
+
+def test_smpc_decode_tick_online_bits_dropped_2x(params):
+    """The acceptance bar: removing per-tick weight-side opens cuts the
+    smpc decode tick's online bill by >= 2x at gpt2-tiny/4 slots.  The
+    pre-change bill is reconstructed exactly: the old `matmul` opened
+    F = W - B (2*numel(W)*RING_BITS) for every GEMM against a static
+    weight, once per opened-weight tree per tick (tied embed/head
+    opened twice, once per GEMM)."""
+    pm = build_private_model(GPT2_TINY, params, KEY, mode="smpc")
+    caches = init_slot_caches(pm, 4, 12)
+    tok = jnp.ones((4, 1), jnp.int32)
+    with comm.ledger() as led:
+        private_decode_step(pm, caches, tok,
+                            jnp.zeros((4,), jnp.int32))
+    tick = led.total_bits()
+
+    reopen = 0
+
+    def walk(t):
+        nonlocal reopen
+        if isinstance(t, dict):
+            if "f" in t and "m" in t:
+                reopen += 2 * comm.numel(t["f"].shape) * comm.RING_BITS
+            else:
+                for v in t.values():
+                    walk(v)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                walk(v)
+
+    walk(pm.wp)
+    assert reopen >= tick, \
+        (f"decode tick {tick} online bits, weight re-opens removed "
+         f"{reopen}: drop below the 2x acceptance bar")
+
+
+# =============================================================================
+# chunked prefill: head billed once per request
+# =============================================================================
+
+def test_chunk_head_runs_once_per_request(params):
+    """Non-final chunks return None and bill NO adaptation-head events;
+    the final chunk runs the head exactly once."""
+    pm = build_private_model(GPT2_TINY, params, KEY, mode="smpc")
+    state = init_chunk_state(pm, 1, 12)
+    prompt = [1, 2, 3, 4, 5, 6, 7]
+    lens = jnp.asarray([len(prompt)], jnp.int32)
+    padded = prompt + [0]
+    leds, logits = [], []
+    for ci in range(2):
+        toks = jnp.asarray([padded[ci * 4:(ci + 1) * 4]], jnp.int32)
+        with comm.ledger() as led:
+            lg, state = private_prefill_chunk(pm, state, toks, ci * 4,
+                                              lens)
+        leds.append(led)
+        logits.append(lg)
+    assert logits[0] is None, "non-final chunk returned head logits"
+    assert logits[1] is not None
+    head_events = [sum(1 for e in led.events if e.tag == "adaptation")
+                   for led in leds]
+    assert head_events[0] == 0, \
+        "non-final chunk billed the adaptation head"
+    assert head_events[1] > 0
+
+    # the head output matches the exact-length prefill's argmax
+    pm_x = build_private_model(GPT2_TINY, params, KEY, mode="smpc")
+    lx, _ = private_prefill(pm_x, jnp.asarray([prompt], jnp.int32),
+                            max_len=12)
+    assert np.asarray(logits[1])[0].argmax() \
+        == np.asarray(lx)[0].argmax()
