@@ -408,6 +408,171 @@ def run_long(mode: str, cfg, params, prompts, slots: int, n_new: int,
     return out
 
 
+def run_paged(mode: str, cfg, params, prompts, slots: int, n_new: int,
+              max_len: int, chunk_size: int, page_size: int):
+    """Paged share-domain KV cache (DESIGN.md §13): token parity
+    against the dense slot cache under mixed-length traffic, the
+    live-page memory ratio (high-water live pages vs the dense
+    engine's always-reserved max_slots*max_len rows — gated <= 0.5x),
+    and batched-admission throughput at 4 simultaneous mixed-length
+    arrivals vs one-request-at-a-time admission (gated >= 1.5x)."""
+    from repro.serving.engine import PrivateServingEngine
+
+    def mk(**kw):
+        return PrivateServingEngine(cfg, params, jax.random.key(0),
+                                    mode=mode, max_slots=slots,
+                                    max_len=max_len,
+                                    chunk_size=chunk_size, **kw)
+
+    dense = mk()
+    rd = [dense.submit(p, max_new_tokens=n_new) for p in prompts]
+    t0 = time.monotonic()
+    outs_d, _ = dense.run_to_completion()
+    dt_d = time.monotonic() - t0
+    paged = mk(paged=True, page_size=page_size)
+    rp = [paged.submit(p, max_new_tokens=n_new) for p in prompts]
+    t0 = time.monotonic()
+    outs_p, _ = paged.run_to_completion()
+    dt_p = time.monotonic() - t0
+    tokens_d = [outs_d[r] for r in rd]
+    tokens_p = [outs_p[r] for r in rp]
+    if tokens_d != tokens_p:
+        flips = [(p, a, b) for p, a, b in zip(prompts, tokens_d,
+                                              tokens_p) if a != b]
+        assert mode != "centaur" and all(
+            _first_divergence_is_near_tie(cfg, params, p, a, b)
+            for p, a, b in flips), \
+            f"{mode}: paged tokens diverge from the dense slot cache"
+    # dense reserves max_slots*max_len rows for the engine lifetime;
+    # paged memory is the high-water count of live pages
+    dense_rows = slots * max_len
+    live_ratio = round(paged.alloc.high_water * page_size
+                       / dense_rows, 4)
+    assert live_ratio <= 0.5, \
+        (f"{mode}: live-page memory {live_ratio}x of dense — paging "
+         f"is not earning its keep at this length mix")
+    assert paged.alloc.used == 0, "pages leaked past eviction"
+
+    # batched admission: 4 simultaneous long-ish arrivals (mixed
+    # lengths, several chunks each), timed at the admission seam
+    # (prefill only: max_new=1), both engines warm
+    arrivals = _long_prompts(4, max_len // 2)
+
+    def admit_time(batch: bool):
+        eng = mk(paged=True, page_size=page_size,
+                 batch_admission=batch)
+        eng.submit(arrivals[0], max_new_tokens=1)   # warm/compile
+        eng.run_to_completion()
+        for p in arrivals:
+            eng.submit(p, max_new_tokens=1)
+        t0 = time.monotonic()
+        eng._admit()
+        dt = time.monotonic() - t0
+        outs, _ = eng.run_to_completion()
+        return dt, [outs[r] for r in sorted(outs)]
+
+    dt_seq, toks_seq = admit_time(batch=False)
+    dt_bat, toks_bat = admit_time(batch=True)
+    assert toks_seq == toks_bat, \
+        f"{mode}: batched admission changed tokens"
+    admit_tokens = sum(len(p) for p in arrivals)
+    speedup = round(dt_seq / dt_bat, 3)
+    assert speedup >= 1.5, \
+        (f"{mode}: batched admission {speedup}x — prefill dispatch "
+         f"collapse regressed")
+
+    out = {
+        "tokens_match_dense": tokens_d == tokens_p,
+        "n_requests": len(prompts),
+        "page_size": page_size,
+        "num_pages": paged.alloc.n_pages,
+        "high_water_pages": paged.alloc.high_water,
+        "live_page_memory_ratio": live_ratio,
+        "tokens_per_sec_dense": round(sum(map(len, tokens_d)) / dt_d,
+                                      2),
+        "tokens_per_sec_paged": round(sum(map(len, tokens_p)) / dt_p,
+                                      2),
+        "admission": {
+            "arrivals": len(arrivals),
+            "prompt_tokens": admit_tokens,
+            "sequential_s": round(dt_seq, 4),
+            "batched_s": round(dt_bat, 4),
+            "sequential_tokens_per_sec": round(admit_tokens / dt_seq,
+                                               2),
+            "batched_tokens_per_sec": round(admit_tokens / dt_bat, 2),
+            "batched_speedup": speedup,
+        },
+    }
+    print(f"[private-serving] {mode} paged (P={page_size}): live "
+          f"memory {live_ratio}x of dense, batched admission "
+          f"{speedup}x ({out['admission']['batched_tokens_per_sec']:.0f}"
+          f" vs {out['admission']['sequential_tokens_per_sec']:.0f} "
+          f"prompt tok/s at {len(arrivals)} arrivals)")
+    return out
+
+
+def run_prefix_cache(mode: str, cfg, params, max_len: int,
+                     chunk_size: int, page_size: int):
+    """Shared-prefix COW caching: a hit request must skip EXACTLY its
+    skipped chunk ticks' online bits.  max_new_tokens=1 keeps stats
+    prefill-only; the per-tick bill b_t is measured from two fresh
+    engines (1-tick vs 2-tick prompts), and the gate is
+    saved >= 0.999 * skipped_ticks * b_t — i.e. hits save at least the
+    prefix share of the online prefill chunk bits."""
+    from repro.serving.engine import PrivateServingEngine
+
+    C, P = chunk_size, page_size
+    prefix = [(11 * j) % 300 + 1 for j in range(2 * P)]  # two pages
+    suffix = [(13 * j) % 300 + 1 for j in range(C - 1)]
+    prompt = prefix + suffix
+
+    def serve(toks, register: bool):
+        eng = PrivateServingEngine(cfg, params, jax.random.key(0),
+                                   mode=mode, max_slots=2,
+                                   max_len=max_len,
+                                   chunk_size=C, paged=True,
+                                   page_size=P)
+        if register:
+            eng.register_prefix(prefix)
+        rid = eng.submit(toks, max_new_tokens=1)
+        outs, stats = eng.run_to_completion()
+        return stats[rid]["online_bits"], outs[rid], eng
+
+    miss_bits, tok_m, _ = serve(prompt, register=False)
+    hit_bits, tok_h, eng = serve(prompt, register=True)
+    assert eng.prefix_hits == 1, "prefix never hit"
+    assert tok_m == tok_h, f"{mode}: prefix hit changed tokens"
+    t_miss = -(-len(prompt) // C)
+    t_hit = -(-(len(prompt) - 2 * P) // C)
+    # per-chunk-tick online bits, by difference of fresh 1/2-tick runs
+    one, _, _ = serve(prompt[:C], register=False)
+    two, _, _ = serve(prompt[:2 * C], register=False)
+    b_t = two - one
+    saved = miss_bits - hit_bits
+    expected = (t_miss - t_hit) * b_t
+    assert saved >= 0.999 * expected, \
+        (f"{mode}: prefix hit saved {saved} online bits, expected "
+         f"~{expected} ({t_miss - t_hit} skipped ticks x {b_t})")
+    out = {
+        "prefix_tokens": len(prefix),
+        "prefix_pages": 2,
+        "prompt_tokens": len(prompt),
+        "chunk_ticks_miss": t_miss,
+        "chunk_ticks_hit": t_hit,
+        "online_bits_miss": miss_bits,
+        "online_bits_hit": hit_bits,
+        "online_bits_saved": saved,
+        "online_bits_per_tick": b_t,
+        "prefill_bits_saved_ratio": round(saved / miss_bits, 4),
+        "prefix_fill_bits_engine": eng.prefix_bits,
+    }
+    print(f"[private-serving] {mode} prefix-cache: hit skips "
+          f"{t_miss - t_hit}/{t_miss} chunk ticks, saving {saved} "
+          f"online prefill bits "
+          f"({out['prefill_bits_saved_ratio']:.0%} of a miss)")
+    return out
+
+
 CHAOS_PLANS = (
     ("corrupt_open_prefill",
      dict(kind="corrupt_open", phase="prefill", rid=0, index=2)),
@@ -478,7 +643,9 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
         max_len: int = 24, rounds: int = 2, out: str | None = OUT,
         smoke: bool = False, modes=MODES, mixed: bool | None = None,
         uniform: bool = True, long_prompts: bool | None = None,
-        chunk_size: int = 4, chaos: bool = False):
+        chunk_size: int = 4, chaos: bool = False,
+        paged: bool | None = None, prefix_cache: bool | None = None,
+        page_size: int = 4):
     from repro.configs.paper_models import GPT2_TINY as CFG
     from repro.models.registry import get_api
 
@@ -486,6 +653,10 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
         mixed = not smoke   # full runs always measure realistic traffic
     if long_prompts is None:
         long_prompts = not smoke
+    if paged is None:
+        paged = not smoke
+    if prefix_cache is None:
+        prefix_cache = not smoke
     if smoke:
         n_requests, n_new, rounds = 4, 3, 2
         slot_counts = (1, 4)
@@ -539,6 +710,26 @@ def run(slot_counts=(1, 2, 4), n_requests: int = 8, n_new: int = 6,
                            max_len=max_len, rounds=rounds,
                            chunk_size=chunk_size)
             for mode in modes}
+    if paged:
+        # the paged engine serves a DOUBLE-length slot context: dense
+        # must reserve max_slots * 2*max_len rows up front for the
+        # same admission guarantee, while paging allocates only the
+        # pages the realistic length mix actually touches — that gap
+        # is the live-page memory ratio the gate holds <= 0.5x
+        results["paged"] = {
+            mode: run_paged(mode, CFG, params,
+                            _mixed_prompts(n_requests, max_len),
+                            slots=4, n_new=n_new,
+                            max_len=2 * max_len,
+                            chunk_size=chunk_size,
+                            page_size=page_size)
+            for mode in modes}
+    if prefix_cache:
+        results["prefix_cache"] = {
+            mode: run_prefix_cache(mode, CFG, params, max_len=max_len,
+                                   chunk_size=chunk_size,
+                                   page_size=page_size)
+            for mode in modes}
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=1)
@@ -572,6 +763,21 @@ def main(argv=None):
                          "guards armed and assert the robustness "
                          "contract (token-identical or quarantined, "
                          "exact partial comm, no stuck slots)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache workload (DESIGN.md §13): "
+                         "dense-vs-paged token parity, the <= 0.5x "
+                         "live-page memory gate and the >= 1.5x "
+                         "batched-admission gate at 4 mixed-length "
+                         "arrivals (always on for full runs; use with "
+                         "--smoke for the CI paging check)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix COW caching: hit-vs-miss token "
+                         "parity and the saved-online-bits gate "
+                         "(>= the prefix share of prefill chunk bits; "
+                         "always on for full runs)")
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="KV page size in rows; must be a multiple of "
+                         "--chunk-size and divide max_len")
     ap.add_argument("--chunk-size", type=int, default=4,
                     help="chunk size for the long-prompt workload; "
                          "must divide max_len, and the comm win over "
@@ -584,7 +790,8 @@ def main(argv=None):
     # checks); full runs always measure every workload so the written
     # BENCH json never silently drops a section
     focused = args.smoke and (args.mixed_lengths or args.long_prompts
-                              or args.inject_faults)
+                              or args.inject_faults or args.paged
+                              or args.prefix_cache)
     run(out=None if args.smoke else args.out, smoke=args.smoke,
         modes=modes,
         mixed=(False if args.uniform_only or args.inject_faults
@@ -594,7 +801,14 @@ def main(argv=None):
                       else True if args.long_prompts
                       else False if focused else None),
         uniform=not focused, chunk_size=args.chunk_size,
-        chaos=args.inject_faults)
+        chaos=args.inject_faults,
+        paged=(True if args.paged
+               else False if focused or args.uniform_only
+               or args.inject_faults else None),
+        prefix_cache=(True if args.prefix_cache
+                      else False if focused or args.uniform_only
+                      or args.inject_faults else None),
+        page_size=args.page_size)
 
 
 if __name__ == "__main__":

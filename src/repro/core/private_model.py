@@ -162,6 +162,38 @@ def chunk_state_caches(state):
     return _exec.chunk_state_caches(state)
 
 
+def private_chunk_head(pm: PrivateModel, last, jit: bool = False):
+    """The adaptation head over gathered last-token hidden rows as its
+    own tiny program — the paged engine runs it once per request at
+    that request's final batched-prefill tick."""
+    return _exec.chunk_head(pm, last, jit=jit)
+
+
+def init_page_pool(pm: PrivateModel, n_pages: int, page_size: int):
+    """Paged share-domain KV cache pools (DESIGN.md §13): per-layer
+    (n_pages, page_size) pages of opened values + persistent masks;
+    physical page 0 is the always-zero scratch page."""
+    return _exec.init_page_pool(pm, n_pages, page_size)
+
+
+def private_prefill_chunk_paged(pm: PrivateModel, pools, pt, pst,
+                                token, pos, lens, jit: bool = False,
+                                lookahead: int = 4):
+    """One batched paged chunked-prefill tick over the full slot width
+    — see executor.prefill_chunk_paged."""
+    return _exec.prefill_chunk_paged(pm, pools, pt, pst, token, pos,
+                                     lens, jit=jit, lookahead=lookahead)
+
+
+def private_decode_step_paged(pm: PrivateModel, pools, pt, pst, token,
+                              pos, jit: bool = False,
+                              lookahead: int = 4):
+    """One batched paged decode tick (C=1 chunk flow + head under the
+    request's cached π1) — see executor.decode_step_paged."""
+    return _exec.decode_step_paged(pm, pools, pt, pst, token, pos,
+                                   jit=jit, lookahead=lookahead)
+
+
 centaur_prefill = private_prefill
 centaur_decode_step = private_decode_step
 

@@ -174,6 +174,22 @@ class ProtocolSuite:
         reveals nothing and needs no permutation)."""
         return None
 
+    def chunk_perm_identity(self, B: int, L: int):
+        """Slot-width π1 registry init for the PAGED serving path: an
+        inert (identity) per-slot permutation state that bills nothing
+        — empty/dummy slots run under it and their outputs are
+        discarded; a real request's rows are spliced in at admission
+        via `chunk_perm_insert`.  None where `chunk_perm_state` is
+        None (share-softmax suites need no state at all)."""
+        return None
+
+    def chunk_perm_insert(self, pst, idx: int, sub):
+        """Write one freshly drawn request's `chunk_perm_state(1, L)`
+        rows into slot ``idx`` of a slot-width state from
+        `chunk_perm_identity` (party-local bookkeeping over material
+        already billed by `chunk_perm_state`; records no events)."""
+        return pst
+
     def act(self, x, expose: bool = False):
         """The MLP activation (mode-approximated where applicable)."""
         raise NotImplementedError

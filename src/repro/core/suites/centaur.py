@@ -351,6 +351,21 @@ class CentaurSuite(ShareSuite):
         protocols.pp_permute_setup(B, L)
         return {"pi": pi, "inv": inv}
 
+    def chunk_perm_identity(self, B: int, L: int):
+        """Slot-width π1 registry for the paged serving path: identity
+        rows (no permutation material, bills nothing) that only ever
+        cover empty/dummy slots — every admitted request overwrites its
+        slot's rows with a fresh `chunk_perm_state(1, L)` draw before
+        its first chunk tick."""
+        # dtype matches permute.gen_perm draws so admission splices
+        # are cast-free scatters
+        eye = jnp.tile(permute.identity_perm(L)[None], (B, 1))
+        return {"pi": eye, "inv": eye}
+
+    def chunk_perm_insert(self, pst, idx: int, sub):
+        return {"pi": pst["pi"].at[idx].set(sub["pi"][0]),
+                "inv": pst["inv"].at[idx].set(sub["inv"][0])}
+
     def softmax_chunk(self, scores, pst):
         """Pi_PPP (cached π1) -> Pi_PPSM reveal -> inverse Pi_PPP, so
         the returned probabilities line up with the natural-order

@@ -744,6 +744,186 @@ def prefill_chunk(pm: PrivateModel, state, token, pos, lens,
     return logits, new_state
 
 
+# =============================================================================
+# paged share-domain KV cache (DESIGN.md §13): fixed-size pages of the
+# amortized chunk state (opened values + persistent masks) owned by an
+# engine-side free-list allocator; the jitted programs stay shape-static
+# by gathering a per-slot page table into a dense view inside the tick
+# =============================================================================
+
+def init_page_pool(pm: PrivateModel, n_pages: int, page_size: int):
+    """Per-layer paged chunk-state pools: ``ek``/``ev`` (public opened
+    values) and ``bk``/``bv`` (persistent mask shares) of shape
+    (n_pages, page_size, hk, dh).
+
+    Physical page 0 is the SCRATCH page: it is never allocated, every
+    unallocated page-table entry points at it, and every paged program
+    re-zeroes it after its scatter — so a dense gather through a padded
+    page table reads exact zeros wherever a slot owns no page, which is
+    bit-identical to the dense chunk state's unwritten rows (zero share
+    opened against zero mask)."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    if n_pages < 2:
+        raise EngineConfigError(
+            f"page pool needs the scratch page plus at least one "
+            f"allocatable page, got n_pages={n_pages}")
+    cfg = pm.cfg
+    z = jnp.zeros((n_pages, page_size, cfg.num_kv_heads, cfg.dh),
+                  ring.RING_DTYPE)
+    return [{"ek": z, "ev": z,
+             "bk": ShareTensor(z, z), "bv": ShareTensor(z, z)}
+            for _ in range(cfg.num_layers)]
+
+
+def _gather_pages(pool_l, pt):
+    """Dense (B, nb*page, hk, dh) chunk-state view of one layer's page
+    pool through the padded page table pt (B, nb) — a pure gather, so
+    it traces into the jitted tick with pt as a data input (ONE program
+    per (B, nb) regardless of which pages are live)."""
+    B, nb = pt.shape
+
+    def g(a):
+        return a[pt].reshape(B, nb * a.shape[1], *a.shape[2:])
+    return {"ek": g(pool_l["ek"]), "ev": g(pool_l["ev"]),
+            "bk": ShareTensor(g(pool_l["bk"].s0), g(pool_l["bk"].s1)),
+            "bv": ShareTensor(g(pool_l["bv"].s0), g(pool_l["bv"].s1))}
+
+
+def _scatter_pages(pool_l, lst, pt):
+    """Write a dense chunk-state view back through the page table and
+    re-zero the scratch page.
+
+    Duplicate page ids across slots (copy-on-write shared prefix pages,
+    and every slot's scratch entries) receive IDENTICAL values — a
+    chunk tick only rewrites rows at its own positions, and sharers by
+    construction hold the same prefix rows — so the undefined winner of
+    an XLA duplicate-index scatter is irrelevant.  The scratch page
+    collects the dummy/padding slots' garbage writes and is zeroed
+    last, restoring the all-zeros invariant the gather relies on."""
+    B, nb = pt.shape
+    P = pool_l["ek"].shape[1]
+
+    def s(a, d):
+        upd = d.reshape(B, nb, P, *d.shape[2:])
+        return a.at[pt].set(upd).at[0].set(0)
+    return {"ek": s(pool_l["ek"], lst["ek"]),
+            "ev": s(pool_l["ev"], lst["ev"]),
+            "bk": ShareTensor(s(pool_l["bk"].s0, lst["bk"].s0),
+                              s(pool_l["bk"].s1, lst["bk"].s1)),
+            "bv": ShareTensor(s(pool_l["bv"].s0, lst["bv"].s0),
+                              s(pool_l["bv"].s1, lst["bv"].s1))}
+
+
+def prefill_chunk_paged(pm: PrivateModel, pools, pt, pst, token, pos,
+                        lens, jit: bool = False, lookahead: int = 4):
+    """One BATCHED paged chunked-prefill tick: token (B, C) — the next
+    C prompt tokens of every slot being prefilled (B is the full slot
+    width; non-prefilling slots carry dummy tokens, pos 0, lens 1 and
+    an all-scratch page-table row, so their garbage lands in the
+    scratch page), pt (B, nb) page table, pst the per-layer per-slot
+    π1 state (None entries for share-softmax suites), pos/lens (B,).
+
+    Returns (last, new_pools): the gathered last-real-token hidden rows
+    (every tick — only a slot's final tick feeds them to `chunk_head`)
+    and the updated page pools.  The program is jit-keyed on
+    (B, C, nb) only — pt, pos and lens are traced — so one compiled
+    program serves every admission batch, prefix-hit offset and length
+    mix; per-tick triple demand is the same multiset every tick
+    (`TriplePool.reserve` keeps `lookahead` ticks in stock)."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    nl = pm.cfg.num_layers
+    B, C = token.shape
+    pt = jnp.asarray(pt, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+    L = int(pt.shape[1]) * int(pools[0]["ek"].shape[1])
+    if int(jnp.max(pos)) + C > L:
+        raise ProtocolIntegrityError(
+            f"chunk past paged cache: pos={pos}, C={C}, L={L}")
+
+    def run_layers(sh, p, tok, pt_, ps, ln, pls, psts):
+        q_pos = ps[:, None] + jnp.arange(C)
+        x = sh.embed(tok, q_pos)
+        valid = masking.chunk_valid(q_pos, ln, L)
+        new_pls = []
+        for i in range(nl):
+            lst = dict(_gather_pages(pls[i], pt_), pi=psts[i])
+            x, nlst = _chunk_layer(sh, p[i], x, lst, ps, valid)
+            new_pls.append(_scatter_pages(pls[i], nlst, pt_))
+        last = rows_at(x, jnp.clip(ln - 1 - ps, 0, C - 1))
+        return last, new_pls
+
+    if jit:
+        def body(shadow, p, st):
+            tok, pt_, ps, ln, pls, psts = st
+            return run_layers(get_suite(shadow), p, tok, pt_, ps, ln,
+                              pls, psts)
+
+        state0 = (token, pt, pos, lens, pools, pst)
+        jl = jit_layer_for(pm, f"{pm.mode}_prefill_paged", body,
+                           pm.wp["layers"], state0)
+        pool = pm.triple_pool()
+        pool.reserve(jl.specs, steps=lookahead)
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        return jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
+    return run_layers(suite, pm.wp["layers"], token, pt, pos, lens,
+                      pools, pst)
+
+
+def decode_step_paged(pm: PrivateModel, pools, pt, pst, token, pos,
+                      jit: bool = False, lookahead: int = 4):
+    """One batched paged decode tick: the slot-decode flow run as a
+    C=1 chunk against the paged amortized cache — the new K/V row gets
+    a dealer mask and is opened once into its slot's page, both
+    attention products run `matmul_opened` against the opened pages,
+    and the softmax reuses the request's CACHED π1 (`softmax_chunk`) —
+    the same per-request reveal surface as its chunked prefill
+    (DESIGN.md §13), instead of the dense tick's fresh per-tick π1.
+    Embedding, all layers and the adaptation head compile into ONE
+    program per (B, nb); returns (logits (B,1,V), new_pools)."""
+    suite = get_suite(pm)
+    _assert_servable(suite)
+    nl = pm.cfg.num_layers
+    B, S = token.shape
+    pt = jnp.asarray(pt, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    L = int(pt.shape[1]) * int(pools[0]["ek"].shape[1])
+    if int(jnp.max(pos)) + S > L:
+        raise ProtocolIntegrityError(
+            f"decode past paged cache: pos={pos}, S={S}, L={L}")
+
+    def run_layers(sh, p, tok, pt_, ps, pls, psts):
+        q_pos = ps[:, None]
+        x = sh.embed(tok, q_pos)
+        valid = masking.slot_valid(q_pos, L)
+        new_pls = []
+        for i in range(nl):
+            lst = dict(_gather_pages(pls[i], pt_), pi=psts[i])
+            x, nlst = _chunk_layer(sh, p[i], x, lst, ps, valid)
+            new_pls.append(_scatter_pages(pls[i], nlst, pt_))
+        return sh.head(x), new_pls
+
+    if jit:
+        def body(shadow, p, st):
+            tok, pt_, ps, pls, psts = st
+            return run_layers(get_suite(shadow), p, tok, pt_, ps, pls,
+                              psts)
+
+        state0 = (token, pt, pos, pools, pst)
+        jl = jit_layer_for(pm, f"{pm.mode}_decode_paged", body,
+                           pm.wp["layers"], state0)
+        pool = pm.triple_pool()
+        pool.reserve(jl.specs, steps=lookahead)
+        triples = [pool.take(s) for s in jl.specs]
+        comm.replay(jl.events, online_only=True)
+        return jl.fn(pm.wp["layers"], state0, pm.ks(), triples)
+    return run_layers(suite, pm.wp["layers"], token, pt, pos, pools,
+                      pst)
+
+
 def _run_jit_decode_step(pm: PrivateModel, caches, token, pos,
                          lookahead: int = 4):
     """ONE jitted batched decode step: embedding, the whole layer

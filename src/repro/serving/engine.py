@@ -161,10 +161,16 @@ class RequestQueue:
                     s.truncated = True
                 self._on_finish(s)
                 self.finished.append(s)
+                self._release_slot(i)
                 self.slots[i] = None
 
     def _on_finish(self, req: Request):
         """Hook: engines surface per-request outcomes (e.g. stats)."""
+
+    def _release_slot(self, i: int):
+        """Hook: engines reclaim per-slot resources at eviction — the
+        paged engine eagerly returns the slot's KV pages to the free
+        list (zero-on-free) instead of leaving stale shares behind."""
 
 
 class ServingEngine(RequestQueue):
@@ -314,6 +320,9 @@ class PrivateServingEngine(RequestQueue):
                  max_len: int = 256, decode_jit: bool = True,
                  lookahead: int = 4, buckets=None,
                  chunk_size: int | None = None,
+                 paged: bool = False, page_size: int = 16,
+                 num_pages: int | None = None,
+                 batch_admission: bool = True, on_token=None,
                  integrity: str = "off", max_retries: int = 2,
                  retry_backoff: int = 1, preemption=None,
                  heartbeat_timeout: float = 60.0):
@@ -370,6 +379,30 @@ class PrivateServingEngine(RequestQueue):
                 raise faults.EngineConfigError(
                     "largest bucket must admit every capped prompt")
         self.buckets = buckets
+        self.paged = bool(paged)
+        self.batch_admission = bool(batch_admission)
+        #: streaming hook: called as on_token(rid, token) the moment a
+        #: token is COMMITTED to a request (prefill first token and
+        #: every decode tick) — launch scripts stream partial outputs
+        #: per tick instead of polling run_to_completion.  A rolled-back
+        #: fault retries re-emit from the rollback point.
+        self.on_token = on_token
+        if self.paged:
+            if chunk_size is None:
+                raise faults.EngineConfigError(
+                    "paged serving runs on the chunked prefill path: "
+                    "pass chunk_size")
+            page_size = int(page_size)
+            if page_size < 1 or page_size % chunk_size != 0:
+                raise faults.EngineConfigError(
+                    f"page_size {page_size} must be a positive multiple "
+                    f"of chunk_size {chunk_size} (prefix pages must end "
+                    f"on a chunk boundary)")
+            if max_len % page_size != 0:
+                raise faults.EngineConfigError(
+                    f"max_len {max_len} must be a multiple of "
+                    f"page_size {page_size}")
+        self.page_size = page_size if self.paged else None
         self._comm = _comm
         self._pmod = _pm
         # one-time weight-share opens (DESIGN.md §12) happen at build:
@@ -384,7 +417,31 @@ class PrivateServingEngine(RequestQueue):
             e.bits for e in boot.events if e.protocol == "weight_open")
         self.slots: list[Request | None] = [None] * max_slots
         self.pos = np.zeros(max_slots, np.int32)
-        self.caches = _pm.init_slot_caches(self.pm, max_slots, max_len)
+        if self.paged:
+            from repro.serving.paging import PageAllocator
+            #: padded page-table width: every slot's table is nb entries
+            #: so the jitted tick is shape-static at any occupancy
+            self.nb = max_len // self.page_size
+            if num_pages is None:
+                num_pages = 1 + max_slots * self.nb
+            self.pools = _pm.init_page_pool(self.pm, num_pages,
+                                            self.page_size)
+            self.alloc = PageAllocator(num_pages, self.page_size)
+            self.page_table = np.zeros((max_slots, self.nb), np.int32)
+            # slot-width per-layer π1 registry (identity = inert rows
+            # for empty slots; admission splices fresh per-request rows)
+            _suite = self.pm.suite()
+            self.pst = [_suite.chunk_perm_identity(max_slots, max_len)
+                        for _ in range(cfg.num_layers)]
+            self._prefixes: dict = {}
+            #: engine-lifetime prefix-cache fill bill (like
+            #: weight_open_bits: billed to the cache, not any request)
+            self.prefix_bits = 0
+            self.prefix_hits = 0
+            self.caches = None
+        else:
+            self.caches = _pm.init_slot_caches(self.pm, max_slots,
+                                               max_len)
         self.stats: dict[int, dict] = {}
         self.prefills = 0
         self.chunk_ticks = 0
@@ -516,18 +573,61 @@ class PrivateServingEngine(RequestQueue):
                 f"{bits}/{rounds} != {tick.total_bits(False)}"
                 f"/{tick.total_rounds(False)}")
 
-    def _bill_tick(self, tick, active):
-        """Attribute one (possibly partial) decode tick's events across
-        the active requests — exact and sum-conserving either way."""
-        rids = [self.slots[i].rid for i in active]
+    def _bill_shared(self, tick, reqs):
+        """Attribute one shared (possibly partial) batched tick's
+        events across its requests — exact and sum-conserving either
+        way.  Used by the decode tick (across active slots) and the
+        batched paged prefill tick (across the admission batch)."""
+        rids = [r.rid for r in reqs]
         per = self._comm.attribute(tick.events, rids)
         self._check_conservation(per, tick)
-        for i in active:
-            self._accumulate(self.slots[i], per[self.slots[i].rid])
+        for r in reqs:
+            self._accumulate(r, per[r.rid])
+
+    def _bill_tick(self, tick, active):
+        self._bill_shared(tick, [self.slots[i] for i in active])
+
+    def _emit(self, req: Request, tok: int):
+        """Commit one generated token (and stream it, if a callback is
+        registered)."""
+        req.out.append(tok)
+        if self.on_token is not None:
+            self.on_token(req.rid, tok)
 
     # ---- scheduler ----------------------------------------------------------
     def _bucket_for(self, length: int) -> int:
         return next(b for b in self.buckets if b >= length)
+
+    def _admit(self):
+        """Batched paged admission (DESIGN.md §13): collect ONE
+        admissible queued request per free slot and prefill them all in
+        a single run of batched chunk ticks — ceil(S/C) dispatches for
+        the whole admission wave instead of ceil(S/C) per request.
+        Falls back to the base one-at-a-time loop for dense engines and
+        for paged engines built with batch_admission=False (the
+        sequential reference the batched path is tested token-identical
+        against)."""
+        if not (self.paged and self.batch_admission):
+            return super()._admit()
+        if self.draining:
+            return
+        while True:
+            pairs = []
+            for i, slot in enumerate(self.slots):
+                if slot is not None:
+                    continue
+                ri = next((j for j, r in enumerate(self.queue)
+                           if r.not_before <= self.ticks), None)
+                if ri is None:
+                    break
+                pairs.append((i, self.queue.pop(ri)))
+            if not pairs:
+                return
+            for i, req in self._paged_prefill(pairs):
+                self.slots[i] = req
+            # a failed/deferred batch re-entered the queue behind a
+            # backoff window (not_before > ticks), so the next loop
+            # iteration admits remaining traffic or terminates
 
     def _try_prefill(self, slot: int, req: Request) -> bool:
         """Transactional admission: snapshot the slot's cache rows,
@@ -537,6 +637,10 @@ class PrivateServingEngine(RequestQueue):
         of per-layer trees).  Partial comm stays billed to the request
         (`_billed`), the fault is logged, and the request either backs
         off into the queue or is quarantined."""
+        if self.paged:
+            # sequential paged admission: a one-request batch through
+            # the same transactional batched path
+            return bool(self._paged_prefill([(slot, req)]))
         snap_caches = list(self.caches)
         snap_pos = int(self.pos[slot])
         snap_out = len(req.out)
@@ -601,7 +705,7 @@ class PrivateServingEngine(RequestQueue):
                                 f"prefill logits (rid {req.rid})")
         self._splice(slot, c1)
         self.pos[slot] = S
-        req.out.append(int(np.argmax(lg)))
+        self._emit(req, int(np.argmax(lg)))
         self.prefills += 1
 
     def _prefill_chunked(self, slot: int, req: Request):
@@ -637,8 +741,239 @@ class PrivateServingEngine(RequestQueue):
         c1 = self._pmod.chunk_state_caches(state)
         self._splice(slot, c1)
         self.pos[slot] = S
-        req.out.append(int(np.argmax(lg)))
+        self._emit(req, int(np.argmax(lg)))
         self.prefills += 1
+
+    # ---- paged serving (DESIGN.md §13) --------------------------------------
+    def register_prefix(self, tokens) -> int:
+        """Cache a shared prompt prefix: allocate pages for every FULLY
+        covered page of `tokens`, run the dense chunked-prefill cache
+        protocol over those rows once, and scatter the opened
+        values + persistent masks into the pages.  Later prompts that
+        start with this prefix map those pages copy-on-write and skip
+        their online prefill chunks (and the open/π1 work inside them)
+        entirely.
+
+        Leakage: a prefix HIT changes only the number of chunk ticks a
+        prompt runs — public metadata of the same class as the chunk
+        count itself (lengths are public by the serving model; WHICH
+        prefix matched is a function of public prompt identity the
+        operator registered).  The fill's comm is billed to the engine
+        lifetime (`prefix_bits`, like `weight_open_bits`), not to any
+        request.  Returns the number of cached pages."""
+        if not self.paged:
+            raise faults.EngineConfigError(
+                "register_prefix requires a paged engine (paged=True)")
+        toks = list(tokens)[:self.max_len - 1]
+        P = self.page_size
+        covered = len(toks) // P
+        if covered < 1:
+            raise faults.EngineConfigError(
+                f"prefix shorter than one page ({P} tokens)")
+        key = tuple(toks)
+        if key in self._prefixes:
+            return self._prefixes[key]["covered"]
+        pages = self.alloc.alloc(covered)
+        if pages is None:
+            raise faults.EngineConfigError(
+                f"page pool cannot hold a {covered}-page prefix "
+                f"({self.alloc.free_count} pages free)")
+        rows = covered * P
+        C = self.chunk_size
+        with self._comm.ledger() as led:
+            state = self._pmod.init_chunk_state(self.pm, 1, self.max_len)
+            lens = jnp.asarray([rows], jnp.int32)
+            for ci in range(rows // C):      # P % C == 0: exact chunks
+                tk = jnp.asarray([toks[ci * C:(ci + 1) * C]], jnp.int32)
+                _, state = self._pmod.private_prefill_chunk(
+                    self.pm, state, tk, ci * C, lens,
+                    jit=self.decode_jit, lookahead=self.lookahead,
+                    final=False)
+        self.prefix_bits += led.total_bits(False)
+        pid = jnp.asarray(pages)
+
+        def fill(a, d):
+            return a.at[pid].set(
+                d[:, :rows].reshape(covered, P, *d.shape[2:]))
+        self.pools = [
+            jax.tree.map(fill, pl, {"ek": lst["ek"], "ev": lst["ev"],
+                                    "bk": lst["bk"], "bv": lst["bv"]})
+            for pl, lst in zip(self.pools, state)]
+        self._prefixes[key] = {"tokens": key, "pages": pages,
+                               "covered": covered}
+        return covered
+
+    def _match_prefix(self, prompt):
+        """Longest registered prefix this prompt starts with, capped so
+        at least one real prompt row remains for the chunk phase (the
+        last token must be prefilled live to produce logits).  Returns
+        (shared_page_count, entry) or None — host-side comparison of
+        public token ids; bills nothing."""
+        best = None
+        for ent in self._prefixes.values():
+            pl = len(ent["tokens"])
+            if len(prompt) < pl or tuple(prompt[:pl]) != ent["tokens"]:
+                continue
+            k = min(ent["covered"], (len(prompt) - 1) // self.page_size)
+            if k > 0 and (best is None or k > best[0]):
+                best = (k, ent)
+        return best
+
+    def _release_slot(self, i: int):
+        """Eagerly return slot i's pages to the free list at eviction.
+        Pages whose COW refcount hits zero are ZEROED across every
+        layer (zero-on-free): a recycled page must read as pristine
+        unwritten rows — zero share opened against zero mask — never as
+        a prior request's (ek, bk) open-mask pairing."""
+        if not self.paged:
+            return
+        freed = [pid for pid in map(int, self.page_table[i])
+                 if pid and self.alloc.release(pid)]
+        self.page_table[i] = 0
+        if freed:
+            idx = jnp.asarray(freed)
+            self.pools = [jax.tree.map(lambda a: a.at[idx].set(0), pl)
+                          for pl in self.pools]
+
+    def _prefill_tick_inputs(self, plans, ci: int):
+        """Inputs of batched paged chunk tick `ci`: the FULL slot width
+        every tick (one shape-static program at any occupancy).
+        Non-prefilling slots — active decoders and empty slots alike —
+        run dummy tokens at pos 0 / lens 1 through an all-scratch page
+        table row, so their garbage K/V rows land in the scratch page
+        and are zeroed in-program.  A request whose prompt finished
+        early re-runs its FINAL chunk (re-opened rows stay consistent:
+        the fresh mask pair still satisfies ek + bk = K)."""
+        C, B = self.chunk_size, self.max_slots
+        toks = np.zeros((B, C), np.int32)
+        pos = np.zeros(B, np.int32)
+        lens = np.ones(B, np.int32)
+        pt = np.zeros((B, self.nb), np.int32)
+        for p in plans:
+            b = p["slot"]
+            cib = min(ci, p["n_chunks"] - 1)
+            p0 = p["off"] + cib * C
+            pad = p["off"] + p["n_chunks"] * C - p["S"]
+            padded = p["req"].prompt + [0] * pad
+            toks[b] = padded[p0:p0 + C]
+            pos[b] = p0
+            lens[b] = p["S"]
+            pt[b] = self.page_table[b]
+        return (jnp.asarray(toks), jnp.asarray(pt), jnp.asarray(pos),
+                jnp.asarray(lens))
+
+    def _paged_prefill(self, pairs):
+        """Transactional batched paged admission: plan (prefix match,
+        page allocation), then prefill every request in `pairs` with
+        ONE batched chunk tick per chunk index — max(ceil(S_i/C))
+        dispatches for the whole wave.  Page exhaustion is a CAPACITY
+        condition: the request re-enters the queue front for next tick,
+        unbilled and unpunished.  A protocol fault rolls back pools,
+        page table, π1 registry, positions, outputs and the allocator
+        to the pre-batch snapshot (partial comm stays billed,
+        sum-conserved across the batch) and retries/quarantines each
+        member.  Returns the admitted (slot, request) list; the caller
+        writes `self.slots`."""
+        C, P = self.chunk_size, self.page_size
+        suite = self.pm.suite()
+        a_snap = self.alloc.snapshot()
+        plans, deferred = [], []
+        for slot, req in pairs:
+            S = len(req.prompt)
+            hit = self._match_prefix(req.prompt)
+            shared = list(hit[1]["pages"][:hit[0]]) if hit else []
+            off = len(shared) * P
+            n_chunks = -(-(S - off) // C)
+            n_fresh = -(-(off + n_chunks * C) // P) - len(shared)
+            fresh = self.alloc.alloc(n_fresh)
+            if fresh is None:
+                # capacity, not a fault: wait a tick for pages to free
+                req.not_before = self.ticks + 1
+                deferred.append(req)
+                continue
+            for pid in shared:
+                self.alloc.retain(pid)
+            if shared:
+                self.prefix_hits += 1
+            plans.append({"slot": slot, "req": req, "S": S, "off": off,
+                          "n_chunks": n_chunks,
+                          "pages": shared + fresh})
+        self.queue[:0] = deferred          # FIFO order preserved
+        if not plans:
+            return []
+        snap = (list(self.pools), self.page_table.copy(),
+                list(self.pst), self.pos.copy(),
+                {p["req"].rid: len(p["req"].out) for p in plans})
+        for p in plans:
+            row = np.zeros(self.nb, np.int32)
+            row[:len(p["pages"])] = p["pages"]
+            self.page_table[p["slot"]] = row
+        reqs = [p["req"] for p in plans]
+        first_tok, pend = {}, None
+        try:
+            with faults.phase("prefill"), \
+                    faults.integrity(self.integrity):
+                for p in plans:
+                    # per-request π1 draw (billed to the request),
+                    # spliced into the slot-width registry
+                    with self._billed(p["req"]):
+                        subs = [suite.chunk_perm_state(1, self.max_len)
+                                for _ in range(self.cfg.num_layers)]
+                    for li, sub in enumerate(subs):
+                        self.pst[li] = suite.chunk_perm_insert(
+                            self.pst[li], p["slot"], sub)
+                for ci in range(max(p["n_chunks"] for p in plans)):
+                    toks, pt_in, ps, ln = \
+                        self._prefill_tick_inputs(plans, ci)
+                    with self._comm.ledger() as tick:
+                        pend = tick
+                        last, self.pools = \
+                            self._pmod.private_prefill_chunk_paged(
+                                self.pm, self.pools, pt_in, self.pst,
+                                toks, ps, ln, jit=self.decode_jit,
+                                lookahead=self.lookahead)
+                    self._bill_shared(tick, reqs)
+                    pend = None
+                    self.chunk_ticks += 1
+                    for p in plans:
+                        if p["n_chunks"] - 1 != ci:
+                            continue
+                        # this request's final chunk: run its head row
+                        with self._billed(p["req"]):
+                            lgs = self._pmod.private_chunk_head(
+                                self.pm,
+                                last[p["slot"]:p["slot"] + 1],
+                                jit=self.decode_jit)
+                        lg = self._guard_logits(
+                            np.array(lgs)[0], p["req"].rid,
+                            f"prefill logits (rid {p['req'].rid})")
+                        first_tok[p["req"].rid] = int(np.argmax(lg))
+        except Exception as err:
+            if pend is not None:
+                # the tick that faulted: bill its partial comm exactly
+                self._bill_shared(pend, reqs)
+            (self.pools, self.page_table, self.pst, self.pos,
+             snap_out) = (snap[0], snap[1], snap[2], snap[3], snap[4])
+            self.alloc.restore(a_snap)
+            for p in plans:
+                del p["req"].out[snap_out[p["req"].rid]:]
+            if not isinstance(err, faults.ServingFault):
+                raise
+            self.prefill_failures += 1
+            self._beat(dealer=not isinstance(err, faults.DealerFault))
+            for p in plans:
+                self._register_failure(p["req"], err, "prefill")
+                if p["req"].status != "quarantined":
+                    self.queue.append(p["req"])
+            return []
+        admitted = []
+        for p in plans:
+            self.pos[p["slot"]] = p["S"]
+            self._emit(p["req"], first_tok[p["req"].rid])
+            self.prefills += 1
+            admitted.append((p["slot"], p["req"]))
+        self._beat()
+        return admitted
 
     def step(self) -> bool:
         """One tick: admit, decode the full slot width, evict.
@@ -660,6 +995,27 @@ class PrivateServingEngine(RequestQueue):
         # prefill emits a token and may already satisfy the request
         # (max_new_tokens=1) — never decode a finished slot
         self._evict()
+        if self.paged:
+            # decode growth: the tick's new K/V row lands at pos[i] —
+            # allocate that page now, or finish the request truncated
+            # when the pool is dry (the slot-capacity eviction class;
+            # never a protocol fault)
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                bi = int(self.pos[i]) // self.page_size
+                if self.page_table[i, bi]:
+                    continue
+                got = self.alloc.alloc(1)
+                if got is not None:
+                    self.page_table[i, bi] = got[0]
+                    continue
+                if not s.done:
+                    s.truncated = True
+                self._on_finish(s)
+                self.finished.append(s)
+                self._release_slot(i)
+                self.slots[i] = None
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return bool(self.queue) and not self.draining
@@ -674,13 +1030,28 @@ class PrivateServingEngine(RequestQueue):
                             for s in self.slots], jnp.int32)
         pos = jnp.asarray([int(self.pos[i]) if s is not None else 0
                            for i, s in enumerate(self.slots)], jnp.int32)
+        old_state = self.pools if self.paged else self.caches
+        if self.paged:
+            # empty slots point at scratch: their dummy write is zeroed
+            # in-program instead of corrupting a live page
+            pt_in = np.zeros((self.max_slots, self.nb), np.int32)
+            for i in active:
+                pt_in[i] = self.page_table[i]
+            pt_in = jnp.asarray(pt_in)
         try:
             with faults.phase("decode"), \
                     faults.integrity(self.integrity), \
                     self._comm.ledger() as tick:
-                logits, new_caches = self._pmod.private_decode_step(
-                    self.pm, self.caches, toks, pos, jit=self.decode_jit,
-                    lookahead=self.lookahead)
+                if self.paged:
+                    logits, new_caches = \
+                        self._pmod.private_decode_step_paged(
+                            self.pm, self.pools, pt_in, self.pst, toks,
+                            pos, jit=self.decode_jit,
+                            lookahead=self.lookahead)
+                else:
+                    logits, new_caches = self._pmod.private_decode_step(
+                        self.pm, self.caches, toks, pos,
+                        jit=self.decode_jit, lookahead=self.lookahead)
         except Exception as err:
             # nothing was committed; bill the partial tick exactly
             self._bill_tick(tick, active)
@@ -699,6 +1070,7 @@ class PrivateServingEngine(RequestQueue):
                                      req.retries, "failed")
                     self._accumulate(req, self._comm.CommLedger())
                     self.failed.append(req)
+                    self._release_slot(i)
                     self.slots[i] = None
                 self._tick_failures = 0
             else:
@@ -708,7 +1080,7 @@ class PrivateServingEngine(RequestQueue):
         self._tick_failures = 0
         self._beat()
         if self.integrity == "paranoid":
-            faults.check_tree_match(new_caches, self.caches,
+            faults.check_tree_match(new_caches, old_state,
                                     "decode cache write")
         lg = np.array(logits)
         bad = []
@@ -725,16 +1097,26 @@ class PrivateServingEngine(RequestQueue):
                     bad.append(i)
                     self._register_failure(req, err, "decode")
         if bad:
-            bidx = jnp.asarray(bad)
+            if self.paged:
+                # per-slot rollback in page space: restore every page
+                # the bad slots own (restoring a COW prefix page is a
+                # value no-op — sharers hold identical prefix rows)
+                pids = np.unique(self.page_table[np.asarray(bad)])
+                bidx = jnp.asarray(pids[pids != 0])
+            else:
+                bidx = jnp.asarray(bad)
             new_caches = [
                 jax.tree.map(lambda nw, old: nw.at[bidx].set(old[bidx]),
                              nl, ol)
-                for nl, ol in zip(new_caches, self.caches)]
-        self.caches = new_caches
+                for nl, ol in zip(new_caches, old_state)]
+        if self.paged:
+            self.pools = new_caches
+        else:
+            self.caches = new_caches
         for i in active:
             if i in bad:
                 continue
-            self.slots[i].out.append(int(lg[i, 0].argmax()))
+            self._emit(self.slots[i], int(lg[i, 0].argmax()))
             self.pos[i] += 1
         self.decode_ticks += 1
         # exact per-request attribution of the batched step's comm —
@@ -743,6 +1125,7 @@ class PrivateServingEngine(RequestQueue):
         self._bill_tick(tick, active)
         for i in bad:
             if self.slots[i].status == "quarantined":
+                self._release_slot(i)
                 self.slots[i] = None
         self._evict()
         return True
@@ -777,7 +1160,7 @@ class PrivateServingEngine(RequestQueue):
         quarantine census and the survived-fault log summary."""
         dead = set(self.heartbeats.dead_hosts())
         dealer = self.pm.dealer
-        return {
+        out = {
             "parties": {h: ("dead" if h in dead else "alive")
                         for h in self.heartbeats.last},
             "all_alive": not dead,
@@ -794,3 +1177,11 @@ class PrivateServingEngine(RequestQueue):
             "ticks": self.ticks,
             "draining": self.draining,
         }
+        if self.paged:
+            # free/used page census + prefix-cache telemetry (bench
+            # reads high_water for the live-page memory ratio)
+            out["pages"] = dict(self.alloc.stats(),
+                                prefix_cached=len(self._prefixes),
+                                prefix_hits=self.prefix_hits,
+                                prefix_bits=self.prefix_bits)
+        return out

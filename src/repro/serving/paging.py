@@ -1,0 +1,110 @@
+"""Host-side page allocator for the paged share-domain KV cache
+(DESIGN.md §13).
+
+Pure Python/numpy bookkeeping over PUBLIC metadata: which physical page
+each slot's page-table entry points at, free-list membership and COW
+refcounts.  Nothing here touches shares or records comm events — page
+allocation order is a function of admission order and prompt LENGTHS
+only, so the ledger-independence contract is untouched by paging.
+
+Physical page 0 is the scratch page: never allocated, never refcounted;
+unallocated page-table entries point at it and every paged program
+re-zeroes it after its scatter (see executor._scatter_pages).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.runtime import faults
+
+
+class PageAllocator:
+    """Free-list allocator with copy-on-write refcounts.
+
+    ``alloc`` returns None instead of raising when the pool cannot
+    cover a request — page exhaustion is a CAPACITY condition the
+    engine resolves by scheduling (requeue at admission, truncate at
+    decode growth), not a protocol fault.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise faults.EngineConfigError(
+                f"page pool needs the scratch page plus at least one "
+                f"allocatable page, got n_pages={n_pages}")
+        if page_size < 1:
+            raise faults.EngineConfigError(
+                f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list: freshly freed pages are reused first, which
+        # is exactly what the recycled-page regression test stresses
+        self._free = list(range(n_pages - 1, 0, -1))
+        self.ref = np.zeros(n_pages, np.int32)
+        #: most pages ever simultaneously live — the numerator of the
+        #: live-page memory ratio the serving bench gates on
+        self.high_water = 0
+
+    # ---- queries ------------------------------------------------------------
+    @property
+    def total(self) -> int:
+        """Allocatable pages (the scratch page is not allocatable)."""
+        return self.n_pages - 1
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return self.total - len(self._free)
+
+    def stats(self) -> dict:
+        return {"total": self.total, "free": self.free_count,
+                "used": self.used, "high_water": self.high_water,
+                "page_size": self.page_size,
+                "shared": int(np.sum(self.ref > 1))}
+
+    # ---- allocation ---------------------------------------------------------
+    def alloc(self, n: int) -> list[int] | None:
+        """Take n pages (ref 1 each) or None if fewer than n are free —
+        all-or-nothing, so a partially admitted request never leaks
+        pages."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.ref[p] = 1
+        self.high_water = max(self.high_water, self.used)
+        return pages
+
+    def retain(self, page: int):
+        """Add a copy-on-write reference (shared prefix hit)."""
+        if page == 0 or self.ref[page] < 1:
+            raise faults.EngineConfigError(
+                f"retain of unallocated page {page}")
+        self.ref[page] += 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; True when the page actually returned to
+        the free list (refcount hit zero) — the caller must then zero
+        its pool rows (the zero-on-free invariant: a recycled page must
+        never replay a prior request's open-mask pairing)."""
+        if page == 0:
+            return False
+        if self.ref[page] < 1:
+            raise faults.EngineConfigError(
+                f"release of free page {page}")
+        self.ref[page] -= 1
+        if self.ref[page] == 0:
+            self._free.append(page)
+            return True
+        return False
+
+    # ---- transactional snapshot (batched-admission rollback) ---------------
+    def snapshot(self) -> tuple:
+        return (list(self._free), self.ref.copy(), self.high_water)
+
+    def restore(self, snap: tuple):
+        self._free, self.ref, self.high_water = (
+            list(snap[0]), snap[1].copy(), snap[2])

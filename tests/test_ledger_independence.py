@@ -110,6 +110,68 @@ def test_engine_ledger_independent_and_guard_free(params, mode):
         f"{mode}: engine comm ledger depends on private data"
 
 
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_paged_engine_ledger_is_data_independent(params, mode):
+    """Paged serving (DESIGN.md §13) version of the contract: page
+    allocation, page-table gathers and the COW prefix machinery are
+    host-side bookkeeping over PUBLIC metadata (lengths, admission
+    order), so two paged runs with equal public shapes must bill
+    bit-identical ledgers across different prompts and keys — with
+    integrity guards changing nothing."""
+    def engine_events(key, prompt, integrity):
+        eng = PrivateServingEngine(GPT2_TINY, params, key, mode=mode,
+                                   max_slots=2, max_len=MAXLEN,
+                                   decode_jit=False, chunk_size=4,
+                                   paged=True, page_size=4,
+                                   integrity=integrity)
+        eng.submit(prompt, max_new_tokens=2)
+        with comm.ledger() as led:
+            eng.run_to_completion()
+        return _events(led)
+
+    guarded = []
+    for key, prompt in RUNS:
+        off = engine_events(key, prompt, "off")
+        par = engine_events(key, prompt, "paranoid")
+        assert off == par, f"{mode}: paged engine guards bill"
+        guarded.append(par)
+    assert guarded[0] == guarded[1], \
+        f"{mode}: paged engine comm ledger depends on private data"
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_prefix_hit_changes_only_public_metadata(params, mode):
+    """A prefix-cache HIT must be indistinguishable on the wire from a
+    MISS with the same post-skip chunk count: both engines register the
+    SAME prefix (identical pre-run history, incl. dealer-pool state),
+    then one serves a prompt that starts with it and one serves a
+    prompt that doesn't but runs the same number of chunk ticks.  The
+    runs' ledgers must be bit-identical — a hit changes only the chunk
+    count, public metadata of exactly the class (prompt length) the
+    serving model already reveals."""
+    prefix = [5, 6, 7, 8]                 # exactly one page
+
+    def events(prompt, expect_hits):
+        eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(1),
+                                   mode=mode, max_slots=1,
+                                   max_len=MAXLEN, decode_jit=False,
+                                   chunk_size=4, paged=True, page_size=4)
+        eng.register_prefix(prefix)       # fill bills OUTSIDE the run
+        eng.submit(prompt, max_new_tokens=2)
+        with comm.ledger() as led:
+            eng.run_to_completion()
+        assert eng.prefix_hits == expect_hits
+        return _events(led)
+
+    # hit: skips the prefix page, 1 live chunk tick for [1, 2, 3]
+    hit = events(prefix + [1, 2, 3], expect_hits=1)
+    # miss: no shared start, 1 live chunk tick for [9, 10, 11]
+    miss = events([9, 10, 11], expect_hits=0)
+    assert hit == miss, \
+        (f"{mode}: a prefix hit leaks more than its chunk count — "
+         f"hit events differ from an equal-chunk-count miss")
+
+
 @pytest.mark.parametrize("mode", SERVABLE)
 def test_weight_open_ledger_is_data_independent(params, mode):
     """The once-per-engine-lifetime weight-share opens (DESIGN.md §12)

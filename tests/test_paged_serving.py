@@ -1,0 +1,244 @@
+"""Paged share-domain KV cache serving (DESIGN.md §13).
+
+The tentpole contracts:
+
+* **Parity** — a paged engine produces bit-identical tokens to the
+  dense slot-cache engine in every servable mode, under mixed prompt
+  lengths, staggered admissions and page-reuse churn (a pool small
+  enough that admissions defer and recycled pages get rewritten).
+* **Batched admission** — one batched chunk tick per chunk index for a
+  whole admission wave produces the same tokens as sequential
+  admission, with exact sum-conserving per-request comm attribution.
+* **Zero-on-free** — a page returned to the free list is zeroed across
+  every layer, so a recycled page can never replay a prior request's
+  open-mask (ek, bk) pairing.
+* **Capacity, not faults** — page exhaustion defers admission and
+  truncates decode growth; it never raises through the engine.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import comm
+from repro.models.registry import get_api
+from repro.runtime import faults
+from repro.serving.engine import PrivateServingEngine
+from repro.serving.paging import PageAllocator
+
+MAXLEN = 12
+SERVABLE = ("centaur", "smpc", "mpcformer", "secformer")
+# mixed lengths: sub-chunk, page-straddling, multi-page
+MIXED = ([1, 2, 3, 4, 5], [6, 7], [8, 9, 10, 11, 12, 13, 14])
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, jax.random.key(3))
+
+
+def _engine(params, mode="centaur", **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", MAXLEN)
+    kw.setdefault("decode_jit", False)
+    kw.setdefault("chunk_size", 4)
+    return PrivateServingEngine(GPT2_TINY, params, jax.random.key(7),
+                                mode=mode, **kw)
+
+
+def _serve_staggered(eng, prompts, max_new=2):
+    """Deterministic staggered arrival schedule: two requests up
+    front, one more every second tick — admissions overlap decodes of
+    earlier requests, and (for a small page pool) force deferral and
+    page recycling mid-run."""
+    arrivals = list(prompts)
+    for _ in range(min(2, len(arrivals))):
+        eng.submit(arrivals.pop(0), max_new_tokens=max_new)
+    steps = 0
+    while (arrivals or eng.queue
+           or any(s is not None for s in eng.slots)):
+        eng.step()
+        steps += 1
+        if arrivals and steps % 2 == 0:
+            eng.submit(arrivals.pop(0), max_new_tokens=max_new)
+        assert steps < 300, "serving did not converge"
+    return {r.rid: r.out for r in eng.finished}
+
+
+# =============================================================================
+# parity: paged == dense tokens, every servable mode
+# =============================================================================
+
+@pytest.mark.parametrize("mode", SERVABLE)
+def test_paged_matches_dense_tokens(params, mode):
+    dense = _engine(params, mode)
+    out_d = _serve_staggered(dense, MIXED)
+    # 5 allocatable pages < 2 slots * 3 pages: admissions defer and
+    # freed pages are recycled mid-run
+    paged = _engine(params, mode, paged=True, page_size=4, num_pages=6)
+    out_p = _serve_staggered(paged, MIXED)
+    assert out_d == out_p, \
+        f"{mode}: paged tokens diverge from the dense slot cache"
+    # eager page return: nothing live after the last eviction
+    assert paged.alloc.used == 0
+    assert paged.alloc.free_count == paged.alloc.total
+    assert paged.alloc.high_water <= paged.alloc.total
+
+
+def test_batched_prefill_matches_sequential(params):
+    """4 simultaneous arrivals through one batched prefill per chunk
+    index == one-request-at-a-time admission, token for token; the
+    batched run's per-request stats stay exactly sum-conserving
+    against the global ledger."""
+    prompts = MIXED + ([2, 4, 6, 8],)
+
+    def run(batch):
+        eng = _engine(params, "centaur", paged=True, page_size=4,
+                      batch_admission=batch, integrity="paranoid")
+        for p in prompts:
+            eng.submit(p, max_new_tokens=2)
+        with comm.ledger() as led:
+            out, stats = eng.run_to_completion()
+        return out, stats, led
+
+    out_s, _, _ = run(batch=False)
+    out_b, stats, led = run(batch=True)
+    assert out_s == out_b, "batched prefill changed tokens"
+    # exact conservation: per-request bills sum to the global ledger
+    billed = sum(s["online_bits"] + s["offline_bits"]
+                 for s in stats.values())
+    assert billed == led.total_bits(False), \
+        "batched attribution broke sum-conservation"
+
+
+def test_prefix_hit_tokens_match_no_prefix(params):
+    """COW prefix reuse is a pure optimization: hit requests produce
+    the same tokens as an engine with nothing registered, the hits are
+    counted, and eviction drops the COW refs back to the registered
+    baseline (the prefix itself stays cached)."""
+    prefix = [5, 6, 7, 8]
+    prompts = (prefix + [1, 2], prefix + [3], [9, 10])
+    base = _engine(params, "centaur", paged=True, page_size=4)
+    out_base = _serve_staggered(base, prompts)
+    eng = _engine(params, "centaur", paged=True, page_size=4)
+    assert eng.register_prefix(prefix) == 1
+    out_hit = _serve_staggered(eng, prompts)
+    assert out_base == out_hit, "prefix-cache hit changed tokens"
+    assert eng.prefix_hits == 2
+    assert eng.prefix_bits > 0
+    # after every eviction only the registered prefix page stays live
+    assert eng.alloc.used == 1
+    assert int(eng.alloc.ref[eng._prefixes[tuple(prefix)]["pages"][0]]) == 1
+
+
+# =============================================================================
+# zero-on-free: a recycled page never replays a prior open-mask pairing
+# =============================================================================
+
+def test_recycled_page_is_zeroed(params):
+    """Regression (satellite bugfix): serve a request, let eviction
+    free its pages, and assert every freed page reads zero in every
+    layer's ek/ev/bk/bv — the exact state of a never-written page, so
+    a later request that recycles the page can never see the prior
+    request's opened-value/mask pairing."""
+    eng = _engine(params, "centaur", max_slots=1, paged=True,
+                  page_size=4)
+    eng.submit([1, 2, 3, 4, 5], max_new_tokens=2)
+    eng.run_to_completion()
+    assert eng.alloc.used == 0
+    for layer in eng.pools:
+        for arr in jax.tree.leaves(layer):
+            assert not np.asarray(arr).any(), \
+                "freed page left a stale open-mask pairing behind"
+    # and the recycled pages serve a fresh request bit-identically
+    eng.submit([7, 6, 5, 4, 3, 2], max_new_tokens=2)
+    out = eng.run_to_completion()[0]
+    fresh = _engine(params, "centaur", max_slots=1, paged=True,
+                    page_size=4)
+    fresh.submit([7, 6, 5, 4, 3, 2], max_new_tokens=2)
+    # rid 0 on the fresh engine == rid 1 on the recycled engine
+    assert fresh.run_to_completion()[0][0] == out[1], \
+        "recycled pages changed tokens"
+
+
+def test_decode_growth_exhaustion_truncates(params):
+    """Decode needing a page from a dry pool finishes the request
+    truncated (slot-capacity eviction class) — never a fault."""
+    eng = _engine(params, "centaur", max_slots=1, paged=True,
+                  page_size=4, num_pages=2)   # exactly one real page
+    eng.submit([1, 2, 3, 4], max_new_tokens=5)
+    out, stats = eng.run_to_completion()
+    req = eng.finished[0]
+    assert req.truncated and len(out[0]) == 1   # prefill token only
+    assert not eng.fault_log
+    assert eng.alloc.used == 0
+
+
+# =============================================================================
+# configuration + health surface
+# =============================================================================
+
+def test_paged_config_validation(params):
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, paged=True, chunk_size=None)   # needs chunking
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, paged=True, page_size=6)       # % chunk_size
+    with pytest.raises(faults.EngineConfigError):
+        _engine(params, paged=True, page_size=8)       # max_len % page
+    dense = _engine(params)
+    with pytest.raises(faults.EngineConfigError):
+        dense.register_prefix([1, 2, 3, 4])            # paged-only
+    paged = _engine(params, paged=True, page_size=4)
+    with pytest.raises(faults.EngineConfigError):
+        paged.register_prefix([1, 2])                  # < one page
+
+
+def test_health_reports_page_census(params):
+    eng = _engine(params, paged=True, page_size=4)
+    eng.register_prefix([5, 6, 7, 8])
+    h = eng.health()["pages"]
+    assert h["total"] == 2 * (MAXLEN // 4)
+    assert h["used"] == 1 and h["free"] == h["total"] - 1
+    assert h["prefix_cached"] == 1 and h["prefix_bits"] > 0
+    assert "pages" not in _engine(params).health()
+
+
+# =============================================================================
+# allocator unit tests (host-side, no protocol)
+# =============================================================================
+
+def test_allocator_alloc_release_lifo():
+    a = PageAllocator(5, 4)
+    assert a.total == 4 and a.free_count == 4
+    got = a.alloc(3)
+    assert got == [1, 2, 3] and a.used == 3 and a.high_water == 3
+    assert a.alloc(2) is None and a.used == 3   # all-or-nothing
+    assert a.release(2) is True                 # back on the free list
+    assert a.alloc(1) == [2], "freed pages must be reused LIFO"
+    assert a.high_water == 3
+
+
+def test_allocator_cow_refcounts():
+    a = PageAllocator(4, 2)
+    (p,) = a.alloc(1)
+    a.retain(p)
+    assert a.release(p) is False                # still referenced
+    assert a.release(p) is True
+    with pytest.raises(faults.EngineConfigError):
+        a.release(p)                            # double free
+    with pytest.raises(faults.EngineConfigError):
+        a.retain(p)                             # retain of free page
+    with pytest.raises(faults.EngineConfigError):
+        a.retain(0)                             # scratch is untouchable
+    assert a.release(0) is False                # scratch no-op
+
+
+def test_allocator_snapshot_restore():
+    a = PageAllocator(6, 4)
+    a.alloc(2)
+    snap = a.snapshot()
+    a.alloc(2)
+    a.retain(1)
+    a.restore(snap)
+    assert a.used == 2 and a.free_count == 3
+    assert int(a.ref[1]) == 1
