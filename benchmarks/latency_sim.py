@@ -10,7 +10,13 @@ Model: time = compute + bits/bandwidth + rounds * RTT.
 
 The deliverable is the *relative* speedup structure (paper: 5.0-30.4x
 vs SMPC baselines), which is communication-dominated in WAN and hence
-robust to the compute model."""
+robust to the compute model.
+
+This file stays closed-form on purpose.  For MEASURED wall-clock under
+injected RTT — payload bytes actually moving through a peer process
+over TCP (DESIGN.md §14) — see private_serving_bench.py
+--transport-bench; its `transport` block reports tok/s per RTT next to
+this model's analytic_network_s so the two can be cross-checked."""
 from __future__ import annotations
 
 import jax

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from repro.runtime import faults
 
 from . import comm, ring
-from .sharing import ShareTensor, reconstruct, share
+from .sharing import ShareTensor, share
 
 # Flip to False to restore the unfused 5-GEMM reference combine globally
 # (benchmarks toggle per call via the `fused=` kwarg instead).
@@ -191,6 +191,42 @@ _GEN = {"matmul": _gen_matmul_triple, "mul": _gen_mul_triple,
         "maskmul": _gen_maskmul_pair}
 
 
+#: process-wide (spec, n) -> compiled generation program.  The program
+#: is a pure function of (spec, n), so every pool in the process shares
+#: one compile — a fresh engine's pool reuses the programs of every
+#: engine before it instead of re-jitting its own closures (which
+#: defeated jax's pjit cache and dominated engine start-up).
+_GEN_PROGRAMS: dict = {}
+
+
+def gen_batch(spec, key, n: int, jit_cache: dict | None = None) -> list:
+    """The n triples `TriplePool.generate(spec, n)` appends, given the
+    pool's next PRG key: n == 1 generates eagerly (no per-spec program
+    compile), n > 1 runs one split+vmap program, jitted through the
+    process-wide `_GEN_PROGRAMS` cache (or a caller-supplied
+    `jit_cache` dict), keyed by ``(spec, n)``.
+
+    Factored out of the pool so the in-process pool and the
+    dealer-service process (`runtime.dealer_service`) run the SAME
+    generation code path: identical (spec, key, n) requests yield
+    bit-identical offline material on both sides of the wire (and jit
+    vs eager generation is bit-identical too — integer ops on a
+    counter-based PRG)."""
+    spec = _canon_spec(spec)
+    kind, shapes = spec[0], spec[1:]
+    if n == 1:
+        return [_GEN[kind](key, *shapes)]
+    cache = _GEN_PROGRAMS if jit_cache is None else jit_cache
+    fn = cache.get((spec, n))
+    if fn is None:
+        def gen(k):
+            keys = jax.random.split(k, n)
+            return jax.vmap(lambda kk: _GEN[kind](kk, *shapes))(keys)
+        fn = cache[(spec, n)] = jax.jit(gen)
+    stacked = fn(key)
+    return [jax.tree.map(lambda t, i=i: t[i], stacked) for i in range(n)]
+
+
 def _mm_out_shape(a_shape, b_shape):
     return jax.eval_shape(
         lambda a, b: jnp.matmul(a, b),
@@ -231,25 +267,19 @@ class TriplePool:
         self._key = key
         self.batch = batch
         self._pools: dict[tuple, deque] = {}
-        self._gen_fns: dict[tuple, object] = {}
         self._taken: dict[tuple, int] = {}
+        # per-spec telemetry for health()["pool"]: a take served from
+        # stock is a hit, a take that had to generate (or block on the
+        # async dealer stream) is a miss; low/high water track the
+        # stock level seen at takes / after refills.
+        self._hits: dict[tuple, int] = {}
+        self._misses: dict[tuple, int] = {}
+        self._low_water: dict[tuple, int] = {}
+        self._high_water: dict[tuple, int] = {}
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
         return k
-
-    def _gen_fn(self, spec, n: int):
-        """jitted (key -> n stacked triples) generator for one spec."""
-        cache_key = (spec, n)
-        if cache_key not in self._gen_fns:
-            kind, shapes = spec[0], spec[1:]
-
-            def gen(key):
-                keys = jax.random.split(key, n)
-                return jax.vmap(lambda k: _GEN[kind](k, *shapes))(keys)
-
-            self._gen_fns[cache_key] = jax.jit(gen)
-        return self._gen_fns[cache_key]
 
     def generate(self, spec, n: int):
         """Vectorized offline generation of n triples for one spec.
@@ -258,12 +288,9 @@ class TriplePool:
         spec = _canon_spec(spec)
         _fault_dealer(spec[0])
         pool = self._pools.setdefault(spec, deque())
-        if n == 1:
-            pool.append(_GEN[spec[0]](self._next_key(), *spec[1:]))
-        else:
-            stacked = self._gen_fn(spec, n)(self._next_key())
-            for i in range(n):
-                pool.append(jax.tree.map(lambda t: t[i], stacked))
+        pool.extend(gen_batch(spec, self._next_key(), n))
+        self._high_water[spec] = max(self._high_water.get(spec, 0),
+                                     len(pool))
         comm.record("dealer_triple", rounds=1,
                     bits=n * _spec_offline_bits(spec), online=False)
 
@@ -311,26 +338,50 @@ class TriplePool:
         spec = _canon_spec(spec)
         _fault_take(spec)
         pool = self._pools.setdefault(spec, deque())
+        self._note_take(spec, len(pool))
         if not pool:
             n = min(self.batch, max(1, self._taken.get(spec, 0)))
             self.generate(spec, n)
         self._taken[spec] = self._taken.get(spec, 0) + 1
         return pool.popleft()
 
+    def _note_take(self, spec, avail: int):
+        self._low_water[spec] = min(self._low_water.get(spec, avail),
+                                    avail)
+        book = self._hits if avail else self._misses
+        book[spec] = book.get(spec, 0) + 1
+
     def size(self, spec) -> int:
         return len(self._pools.get(_canon_spec(spec), ()))
 
     def stock(self) -> dict:
         """Pool census for engine.health(): triples in stock and taken
-        so far per spec kind (aggregated over shapes)."""
+        so far per spec kind (aggregated over shapes), aggregate
+        prefetch hit/miss counts, and a per-spec breakdown with
+        low/high watermarks so the async dealer's lookahead is
+        observable (a rising miss count or a low water of 0 on a hot
+        spec means takes are outrunning delivery)."""
         in_stock: dict[str, int] = {}
         taken: dict[str, int] = {}
         for spec, pool in self._pools.items():
             in_stock[spec[0]] = in_stock.get(spec[0], 0) + len(pool)
         for spec, n in self._taken.items():
             taken[spec[0]] = taken.get(spec[0], 0) + n
+        per_spec: dict[str, dict] = {}
+        for spec in (set(self._pools) | set(self._taken)
+                     | set(self._hits) | set(self._misses)):
+            per_spec[_spec_name(spec)] = {
+                "in_stock": len(self._pools.get(spec, ())),
+                "taken": self._taken.get(spec, 0),
+                "hits": self._hits.get(spec, 0),
+                "misses": self._misses.get(spec, 0),
+                "low_water": self._low_water.get(spec, 0),
+                "high_water": self._high_water.get(spec, 0)}
         return {"in_stock": in_stock, "taken": taken,
-                "specs": len(self._pools)}
+                "specs": len(self._pools),
+                "prefetch": {"hits": sum(self._hits.values()),
+                             "misses": sum(self._misses.values())},
+                "per_spec": per_spec}
 
     # ---- TripleDealer interface -------------------------------------------
     def matmul_triple(self, a_shape, b_shape):
@@ -352,6 +403,12 @@ class TriplePool:
 def _canon_spec(spec) -> tuple:
     return tuple((spec[0],) + tuple(tuple(int(d) for d in s)
                                     for s in spec[1:]))
+
+
+def _spec_name(spec) -> str:
+    """JSON-able census key, e.g. ``matmul[4x8,8x8]``."""
+    return spec[0] + "[" + ",".join(
+        "x".join(str(d) for d in s) for s in spec[1:]) + "]"
 
 
 class ReplayDealer:
@@ -415,10 +472,17 @@ class RecordingDealer(TripleDealer):
 
 def _open_masked(x: ShareTensor, a: ShareTensor, protocol: str):
     """Open x - a (both parties exchange their shares)."""
-    e = reconstruct(x - a)
+    d = x - a
     # each party sends numel elements; 2x crosses the wire
     comm.record(protocol, rounds=0,
-                bits=2 * comm.numel(e.shape) * comm.RING_BITS)
+                bits=2 * comm.numel(d.shape) * comm.RING_BITS)
+    # payload seam: party 1's share of X - A crosses the ambient
+    # transport (party 0's mirror send is the echo leg, so total wire
+    # bytes equal the billed bits), and the reconstruction uses the
+    # bytes that actually arrived.  Identity under loopback/no
+    # transport — bit-exact with the pre-transport runtime.
+    (s1,) = comm.exchange(protocol, (d.s1,))
+    e = d.s0 + s1
     # chaos seam: a corrupt_open/ring_wrap plan lands on the value a
     # party received here (concrete values only — see runtime.faults).
     # No envelope guard is possible at this seam: E = X - A is uniform

@@ -79,10 +79,42 @@ class CommLedger:
                 + self.total_rounds() * rtt_s)
 
 
-# ---- ambient ledger / tag stacks ----------------------------------------
+# ---- ambient ledger / tag / transport stacks -----------------------------
 _LEDGERS: list[CommLedger] = []
 _TAGS: list[str] = []
 _CAPTURES: list[CommLedger] = []
+_TRANSPORTS: list = [None]
+
+
+@contextlib.contextmanager
+def transported(transport):
+    """Make a `runtime.transport.Transport` ambient for the enclosed
+    block: every recorded open's payload seam (`exchange`) and every
+    replayed schedule event (`replay`) route through it.  None (the
+    module default) and non-``real`` transports (loopback) keep the
+    legacy behavior bit-exactly; a ``real`` transport moves actual
+    bytes and owns the transport-fault seam.  Re-entrant."""
+    _TRANSPORTS.append(transport)
+    try:
+        yield transport
+    finally:
+        _TRANSPORTS.pop()
+
+
+def active_transport():
+    return _TRANSPORTS[-1]
+
+
+def exchange(protocol: str, arrays, reply: bool = True):
+    """Payload seam of a recorded open: move one party's share arrays
+    through the ambient transport and return them AS RECEIVED (identity
+    for no/loopback transport — the SPMD simulation already holds both
+    shares).  Skipped under `muted`/`capture` (abstract traces move
+    nothing) exactly where `record` skips billing."""
+    t = _TRANSPORTS[-1]
+    if t is None or _MUTED[-1] or _CAPTURES:
+        return arrays
+    return t.exchange(protocol, arrays, reply=reply)
 
 
 @contextlib.contextmanager
@@ -125,13 +157,23 @@ def replay(events, online_only: bool = False):
     # the events up to the failed message, exactly like eager — partial
     # ticks stay sum-conserving across ledgers.  Per-ledger event order
     # is unchanged.
+    t = _TRANSPORTS[-1]
     for e in events:
         if online_only and not e.online:
             continue
         for led in _LEDGERS:
             led.events.append(CommEvent(e.protocol, e.rounds, e.bits,
                                         e.tag, e.online))
-        if faults._INJECTORS:
+        # payload seam: online events of the replayed schedule move real
+        # bytes / inject round latency through the ambient transport.
+        # Offline events never push — the dealer stream owns those
+        # bytes.  A real transport owns the drop seam (a fired
+        # transport_drop is a genuine wire timeout raised from push);
+        # otherwise the legacy synthetic raise fires here, after
+        # billing, as before.
+        if t is not None and e.online:
+            t.push(e.protocol, e.rounds, e.bits)
+        if (t is None or not t.real) and faults._INJECTORS:
             faults.on_record(e.protocol, e.rounds, e.bits, e.online)
 
 
@@ -176,7 +218,13 @@ def record(protocol: str, rounds: int, bits: int, online: bool = True):
         led.record(protocol, rounds, bits, online)
     # chaos seam, AFTER billing: the bytes crossed, then the failure
     # surfaced — an injected TransportFault leaves every ledger with
-    # the partial event so accounting stays sum-conserving
+    # the partial event so accounting stays sum-conserving.  With a
+    # REAL transport ambient the drop seam lives in the transport
+    # itself (`exchange`/`push` raise genuine wire timeouts), so the
+    # synthetic raise is skipped.
+    t = _TRANSPORTS[-1]
+    if t is not None and t.real:
+        return
     if faults._INJECTORS:
         faults.on_record(protocol, rounds, bits, online)
 

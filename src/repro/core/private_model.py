@@ -53,10 +53,19 @@ P32 = jnp.float32
 # =============================================================================
 
 def build_private_model(cfg, params, key, mode: str = "centaur",
-                        use_pool: bool = False) -> PrivateModel:
+                        use_pool: bool = False,
+                        dealer_factory=None) -> PrivateModel:
     ks = KeyStream(key)
-    dealer = (beaver.TriplePool(ks()) if use_pool
-              else beaver.TripleDealer(ks()))
+    dk = ks()
+    if dealer_factory is not None:
+        # runtime injection seam: the serving engine passes a factory
+        # that builds an AsyncTriplePool backed by a dealer process —
+        # seeded with the SAME KeyStream draw the in-process pool would
+        # get, so the triple PRG stream is identical either way
+        dealer = dealer_factory(dk)
+    else:
+        dealer = (beaver.TriplePool(dk) if use_pool
+                  else beaver.TripleDealer(dk))
     d = cfg.d_model
     perms = {"d": permute.gen_perm(ks(), d)}
     if cfg.family in ("dense", "encoder", "moe"):

@@ -114,7 +114,11 @@ def reveal(st: ShareTensor, protocol: str = "reveal"):
     1 round, numel * 64 bits (one share crosses the link)."""
     comm.record(protocol, rounds=1,
                 bits=comm.numel(st.shape) * comm.RING_BITS)
-    out = reconstruct(st)
+    # payload seam: the sending party's share crosses the ambient
+    # transport one-way (header-only ack closes the round); the opener
+    # reconstructs with the share that arrived.
+    (s1,) = comm.exchange(protocol, (st.s1,), reply=False)
+    out = st.s0 + s1
     # chaos seam: the receiving party's reconstructed value
     if faults._INJECTORS:
         out = faults.on_open(protocol, out)

@@ -60,6 +60,23 @@ def main(argv=None):
                     help="print the engine health snapshot (party"
                          " liveness, pool stock, quarantine census)"
                          " after serving")
+    ap.add_argument("--transport", choices=["loopback", "socket"],
+                    default="loopback",
+                    help="comm runtime (DESIGN.md §14): 'loopback'"
+                         " passes shares through in-process (bit-exact"
+                         " legacy behavior); 'socket' spawns a peer"
+                         " process and moves every open's bytes over"
+                         " TCP")
+    ap.add_argument("--rtt-ms", type=float, default=0.0,
+                    help="injected per-round wire latency for"
+                         " --transport socket")
+    ap.add_argument("--bandwidth-gbps", type=float, default=None,
+                    help="injected wire bandwidth (Gbit/s) for"
+                         " --transport socket")
+    ap.add_argument("--dealer-proc", action="store_true",
+                    help="run the Beaver dealer as a separate process:"
+                         " an async pool streams triples ahead of"
+                         " demand over its own socket (DESIGN.md §14)")
     args = ap.parse_args(argv)
     if args.chunk_size is not None:
         if args.buckets is not None:
@@ -124,11 +141,15 @@ def main(argv=None):
         return
 
     from repro.serving.engine import PrivateServingEngine
+    bw = (args.bandwidth_gbps * 1e9 if args.bandwidth_gbps else None)
     eng = PrivateServingEngine(cfg, params, jax.random.key(2),
                                mode=args.mode, max_slots=4,
                                max_len=args.max_len, buckets=buckets,
                                chunk_size=args.chunk_size,
-                               integrity=args.integrity)
+                               integrity=args.integrity,
+                               transport=args.transport,
+                               rtt_ms=args.rtt_ms, bandwidth_bps=bw,
+                               dealer_proc=args.dealer_proc)
     with comm.ledger() as led:
         rids = [eng.submit(p, max_new_tokens=args.max_new)
                 for p in random_prompts()]
@@ -154,15 +175,29 @@ def main(argv=None):
         print(f"  req {rid}: {outs.get(rid, '<not delivered>')} "
               f"({st['online_bits'] / 8e6:.1f} MB online, "
               f"{st['rounds']} rounds, status {st['status']}{flags})")
+    ts = eng.transport.stats()
+    if ts["real"]:
+        print(f"transport: {ts['kind']} rtt={ts['rtt_ms']:.1f}ms, "
+              f"{ts['messages']} msgs / {ts['rounds']} rounds / "
+              f"{ts['bytes_moved'] / 1e6:.1f} MB on the wire "
+              f"({ts['wire_s']:.2f}s), peer "
+              f"{'alive' if ts['peer_alive'] else 'DEAD'}")
     if args.health:
         h = eng.health()
         parties = " ".join(f"{k}={v}" for k, v in h["parties"].items())
         pool = h["pool"] or {}
+        pf = pool.get("prefetch", {})
         print(f"health: {parties}; pool taken "
               f"{sum(pool.get('taken', {}).values())} / in stock "
-              f"{sum(pool.get('in_stock', {}).values())}; "
+              f"{sum(pool.get('in_stock', {}).values())}"
+              f" (prefetch {pf.get('hits', 0)} hits /"
+              f" {pf.get('misses', 0)} misses); "
               f"quarantined {h['quarantined']}; failed {h['failed']}; "
               f"faults {h['faults']}; ticks {h['ticks']}")
+        if args.dealer_proc:
+            print(f"dealer: {pool.get('dealer')}; "
+                  f"degraded={pool.get('degraded')}")
+    eng.close()
 
 
 if __name__ == "__main__":

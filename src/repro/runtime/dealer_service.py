@@ -1,0 +1,476 @@
+"""Dealer as a separate process: an async offline-phase producer.
+
+``python -m repro.runtime.dealer_service --serve`` runs the trusted
+dealer of the 2-of-2 protocol (paper §2.2) as its own process: it
+listens on a localhost socket, prints ``DEALER_PORT <n>``, and answers
+generation requests ``{spec, key, n}`` with serialized triple batches.
+Generation runs through `beaver.gen_batch` — the SAME code path the
+in-process `TriplePool` uses — with the pool's own PRG key shipped per
+request, so the material streaming back is bit-identical to what the
+pool would have generated locally (jax's threefry PRG is deterministic
+across processes on the same backend).
+
+`AsyncTriplePool` (built via :func:`make_async_pool`) is the client
+half: a `TriplePool` whose `generate` issues a non-blocking request and
+whose deliveries are filed by a reader thread, so the jitted online
+compute of one tick overlaps the dealer's generation and share delivery
+for the next (`reserve` installs a per-spec low watermark; `take` tops
+the spec back up the moment stock plus in-flight material drops below
+one tick's demand).  Request DECISIONS depend only on stock + pending —
+a quantity conserved across the delivery race — so the (spec, n, key)
+request stream, and therefore every triple, is deterministic for a
+given serving history regardless of thread scheduling.
+
+Trust boundary (DESIGN.md §14): the dealer process sees specs (public
+shapes) and PRG keys, never activation shares — exactly the CrypTen
+trusted-third-party model this repo simulates.  If the process dies,
+in-flight takes surface `PoolExhausted` (§11 quarantine) and the pool
+degrades to in-process generation, so the engine survives for new
+traffic.
+
+This module's import is stdlib-only: the service child announces its
+port (and the parent connects) in milliseconds, BEFORE jax initializes
+on either end of the socket; heavy imports happen lazily.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import socket as socketlib
+import struct
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+
+from repro.runtime.transport_peer import EXIT, HDR, recv_exact
+
+GEN, TRIPLES = 5, 6
+_LEN = struct.Struct("<I")
+
+
+# =============================================================================
+# service side (child process)
+# =============================================================================
+
+def serve(announce=None):
+    srv = socketlib.socket(socketlib.AF_INET, socketlib.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    print(f"DEALER_PORT {srv.getsockname()[1]}",
+          flush=True, file=announce or sys.stdout)
+    conn, _ = srv.accept()
+    conn.setsockopt(socketlib.IPPROTO_TCP, socketlib.TCP_NODELAY, 1)
+
+    # heavy imports AFTER the port announcement and accept, so the
+    # parent is never blocked on this process's jax startup
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import beaver
+
+    gen_cache: dict = {}
+    try:
+        while True:
+            hdr = recv_exact(conn, HDR.size)
+            if hdr is None:
+                return
+            op, _, n = HDR.unpack(hdr)
+            payload = recv_exact(conn, n) if n else b""
+            if payload is None or op == EXIT:
+                return
+            if op != GEN:
+                continue
+            req = json.loads(payload)
+            spec = beaver._canon_spec(req["spec"])
+            key = jax.random.wrap_key_data(
+                jnp.asarray(req["key"], dtype=jnp.uint32))
+            triples = beaver.gen_batch(spec, key, int(req["n"]),
+                                       jit_cache=gen_cache)
+            raw = b"".join(np.asarray(leaf).tobytes()
+                           for tree in triples
+                           for leaf in jax.tree.leaves(tree))
+            meta = json.dumps({"spec": req["spec"],
+                               "n": int(req["n"])}).encode()
+            body = _LEN.pack(len(meta)) + meta + raw
+            conn.sendall(HDR.pack(TRIPLES, 0.0, len(body)) + body)
+    finally:
+        conn.close()
+        srv.close()
+
+
+# =============================================================================
+# client side (serving process)
+# =============================================================================
+
+def _dealer_fault(msg: str):
+    from repro.runtime import faults
+    return faults.DealerFault(msg)
+
+
+class DealerClient:
+    """Owns the dealer subprocess, the request socket, and the reader
+    thread that files deliveries.  The reader blocks in ``recv`` (GIL
+    released), so share delivery genuinely overlaps the main thread's
+    jitted compute; its last-delivery timestamp doubles as the
+    dealer-process heartbeat source."""
+
+    def __init__(self, proc: subprocess.Popen, sock: socketlib.socket):
+        self._proc = proc
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._inbox: deque = deque()      # (spec, n, raw leaf bytes)
+        self._templates: dict = {}        # spec -> (treedef, leaf SDSs)
+        self._dead = False
+        self.requests = 0
+        self.deliveries = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+        self.last_beat = time.monotonic()
+        self._reader = threading.Thread(target=self._read_loop,
+                                        daemon=True,
+                                        name="dealer-client-reader")
+        self._reader.start()
+        atexit.register(self.close)
+
+    @classmethod
+    def spawn(cls) -> "DealerClient":
+        """Launch ``python -m repro.runtime.dealer_service --serve`` and
+        connect.  The child runs this same interpreter with a
+        PYTHONPATH that resolves `repro`, so its jax/PRG stack matches
+        bit-for-bit."""
+        src = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.runtime.dealer_service",
+             "--serve"],
+            stdout=subprocess.PIPE, text=True, env=env)
+        line = proc.stdout.readline()
+        if not line.startswith("DEALER_PORT "):
+            proc.kill()
+            raise _dealer_fault(
+                f"dealer service failed to start (got {line!r})")
+        sock = socketlib.create_connection(
+            ("127.0.0.1", int(line.split()[1])), timeout=60.0)
+        sock.setsockopt(socketlib.IPPROTO_TCP, socketlib.TCP_NODELAY, 1)
+        return cls(proc, sock)
+
+    # ---- reader thread ----------------------------------------------------
+    def _read_loop(self):
+        try:
+            while True:
+                hdr = self._recv_exact(HDR.size)
+                if hdr is None:
+                    break
+                op, _, n = HDR.unpack(hdr)
+                body = self._recv_exact(n)
+                if body is None or op != TRIPLES:
+                    break
+                mlen = _LEN.unpack_from(body)[0]
+                meta = json.loads(body[_LEN.size:_LEN.size + mlen])
+                with self._cond:
+                    self._inbox.append((meta["spec"], meta["n"],
+                                        body[_LEN.size + mlen:]))
+                    self.deliveries += 1
+                    self.bytes_in += n
+                    self.last_beat = time.monotonic()
+                    self._cond.notify_all()
+        except OSError:
+            pass
+        finally:
+            with self._cond:
+                self._dead = True
+                self._cond.notify_all()
+
+    def _recv_exact(self, n: int):
+        buf = bytearray()
+        while len(buf) < n:
+            try:
+                chunk = self._sock.recv(min(1 << 20, n - len(buf)))
+            except OSError:
+                return None
+            if not chunk:
+                return None
+            buf += chunk
+        return bytes(buf)
+
+    # ---- main-thread API --------------------------------------------------
+    def request(self, spec, key_data, n: int):
+        """Non-blocking generation request (FIFO per connection)."""
+        import numpy as np
+        payload = json.dumps(
+            {"spec": list(spec), "key": np.asarray(key_data).tolist(),
+             "n": int(n)}).encode()
+        with self._send_lock:
+            if not self.alive():
+                raise _dealer_fault("dealer process is not running")
+            try:
+                self._sock.sendall(HDR.pack(GEN, 0.0, len(payload))
+                                   + payload)
+            except OSError as err:
+                raise _dealer_fault(
+                    f"dealer request failed: {err}") from err
+            self.requests += 1
+            self.bytes_out += len(payload)
+
+    def pop_delivered(self) -> list:
+        """Drain the inbox, decoding deliveries into triple pytrees
+        (decode runs on the caller's thread — the reader only moves
+        bytes)."""
+        with self._cond:
+            items = list(self._inbox)
+            self._inbox.clear()
+        return [(spec, self._decode(spec, n, raw))
+                for spec, n, raw in
+                ((_canon(s), n, r) for s, n, r in items)]
+
+    def _decode(self, spec, n: int, raw: bytes) -> list:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core import beaver
+        tpl = self._templates.get(spec)
+        if tpl is None:
+            kind, shapes = spec[0], spec[1:]
+            abstract = jax.eval_shape(
+                lambda: beaver._GEN[kind](jax.random.key(0), *shapes))
+            tpl = self._templates[spec] = (jax.tree.structure(abstract),
+                                           jax.tree.leaves(abstract))
+        treedef, leaf_sds = tpl
+        trees, off = [], 0
+        for _ in range(n):
+            leaves = []
+            for sd in leaf_sds:
+                count = int(np.prod(sd.shape, dtype=np.int64))
+                dtype = np.dtype(sd.dtype)
+                arr = np.frombuffer(raw, dtype=dtype,
+                                    count=count, offset=off)
+                leaves.append(jnp.asarray(arr.reshape(sd.shape)))
+                off += count * dtype.itemsize
+            trees.append(jax.tree.unflatten(treedef, leaves))
+        return trees
+
+    def wait(self, timeout: float) -> bool:
+        """Block until a delivery is available (True) or the stream is
+        dead / the timeout expired (False)."""
+        with self._cond:
+            if self._inbox:
+                return True
+            if self._dead:
+                return False
+            self._cond.wait(timeout)
+            return bool(self._inbox)
+
+    def alive(self) -> bool:
+        return not self._dead and self._proc.poll() is None
+
+    def kill(self):
+        """Hard-kill the dealer process (crash tests / injected
+        dealer faults against a real producer)."""
+        self._proc.kill()
+
+    def close(self):
+        with self._send_lock:
+            try:
+                self._sock.sendall(HDR.pack(EXIT, 0.0, 0))
+            except OSError:
+                pass
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+        if self._proc.poll() is None:
+            try:
+                self._proc.wait(timeout=2.0)
+            except subprocess.TimeoutExpired:
+                self._proc.kill()
+        if self._proc.stdout is not None:
+            self._proc.stdout.close()
+
+    def stats(self) -> dict:
+        return {"alive": self.alive(), "pid": self._proc.pid,
+                "requests": self.requests, "deliveries": self.deliveries,
+                "bytes_in": self.bytes_in, "bytes_out": self.bytes_out}
+
+
+def _canon(spec) -> tuple:
+    return tuple((spec[0],) + tuple(tuple(int(d) for d in s)
+                                    for s in spec[1:]))
+
+
+# =============================================================================
+# async pool (drop-in TriplePool with a background producer)
+# =============================================================================
+
+def make_async_pool(key, client: DealerClient, batch: int = 8,
+                    take_timeout_s: float = 30.0):
+    """Build an ``AsyncTriplePool`` — a `beaver.TriplePool` subclass
+    whose offline phase streams through `client`.  A factory (rather
+    than a module-level class) keeps this module's import stdlib-only;
+    the class is created on first use, when jax is loaded anyway."""
+    from collections import deque as _deque
+
+    from repro.core import beaver, comm
+    from repro.runtime import faults
+
+    class AsyncTriplePool(beaver.TriplePool):
+        def __init__(self):
+            super().__init__(key, batch)
+            self._client = client
+            self._pending: dict[tuple, int] = {}
+            self._watermark: dict[tuple, int] = {}
+            self._quantum: dict[tuple, int] = {}
+            self._take_timeout_s = take_timeout_s
+            self.degraded = False
+
+        # ---- dealer-process liveness (engine heartbeat source) --------
+        def dealer_alive(self) -> bool:
+            return not self.degraded and self._client.alive()
+
+        def dealer_client(self) -> DealerClient:
+            return self._client
+
+        # ---- offline phase -------------------------------------------
+        def generate(self, spec, n: int):
+            spec = beaver._canon_spec(spec)
+            if self.degraded or not self._client.alive():
+                if not self.degraded:
+                    self._fail(spec, "died before generate")
+                # in-process fallback: the engine survives for new
+                # traffic on the same (deterministic) PRG stream
+                return super().generate(spec, n)
+            try:
+                beaver._fault_dealer(spec[0])
+            except faults.DealerFault:
+                # an injected dealer fault against a REAL producer is a
+                # genuine crash: kill the process, then surface it
+                self._client.kill()
+                self.degraded = True
+                self._pending.clear()
+                raise
+            k = self._next_key()
+            import jax
+            self._client.request(list(spec), jax.random.key_data(k), n)
+            self._pending[spec] = self._pending.get(spec, 0) + n
+            comm.record("dealer_triple", rounds=1,
+                        bits=n * beaver._spec_offline_bits(spec),
+                        online=False)
+
+        def _drain(self):
+            for spec, triples in self._client.pop_delivered():
+                pool = self._pools.setdefault(spec, _deque())
+                pool.extend(triples)
+                self._pending[spec] = max(
+                    0, self._pending.get(spec, 0) - len(triples))
+                self._high_water[spec] = max(
+                    self._high_water.get(spec, 0), len(pool))
+
+        def _in_flight(self, spec) -> int:
+            return (len(self._pools.get(spec, ()))
+                    + self._pending.get(spec, 0))
+
+        def _fail(self, spec, how: str):
+            self.degraded = True
+            self._pending.clear()
+            raise faults.PoolExhausted(
+                f"dealer process {how} with take({spec}) outstanding — "
+                f"pool drained, degrading to in-process generation")
+
+        # ---- online phase --------------------------------------------
+        def take(self, spec):
+            spec = beaver._canon_spec(spec)
+            beaver._fault_take(spec)
+            self._drain()
+            pool = self._pools.setdefault(spec, _deque())
+            self._note_take(spec, len(pool))
+            if not pool:
+                if not self._pending.get(spec):
+                    n = min(self.batch,
+                            max(1, self._taken.get(spec, 0)))
+                    self.generate(spec, n)
+                deadline = time.monotonic() + self._take_timeout_s
+                while not pool:
+                    if self.degraded:
+                        break   # degraded generate filled synchronously
+                    if not self._client.wait(timeout=0.05):
+                        if not self._client.alive():
+                            self._fail(spec, "died")
+                        if time.monotonic() > deadline:
+                            self._fail(spec, "timed out")
+                    self._drain()
+            self._taken[spec] = self._taken.get(spec, 0) + 1
+            triple = pool.popleft()
+            # low-watermark prefetch: top the spec back up NOW so the
+            # dealer generates for the next tick while this tick's
+            # jitted compute runs — the overlap that makes the offline
+            # phase genuinely asynchronous
+            wm = self._watermark.get(spec)
+            if (wm and not self.degraded
+                    and self._in_flight(spec) < wm):
+                self.generate(spec, self._quantum.get(spec, wm))
+            return triple
+
+        def prefetch(self, specs):
+            self._drain()
+            counts: dict[tuple, int] = {}
+            for s in specs:
+                s = beaver._canon_spec(s)
+                counts[s] = counts.get(s, 0) + 1
+            for spec, n in counts.items():
+                have = self._in_flight(spec)
+                if have < n:
+                    self.generate(spec, n - have)
+
+        def reserve(self, specs, steps: int = 1):
+            steps = max(int(steps), 1)
+            self._drain()
+            counts: dict[tuple, int] = {}
+            for s in specs:
+                s = beaver._canon_spec(s)
+                counts[s] = counts.get(s, 0) + 1
+            for spec, c in counts.items():
+                # the watermark/quantum pair drives take()'s top-up;
+                # counting in-flight material bounds outstanding
+                # requests to one refill quantum per spec (backpressure)
+                self._watermark[spec] = c
+                self._quantum[spec] = steps * c
+                if self._in_flight(spec) < c:
+                    self.generate(spec, steps * c)
+
+        def stock(self) -> dict:
+            self._drain()
+            out = super().stock()
+            out["pending"] = sum(self._pending.values())
+            out["degraded"] = self.degraded
+            out["dealer"] = self._client.stats()
+            return out
+
+        def close(self):
+            self._client.close()
+
+    return AsyncTriplePool()
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="CENTAUR dealer service (separate-process offline "
+                    "phase)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the dealer service (child process mode)")
+    args = ap.parse_args(argv)
+    if args.serve:
+        serve()
+    else:
+        ap.print_help()
+
+
+if __name__ == "__main__":
+    main()

@@ -263,6 +263,20 @@ def on_record(protocol: str, rounds: int, bits: int, online: bool = True):
             f"{'online' if online else 'offline'})")
 
 
+def on_transport(protocol: str) -> bool:
+    """Seam hook inside a REAL (byte-moving) transport.  Returns True
+    when a ``transport_drop`` plan fires, in which case the transport
+    performs a GENUINE drop — the peer swallows the message and the
+    sender's receive times out on the wire — instead of the synthetic
+    raise of :func:`on_record`.  Arms the same ``"record"`` op with the
+    same site, so a ``transport_drop`` plan written against the ledger
+    seam targets the socket seam without changes (only the failure
+    mechanism differs: a real timeout instead of an immediate raise)."""
+    if not _INJECTORS:
+        return False
+    return bool(_INJECTORS[-1]._arm("record", protocol))
+
+
 def on_take(spec):
     """Seam hook on TriplePool.take (spec already canonical)."""
     if not _INJECTORS:

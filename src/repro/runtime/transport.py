@@ -1,0 +1,289 @@
+"""Transport runtime: the comm seam as a real byte-moving layer.
+
+Every protocol open is *billed* through `core.comm`; this module is
+where it is *transported*.  A `Transport` carries two seams:
+
+* ``exchange(protocol, arrays)`` — the payload seam of an EAGER open
+  (`beaver._open_masked`, `sharing.reveal`; `open_weight` / `open_rows`
+  route through the former).  The caller hands over the share that the
+  other party must receive; a real transport serializes it, moves the
+  bytes, and the caller reconstructs from the bytes that actually
+  arrived — the wire is the source of truth.
+* ``push(protocol, rounds, bits)`` — the payload seam of a REPLAYED
+  schedule event (`comm.replay`, the jit path).  A compiled program
+  owns its values, so the transport moves a size-faithful dummy buffer
+  and injects the event's round latency.  The captured schedules are
+  proven data-independent (tests/test_ledger_independence.py), so byte
+  counts and round counts leak nothing beyond the public shapes — the
+  timing argument of DESIGN.md §14.
+
+`LoopbackTransport` (the default) is a pure pass-through with counters:
+bit-exact with the pre-transport behavior, zero wire.  `SocketTransport`
+spawns `transport_peer.py` as a separate process and moves real bytes
+over TCP with injectable RTT / bandwidth shaping, and consults
+`faults.on_transport` so an injected `transport_drop` becomes a GENUINE
+wire timeout (the peer swallows the frame; the sender's recv expires).
+
+Fidelity note — eager vs replay: an eager matmul performs its two opens
+as two sequential socket round trips where the 2-party protocol bills
+ONE concurrent round; replayed schedules shape latency from the billed
+rounds exactly.  Eager + socket is the byte-correctness path; jit +
+socket (the serving engine) is the measured-latency path.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import socket as socketlib
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.runtime import faults
+from repro.runtime.transport_peer import ACK, DROP, ECHO, EXIT, HDR, _CHUNK
+
+_PEER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "transport_peer.py")
+
+
+class Transport:
+    """Interface consumed by `core.comm` (ambient via `comm.transported`).
+
+    ``real`` distinguishes byte-moving transports: `comm.record` /
+    `comm.replay` route fault injection to the transport seam when it is
+    True and keep the legacy synthetic `faults.on_record` raise when it
+    is False, so loopback runs are bit-exact with history."""
+
+    kind = "none"
+    real = False
+
+    def exchange(self, protocol, arrays, reply=True):
+        """Move `arrays` (one party's shares) across the wire; return
+        the tuple as received by the other side.  With ``reply=False``
+        the payload crosses one way (a reveal) and the caller keeps its
+        local values."""
+        raise NotImplementedError
+
+    def push(self, protocol, rounds, bits):
+        """Execute one replayed schedule event on the wire."""
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "real": self.real}
+
+    def close(self):
+        pass
+
+
+class LoopbackTransport(Transport):
+    """In-process identity transport: values pass through untouched
+    (the SPMD simulation already holds both parties' shares), only the
+    counters move.  Default for every engine; bit-exact with the
+    pre-transport runtime by construction."""
+
+    kind = "loopback"
+    real = False
+
+    def __init__(self):
+        self.messages = 0
+        self.bytes_moved = 0
+        self.rounds = 0
+
+    def exchange(self, protocol, arrays, reply=True):
+        if any(faults._is_tracer(a) for a in arrays):
+            return arrays
+        self.messages += 1
+        self.rounds += 1
+        n = sum(int(getattr(a, "nbytes", 0)) for a in arrays)
+        self.bytes_moved += n * (2 if reply else 1)
+        return arrays
+
+    def push(self, protocol, rounds, bits):
+        self.messages += 1
+        self.rounds += int(rounds)
+        self.bytes_moved += int(bits) // 8
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "real": False,
+                "messages": self.messages, "rounds": self.rounds,
+                "bytes_moved": self.bytes_moved}
+
+
+class SocketTransport(Transport):
+    """Cross-process transport: one spawned echo peer per instance.
+
+    The peer plays the mirror party: every exchanged share is answered
+    by the equal-sized share crossing the other direction (TCP echo), so
+    total wire bytes equal the billed bits exactly, and reconstruction
+    uses the received buffer.  ``rtt_ms`` / ``bandwidth_bps`` shape the
+    peer's reply delay — latency is injected ON the wire, where a real
+    sender blocks."""
+
+    kind = "socket"
+    real = True
+
+    def __init__(self, rtt_ms: float = 0.0, bandwidth_bps: float | None = None,
+                 timeout_s: float = 30.0, drop_timeout_s: float = 0.25):
+        self.rtt_s = float(rtt_ms) / 1e3
+        self.bandwidth_bps = bandwidth_bps
+        self.timeout_s = timeout_s
+        self.drop_timeout_s = drop_timeout_s
+        self.messages = 0
+        self.bytes_moved = 0
+        self.rounds = 0
+        self.drops = 0
+        self.wire_s = 0.0
+        self._lock = threading.RLock()
+        self._closed = False
+        self._proc = subprocess.Popen(
+            [sys.executable, _PEER],
+            stdout=subprocess.PIPE, text=True)
+        line = self._proc.stdout.readline()
+        if not line.startswith("TRANSPORT_PORT "):
+            raise faults.TransportFault(
+                f"transport peer failed to start (got {line!r})")
+        self._sock = socketlib.create_connection(
+            ("127.0.0.1", int(line.split()[1])), timeout=timeout_s)
+        self._sock.setsockopt(socketlib.IPPROTO_TCP,
+                              socketlib.TCP_NODELAY, 1)
+        atexit.register(self.close)
+
+    # ---- framing -----------------------------------------------------------
+    def _recv_exact(self, n: int, timeout: float, what: str) -> bytes:
+        self._sock.settimeout(timeout)
+        buf = bytearray()
+        try:
+            while len(buf) < n:
+                chunk = self._sock.recv(min(_CHUNK, n - len(buf)))
+                if not chunk:
+                    raise faults.TransportFault(
+                        f"transport peer closed the connection ({what})")
+                buf += chunk
+        except socketlib.timeout as err:
+            raise faults.TransportFault(
+                f"transport timeout after {timeout}s waiting for {what}"
+            ) from err
+        return bytes(buf)
+
+    def _round_trip(self, op: int, delay: float, payload: bytes,
+                    what: str) -> bytes:
+        """One send + one reply; on DROP the reply never comes and the
+        bounded receive expires — a genuine wire timeout."""
+        t0 = time.perf_counter()
+        try:
+            self._sock.sendall(HDR.pack(op, delay, len(payload)) + payload)
+            timeout = self.drop_timeout_s if op == DROP else self.timeout_s
+            hdr = self._recv_exact(HDR.size, timeout, what)
+            _, _, n = HDR.unpack(hdr)
+            return self._recv_exact(n, self.timeout_s, what) if n else b""
+        except OSError as err:
+            raise faults.TransportFault(f"transport send failed: {err}") \
+                from err
+        finally:
+            self.wire_s += time.perf_counter() - t0
+
+    def _delay(self, wire_bits: int, rounds: int = 1) -> float:
+        d = rounds * self.rtt_s
+        if self.bandwidth_bps:
+            d += wire_bits / self.bandwidth_bps
+        return d
+
+    # ---- Transport interface -----------------------------------------------
+    def exchange(self, protocol, arrays, reply=True):
+        if any(faults._is_tracer(a) for a in arrays):
+            return arrays
+        bufs = [np.asarray(a) for a in arrays]
+        payload = b"".join(b.tobytes() for b in bufs)
+        nbytes = len(payload) * (2 if reply else 1)
+        with self._lock:
+            drop = faults.on_transport(protocol)
+            self.messages += 1
+            self.rounds += 1
+            if drop:
+                self.drops += 1
+                self._round_trip(DROP, 0.0, payload,
+                                 f"{protocol} exchange (dropped)")
+                raise faults.TransportFault(   # unreachable safety net:
+                    f"dropped {protocol} produced a reply")
+            echoed = self._round_trip(ECHO if reply else ACK,
+                                      self._delay(nbytes * 8), payload,
+                                      f"{protocol} exchange")
+            self.bytes_moved += nbytes
+        if not reply:
+            return arrays
+        # reconstruct from the bytes that actually arrived
+        import jax.numpy as jnp
+        out, off = [], 0
+        for b in bufs:
+            arr = np.frombuffer(echoed, dtype=b.dtype,
+                                count=b.size, offset=off).reshape(b.shape)
+            out.append(jnp.asarray(arr))
+            off += b.nbytes
+        return tuple(out)
+
+    def push(self, protocol, rounds, bits):
+        rounds, bits = int(rounds), int(bits)
+        half = bits // 16   # bytes each way: total wire == billed bits
+        with self._lock:
+            drop = faults.on_transport(protocol)
+            self.messages += 1
+            self.rounds += rounds
+            delay = self._delay(bits, rounds)
+            if drop:
+                self.drops += 1
+                self._round_trip(DROP, 0.0, bytes(half),
+                                 f"{protocol} replay (dropped)")
+                return
+            if half:
+                self._round_trip(ECHO, delay, bytes(half),
+                                 f"{protocol} replay")
+                self.bytes_moved += 2 * half
+            elif rounds or delay:
+                self._round_trip(ACK, delay, b"", f"{protocol} replay")
+
+    def stats(self) -> dict:
+        return {"kind": self.kind, "real": True,
+                "rtt_ms": self.rtt_s * 1e3,
+                "bandwidth_bps": self.bandwidth_bps,
+                "messages": self.messages, "rounds": self.rounds,
+                "bytes_moved": self.bytes_moved, "drops": self.drops,
+                "wire_s": round(self.wire_s, 6),
+                "peer_alive": self._proc.poll() is None}
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.sendall(HDR.pack(EXIT, 0.0, 0))
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        finally:
+            if self._proc.poll() is None:
+                try:
+                    self._proc.wait(timeout=2.0)
+                except subprocess.TimeoutExpired:
+                    self._proc.kill()
+            if self._proc.stdout is not None:
+                self._proc.stdout.close()
+
+
+def make_transport(spec, rtt_ms: float = 0.0,
+                   bandwidth_bps: float | None = None) -> Transport:
+    """Resolve an engine/CLI transport spec: None or "loopback" build a
+    fresh `LoopbackTransport`, "socket" a `SocketTransport` with the
+    given shaping, and a `Transport` instance passes through."""
+    if spec is None or spec == "loopback":
+        return LoopbackTransport()
+    if spec == "socket":
+        return SocketTransport(rtt_ms=rtt_ms, bandwidth_bps=bandwidth_bps)
+    if isinstance(spec, Transport):
+        return spec
+    raise faults.EngineConfigError(
+        f"unknown transport {spec!r}; one of ('loopback', 'socket') "
+        f"or a Transport instance")

@@ -1,0 +1,75 @@
+"""Echo peer for `runtime.transport.SocketTransport` — the other party.
+
+Run directly by file path (NOT ``-m``) so the child process imports
+nothing but the stdlib: no jax, no repro — startup is milliseconds, and
+the peer can never deadlock on the parent's compilation locks.  The
+parent spawns one peer per transport, reads ``TRANSPORT_PORT <n>`` from
+its stdout, connects, and speaks the frame protocol below.
+
+Frame = 17-byte header ``<BdQ`` (op, reply-delay seconds, payload
+length) + payload bytes.  Ops:
+
+* ``ECHO`` — sleep ``delay`` then send the payload back (the mirror
+  party's equal-sized share crossing the other direction; the delay is
+  the injected RTT + bandwidth model applied on the wire, where a
+  sender actually blocks).
+* ``ACK``  — sleep ``delay`` then send an empty frame (a round with no
+  payload, e.g. a replayed round marker).
+* ``DROP`` — swallow the frame and send NOTHING.  The sender's receive
+  times out: an injected `transport_drop` becomes a genuine wire
+  timeout.  The stream stays framed — the next message proceeds.
+* ``EXIT`` — close the connection and exit.
+"""
+import socket
+import struct
+import sys
+import time
+
+HDR = struct.Struct("<BdQ")
+ECHO, ACK, DROP, EXIT = 1, 2, 3, 4
+_CHUNK = 1 << 20
+
+
+def recv_exact(conn, n):
+    """Read exactly n bytes or return None on EOF."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = conn.recv(min(_CHUNK, n - len(buf)))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def serve(announce=None):
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    print(f"TRANSPORT_PORT {srv.getsockname()[1]}",
+          flush=True, file=announce or sys.stdout)
+    conn, _ = srv.accept()
+    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    try:
+        while True:
+            hdr = recv_exact(conn, HDR.size)
+            if hdr is None:
+                return
+            op, delay, n = HDR.unpack(hdr)
+            payload = recv_exact(conn, n) if n else b""
+            if payload is None or op == EXIT:
+                return
+            if op == DROP:
+                continue
+            if delay > 0:
+                time.sleep(delay)
+            if op == ECHO:
+                conn.sendall(HDR.pack(ECHO, 0.0, len(payload)) + payload)
+            elif op == ACK:
+                conn.sendall(HDR.pack(ACK, 0.0, 0))
+    finally:
+        conn.close()
+        srv.close()
+
+
+if __name__ == "__main__":
+    serve()

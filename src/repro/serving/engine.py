@@ -325,10 +325,14 @@ class PrivateServingEngine(RequestQueue):
                  batch_admission: bool = True, on_token=None,
                  integrity: str = "off", max_retries: int = 2,
                  retry_backoff: int = 1, preemption=None,
-                 heartbeat_timeout: float = 60.0):
+                 heartbeat_timeout: float = 60.0,
+                 transport="loopback", rtt_ms: float = 0.0,
+                 bandwidth_bps: float | None = None,
+                 dealer_proc: bool = False):
         from repro.core import comm as _comm
         from repro.core import private_model as _pm
         from repro.core.suites import masking as _masking
+        from repro.runtime import transport as _transport
         if cfg.family != "dense" or cfg.use_mla:
             raise faults.EngineConfigError(
                 "private serving covers the dense KV-cache decode path")
@@ -405,11 +409,26 @@ class PrivateServingEngine(RequestQueue):
         self.page_size = page_size if self.paged else None
         self._comm = _comm
         self._pmod = _pm
+        # ---- transport runtime (DESIGN.md §14) ------------------------------
+        #: the comm seam's byte mover: loopback (default, bit-exact
+        #: with the pre-transport runtime) or a real cross-process
+        #: socket with rtt/bandwidth shaping.  Every protocol block the
+        #: engine runs is wrapped in `comm.transported(self.transport)`.
+        self.transport = _transport.make_transport(
+            transport, rtt_ms=rtt_ms, bandwidth_bps=bandwidth_bps)
+        self._dealer_client = None
+        dealer_factory = None
+        if dealer_proc:
+            from repro.runtime import dealer_service as _ds
+            self._dealer_client = _ds.DealerClient.spawn()
+            dealer_factory = (lambda k, _c=self._dealer_client:
+                              _ds.make_async_pool(k, _c))
         # one-time weight-share opens (DESIGN.md §12) happen at build:
         # bill them to the engine lifetime, not to any request
-        with _comm.ledger() as boot:
-            self.pm = _pm.build_private_model(cfg, params, key,
-                                              mode=mode, use_pool=True)
+        with _comm.ledger() as boot, _comm.transported(self.transport):
+            self.pm = _pm.build_private_model(
+                cfg, params, key, mode=mode, use_pool=True,
+                dealer_factory=dealer_factory)
         #: bits of the once-per-lifetime `W - B_w` weight opens
         #: (smpc-family modes; 0 for centaur's plaintext-permuted
         #: weights).  Constant in tokens served by construction.
@@ -524,10 +543,20 @@ class PrivateServingEngine(RequestQueue):
                 "decode_ticks": self.decode_ticks}
 
     # ---- fault bookkeeping --------------------------------------------------
+    def _dealer_alive(self) -> bool:
+        """Real dealer-process liveness when one exists (dealer_proc):
+        the AsyncTriplePool exposes `dealer_alive()` — False the moment
+        the process dies or its stream EOFs, so the heartbeat monitor
+        genuinely misses beats on a kill.  In-process pools have no
+        process to lose; their dealer beat tracks protocol progress as
+        before."""
+        alive = getattr(self.pm.dealer, "dealer_alive", None)
+        return True if alive is None else bool(alive())
+
     def _beat(self, dealer: bool = True):
         self.heartbeats.beat("p0")
         self.heartbeats.beat("p1")
-        if dealer:
+        if dealer and self._dealer_alive():
             self.heartbeats.beat("dealer")
 
     def _note_fault(self, err: Exception, phase: str, rid,
@@ -780,7 +809,8 @@ class PrivateServingEngine(RequestQueue):
                 f"({self.alloc.free_count} pages free)")
         rows = covered * P
         C = self.chunk_size
-        with self._comm.ledger() as led:
+        with self._comm.ledger() as led, \
+                self._comm.transported(self.transport):
             state = self._pmod.init_chunk_state(self.pm, 1, self.max_len)
             lens = jnp.asarray([rows], jnp.int32)
             for ci in range(rows // C):      # P % C == 0: exact chunks
@@ -988,6 +1018,10 @@ class PrivateServingEngine(RequestQueue):
         fault detected at the logits seam (NaN / envelope) rolls back
         ONLY that slot's cache rows; the slot retries the same position
         next tick (other slots commit and advance normally)."""
+        with self._comm.transported(self.transport):
+            return self._step()
+
+    def _step(self) -> bool:
         if self.preemption is not None and self.preemption.should_stop():
             self.draining = True
         self.ticks += 1
@@ -1168,6 +1202,7 @@ class PrivateServingEngine(RequestQueue):
             "slots": {"total": self.max_slots,
                       "active": sum(s is not None for s in self.slots)},
             "weight_open_bits": self.weight_open_bits,
+            "transport": self.transport.stats(),
             "queue_depth": len(self.queue),
             "quarantined": [r.rid for r in self.quarantined],
             "failed": [r.rid for r in self.failed],
@@ -1185,3 +1220,21 @@ class PrivateServingEngine(RequestQueue):
                                 prefix_hits=self.prefix_hits,
                                 prefix_bits=self.prefix_bits)
         return out
+
+    def close(self):
+        """Release runtime processes: the transport peer and (when
+        dealer_proc) the dealer service.  Idempotent; loopback engines
+        have nothing to release."""
+        t = getattr(self, "transport", None)
+        if t is not None:
+            t.close()
+        c = getattr(self, "_dealer_client", None)
+        if c is not None:
+            c.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -197,6 +197,39 @@ def test_weight_open_ledger_is_data_independent(params, mode):
         f"{mode}: serving re-billed a persistent weight open"
 
 
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_engine_ledger_is_data_independent_over_real_transport(params,
+                                                               mode):
+    """DESIGN.md §14: moving the opens over a real socket (payload
+    bytes on a TCP wire, peer process echoing shares back) must not
+    change WHAT is billed — the online ledger stays bit-identical to
+    loopback and stays data-independent across RUNS.  The transport is
+    wire metadata only; if billing diverged here, the measured-RTT
+    numbers would stop being evidence about the billed schedule."""
+    def engine_events(key, prompt, transport):
+        eng = PrivateServingEngine(GPT2_TINY, params, key, mode=mode,
+                                   max_slots=2, max_len=MAXLEN,
+                                   decode_jit=False,
+                                   transport=transport)
+        try:
+            eng.submit(prompt, max_new_tokens=2)
+            with comm.ledger() as led:
+                eng.run_to_completion()
+        finally:
+            eng.close()
+        return _events(led)
+
+    socket_runs = []
+    for key, prompt in RUNS:
+        loop = engine_events(key, prompt, "loopback")
+        sock = engine_events(key, prompt, "socket")
+        assert loop == sock, \
+            f"{mode}: the socket transport changed the billed ledger"
+        socket_runs.append(sock)
+    assert socket_runs[0] == socket_runs[1], \
+        f"{mode}: real-transport ledger depends on private data"
+
+
 @pytest.mark.parametrize("mode", SERVABLE + ("permute",))
 def test_forward_ledger_is_data_independent(params, mode):
     """Same contract for the full-sequence forward of every mode

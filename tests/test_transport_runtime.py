@@ -1,0 +1,365 @@
+"""Transport runtime (DESIGN.md §14): the comm seam as a byte mover.
+
+Parity contract: the default `LoopbackTransport` is bit-exact with the
+pre-transport runtime, and the cross-process `SocketTransport` serves
+end-to-end with IDENTICAL tokens and bit-exact online ledgers on every
+servable mode and serving path — the wire carries the same shares the
+SPMD simulation reconstructs, so moving real bytes changes nothing but
+wall-clock.  The dealer-process pool (`dealer_proc=True`) is likewise
+token- and ledger-identical: the service generates through the same
+`beaver.gen_batch` on the same shipped PRG keys, and the async request
+stream is deterministic.  Crash paths are exercised for real: a killed
+dealer process surfaces `PoolExhausted` (§11), misses heartbeats, and
+the engine survives on the degraded in-process pool; an injected
+`transport_drop` over the socket is a genuine wire timeout.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import GPT2_TINY
+from repro.core import beaver, comm
+from repro.models.registry import get_api
+from repro.runtime import faults
+from repro.runtime.dealer_service import DealerClient, make_async_pool
+from repro.runtime.transport import (LoopbackTransport, SocketTransport,
+                                     make_transport)
+from repro.serving.engine import PrivateServingEngine
+
+SERVABLE = ("centaur", "smpc", "mpcformer", "secformer")
+MAXLEN = 12
+PROMPT = [1, 2, 3, 4, 5]
+
+# exact / chunked / paged serving paths (decode runs in all of them)
+PATHS = {
+    "exact": {},
+    "chunked": dict(chunk_size=4),
+    "paged": dict(chunk_size=4, paged=True, page_size=4),
+}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return get_api(GPT2_TINY).init_params(GPT2_TINY, jax.random.key(3))
+
+
+def _events(led, online_only=True):
+    return [(e.protocol, e.rounds, e.bits, e.tag, e.online)
+            for e in led.events if e.online or not online_only]
+
+
+def _serve(params, mode, *, max_new=2, decode_jit=False, **kw):
+    eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(0),
+                               mode=mode, max_slots=2, max_len=MAXLEN,
+                               decode_jit=decode_jit, **kw)
+    rid = eng.submit(list(PROMPT), max_new_tokens=max_new)
+    with comm.ledger() as led:
+        outs, _ = eng.run_to_completion()
+    health = eng.health()
+    eng.close()
+    return outs[rid], _events(led), health
+
+
+# =============================================================================
+# transport unit seams
+# =============================================================================
+
+def test_loopback_exchange_is_identity_and_counts():
+    t = LoopbackTransport()
+    a = jnp.arange(6, dtype=jnp.int64).reshape(2, 3)
+    out = t.exchange("matmul", (a,))
+    assert out[0] is a
+    t.exchange("reveal", (a,), reply=False)
+    t.push("matmul", rounds=1, bits=128)
+    s = t.stats()
+    assert s["kind"] == "loopback" and not s["real"]
+    assert s["messages"] == 3
+    # echo counts both directions; one-way counts one; push bits//8
+    assert s["bytes_moved"] == 2 * a.nbytes + a.nbytes + 16
+
+
+def test_socket_exchange_roundtrip_bit_exact_and_wire_accounting():
+    t = SocketTransport()
+    try:
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-2**62, 2**62, (3, 4)), jnp.int64)
+        b = jnp.asarray(rng.integers(-2**62, 2**62, (7,)), jnp.int64)
+        ra, rb = t.exchange("matmul", (a, b))
+        # the values came back off the wire, bit-for-bit
+        assert ra.dtype == a.dtype and rb.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(ra), np.asarray(a))
+        np.testing.assert_array_equal(np.asarray(rb), np.asarray(b))
+        assert t.bytes_moved == 2 * (a.nbytes + b.nbytes)
+        before = t.bytes_moved
+        t.exchange("reveal", (a,), reply=False)      # one-way
+        assert t.bytes_moved == before + a.nbytes
+        t.push("softmax", rounds=2, bits=256)        # replayed event
+        assert t.bytes_moved == before + a.nbytes + 2 * (256 // 16)
+        assert t.stats()["peer_alive"]
+    finally:
+        t.close()
+    assert not t.stats()["peer_alive"]
+
+
+def test_make_transport_resolution():
+    assert isinstance(make_transport(None), LoopbackTransport)
+    assert isinstance(make_transport("loopback"), LoopbackTransport)
+    t = LoopbackTransport()
+    assert make_transport(t) is t
+    with pytest.raises(faults.EngineConfigError):
+        make_transport("carrier-pigeon")
+
+
+def test_eager_open_values_and_ledger_survive_the_wire():
+    """One eager matmul + reveal: values and billed events identical
+    across no transport / loopback / socket, and the socket's wire
+    bytes equal the billed bits exactly."""
+    from repro.core import sharing
+
+    rng = np.random.default_rng(1)
+    k = jax.random.key(0)
+    ka, kb, kd = jax.random.split(k, 3)
+    x = sharing.share_float(ka, rng.standard_normal((4, 6)))
+    y = sharing.share_float(kb, rng.standard_normal((6, 3)))
+
+    results = {}
+    for name, t in (("none", None), ("loopback", LoopbackTransport()),
+                    ("socket", SocketTransport())):
+        dealer = beaver.TripleDealer(kd)      # fresh: same triples
+        with comm.transported(t), comm.ledger() as led:
+            z = beaver.matmul(x, y, dealer)
+            v = sharing.reveal(z)
+        results[name] = (np.asarray(v), _events(led))
+        if t is not None:
+            t.close()
+    for name in ("loopback", "socket"):
+        np.testing.assert_array_equal(results[name][0],
+                                      results["none"][0])
+        assert results[name][1] == results["none"][1], name
+
+
+# =============================================================================
+# engine parity: loopback (default) vs socket, every mode x path
+# =============================================================================
+
+@pytest.mark.parametrize("mode", SERVABLE)
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_socket_engine_parity(params, mode, path):
+    """Cross-process serving is bit-exact with the loopback default:
+    identical tokens AND identical online ledgers (eager decode — the
+    per-open exchange path)."""
+    kw = PATHS[path]
+    base_toks, base_ev, base_h = _serve(params, mode, **kw)
+    sock_toks, sock_ev, sock_h = _serve(params, mode,
+                                        transport="socket", **kw)
+    assert sock_toks == base_toks, \
+        f"{mode}/{path}: socket transport changed the decoded tokens"
+    assert sock_ev == base_ev, \
+        f"{mode}/{path}: socket transport changed the online ledger"
+    assert base_h["transport"]["kind"] == "loopback"
+    ts = sock_h["transport"]
+    assert ts["kind"] == "socket" and ts["real"]
+    assert ts["bytes_moved"] > 0 and ts["drops"] == 0
+
+
+def test_socket_engine_parity_jit_replay(params):
+    """The jit path (captured schedules, `comm.replay` -> push) over
+    the socket: tokens identical to the loopback jit engine, and the
+    replayed events move size-faithful bytes on the wire."""
+    base_toks, base_ev, _ = _serve(params, "centaur", decode_jit=True)
+    sock_toks, sock_ev, h = _serve(params, "centaur", decode_jit=True,
+                                   transport="socket")
+    assert sock_toks == base_toks
+    assert sock_ev == base_ev
+    assert h["transport"]["bytes_moved"] > 0
+
+
+def test_socket_rtt_shaping_blocks_on_the_wire(params):
+    """Injected RTT is realized as wall-clock spent inside the
+    transport: wire_s >= rounds * rtt."""
+    eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(0),
+                               mode="centaur", max_slots=1,
+                               max_len=MAXLEN, decode_jit=True,
+                               transport="socket", rtt_ms=2.0)
+    eng.submit(list(PROMPT), max_new_tokens=2)
+    eng.run_to_completion()
+    ts = eng.transport.stats()
+    eng.close()
+    assert ts["rounds"] > 0
+    assert ts["wire_s"] >= ts["rounds"] * 0.002
+
+
+# =============================================================================
+# dealer process
+# =============================================================================
+
+def test_dealer_service_gen_batch_roundtrip_bit_exact():
+    """The service generates through the same `beaver.gen_batch` on
+    the shipped key: remote triples are bit-identical to local ones."""
+    spec = beaver._canon_spec(("matmul", (4, 6), (6, 3)))
+    key = jax.random.key(7)
+    local = beaver.gen_batch(spec, key, 3)
+    client = DealerClient.spawn()
+    try:
+        client.request(list(spec), jax.random.key_data(key), 3)
+        deadline = time.monotonic() + 30.0
+        got = []
+        while not got and time.monotonic() < deadline:
+            client.wait(0.1)
+            got = client.pop_delivered()
+        assert got, "dealer never delivered"
+        rspec, remote = got[0]
+        assert rspec == spec and len(remote) == 3
+        for lt, rt in zip(local, remote):
+            for ll, rl in zip(jax.tree.leaves(lt), jax.tree.leaves(rt)):
+                np.testing.assert_array_equal(np.asarray(ll),
+                                              np.asarray(rl))
+    finally:
+        client.close()
+
+
+@pytest.mark.parametrize("mode", ("centaur", "smpc"))
+def test_dealer_proc_engine_parity(params, mode):
+    """dealer_proc=True serves token- and ledger-identically to the
+    in-process pool: the async pool draws the same PRG stream and the
+    service's generation is bit-exact."""
+    base_toks, base_ev, _ = _serve(params, mode)
+    dp_toks, dp_ev, h = _serve(params, mode, dealer_proc=True)
+    assert dp_toks == base_toks, \
+        f"{mode}: dealer process changed the decoded tokens"
+    assert dp_ev == base_ev, \
+        f"{mode}: dealer process changed the online ledger"
+    pool = h["pool"]
+    assert pool["dealer"]["alive"] and not pool["degraded"]
+    assert pool["dealer"]["deliveries"] > 0
+    assert h["parties"]["dealer"] == "alive"
+
+
+def test_dealer_crash_mid_stream_quarantine_and_survival(params):
+    """Kill the dealer process mid-stream: the in-flight take drains
+    the pool and surfaces `PoolExhausted` (§11 — the engine retries /
+    quarantines per policy), the dealer's heartbeat goes dead for
+    real, and the engine survives to serve NEW traffic on the
+    degraded in-process pool with correct tokens."""
+    base_toks, _, _ = _serve(params, "centaur")
+    eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(0),
+                               mode="centaur", max_slots=2,
+                               max_len=MAXLEN, decode_jit=False,
+                               dealer_proc=True,
+                               heartbeat_timeout=0.05)
+    try:
+        r0 = eng.submit(list(PROMPT), max_new_tokens=2)
+        outs, _ = eng.run_to_completion()
+        assert outs[r0] == base_toks
+        # crash the producer between requests; the next take discovers
+        # the dead stream (any prefetched stock drains first)
+        eng.pm.dealer.dealer_client().kill()
+        r1 = eng.submit(list(PROMPT), max_new_tokens=2)
+        outs, stats = eng.run_to_completion()
+        time.sleep(0.06)
+        h = eng.health()
+        assert h["parties"]["dealer"] == "dead", \
+            "killed dealer process still heartbeating"
+        assert h["pool"]["degraded"]
+        # §11: the faulted request retried (or quarantined) and the
+        # engine survived — the degraded pool serves the same tokens
+        assert outs.get(r1) == base_toks
+        assert stats[r1]["status"] in ("ok", "retried")
+        if stats[r1]["retries"]:
+            assert any(f.error == "PoolExhausted"
+                       for f in eng.fault_log)
+        # fresh traffic on the degraded pool
+        r2 = eng.submit(list(PROMPT), max_new_tokens=2)
+        outs, _ = eng.run_to_completion()
+        assert outs[r2] == base_toks
+        assert all(s is None for s in eng.slots)
+    finally:
+        eng.close()
+
+
+def test_injected_dealer_fault_kills_real_process(params):
+    """An injected dealer_fault against a real producer is a GENUINE
+    crash: the process is killed, the engine retries on the degraded
+    pool, and serving completes."""
+    base_toks, _, _ = _serve(params, "centaur")
+    eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(0),
+                               mode="centaur", max_slots=1,
+                               max_len=MAXLEN, decode_jit=False,
+                               dealer_proc=True)
+    try:
+        client = eng.pm.dealer.dealer_client()
+        inj = faults.FaultInjector(
+            faults.FaultPlan("dealer_fault", phase="prefill"))
+        rid = eng.submit(list(PROMPT), max_new_tokens=2)
+        with faults.inject(inj):
+            outs, stats = eng.run_to_completion()
+        assert inj.fired, "dealer_fault never fired"
+        assert not client.alive(), \
+            "injected dealer fault left the real process running"
+        assert eng.pm.dealer.degraded
+        assert outs[rid] == base_toks
+        assert stats[rid]["status"] == "retried"
+    finally:
+        eng.close()
+
+
+# =============================================================================
+# genuine transport faults
+# =============================================================================
+
+def test_transport_drop_is_a_real_wire_timeout(params):
+    """transport_drop over the socket: the peer swallows the frame,
+    the sender's bounded recv expires — a genuine TransportFault from
+    the wire, driving the §11 retry path; the engine survives."""
+    base_toks, _, _ = _serve(params, "centaur", max_new=3)
+    eng = PrivateServingEngine(GPT2_TINY, params, jax.random.key(0),
+                               mode="centaur", max_slots=1,
+                               max_len=MAXLEN, decode_jit=False,
+                               transport="socket")
+    try:
+        inj = faults.FaultInjector(
+            faults.FaultPlan("transport_drop", phase="decode", index=2))
+        rid = eng.submit(list(PROMPT), max_new_tokens=3)
+        with faults.inject(inj):
+            outs, stats = eng.run_to_completion()
+        assert inj.fired, "transport_drop never fired"
+        assert eng.transport.stats()["drops"] == len(inj.fired)
+        assert eng.transport.stats()["peer_alive"]
+        assert any(f.error == "TransportFault" for f in eng.fault_log)
+        assert outs[rid] == base_toks      # retried to the same tokens
+        assert all(s is None for s in eng.slots)
+    finally:
+        eng.close()
+
+
+# =============================================================================
+# pool telemetry (stock / health)
+# =============================================================================
+
+def test_pool_stock_watermarks_and_prefetch_counters():
+    pool = beaver.TriplePool(jax.random.key(0), batch=4)
+    spec = ("matmul", (2, 3), (3, 2))
+    pool.reserve([spec, spec], steps=2)     # stock 4 of them
+    for _ in range(5):                      # 4 hits + 1 miss-refill
+        pool.take(spec)
+    st = pool.stock()
+    assert st["prefetch"]["hits"] == 4
+    assert st["prefetch"]["misses"] == 1
+    name, per = next(iter(st["per_spec"].items()))
+    assert name.startswith("matmul[")
+    assert per["taken"] == 5
+    assert per["low_water"] == 0
+    assert per["high_water"] >= 4
+    # legacy keys survive (tests/launchers read them)
+    assert set(st["taken"]) == {"matmul"}
+
+
+def test_engine_health_surfaces_transport_and_prefetch(params):
+    _, _, h = _serve(params, "centaur", chunk_size=4)
+    assert "transport" in h and h["transport"]["kind"] == "loopback"
+    pf = h["pool"]["prefetch"]
+    assert pf["hits"] + pf["misses"] > 0
+    assert "per_spec" in h["pool"]
